@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + the CSV contract
+(`name,us_per_call,derived`)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, *, repeats: int = 3) -> tuple[float, object]:
+    """Returns (us_per_call, last_result)."""
+    out = fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return us, out
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def pow2_range(lo: int, hi: int) -> list[int]:
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out

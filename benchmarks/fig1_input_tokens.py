@@ -1,0 +1,53 @@
+"""Paper Figure 1: runtime / throughput / energy-per-token vs INPUT tokens
+(8..2048, output fixed at 32, batch 32, KV cache disabled — §5.1.1), per
+model, on the paper's A100+EPYC node model."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, pow2_range, timed
+from repro.configs import PAPER_ZOO
+from repro.energy import AnalyticLLMSimulator
+
+FIXED_OUT = 32
+
+
+def run(models=None) -> dict:
+    models = models or sorted(PAPER_ZOO)
+    curves: dict = {}
+    for name in models:
+        sim = AnalyticLLMSimulator(PAPER_ZOO[name], kv_cache=False, seed=1)
+        pts = []
+        for tin in pow2_range(8, 2048):
+            us, (e, r) = timed(lambda s=sim, t=tin: s.measure(t, FIXED_OUT),
+                               repeats=1)
+            tokens = (tin + FIXED_OUT) * sim.batch
+            pts.append({
+                "tau_in": tin, "runtime_s": r, "energy_j": e,
+                "throughput_tok_s": tokens / r,
+                "energy_per_token_j": e / tokens,
+                "us_per_call": us,
+            })
+        curves[name] = pts
+        first, last = pts[0], pts[-1]
+        emit(f"fig1.{name}", sum(p["us_per_call"] for p in pts) / len(pts),
+             f"runtime {first['runtime_s']:.2f}->{last['runtime_s']:.2f}s "
+             f"J/tok {first['energy_per_token_j']:.3f}->{last['energy_per_token_j']:.3f}")
+    return curves
+
+
+def main() -> None:
+    curves = run()
+    # paper claims: runtime increases with tau_in; Mixtral (SMoE) is more
+    # energy-efficient than the dense large models at large inputs
+    for name, pts in curves.items():
+        assert pts[-1]["runtime_s"] > pts[0]["runtime_s"], name
+    mix = curves["mixtral-8x7b"][-1]["energy_per_token_j"]
+    l70 = curves["llama2-70b"][-1]["energy_per_token_j"]
+    f40 = curves["falcon-40b"][-1]["energy_per_token_j"]
+    emit("fig1.smoe_efficiency", 0.0,
+         f"mixtral {mix:.3f} < llama2-70b {l70:.3f} and falcon-40b {f40:.3f} J/tok: "
+         f"{mix < l70 and mix < f40}")
+
+
+if __name__ == "__main__":
+    main()

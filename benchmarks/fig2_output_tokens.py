@@ -1,0 +1,52 @@
+"""Paper Figure 2: runtime / throughput / energy-per-token vs OUTPUT tokens
+(8..4096, input fixed at 32, batch 32, KV cache disabled — §5.1.2)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, pow2_range, timed
+from repro.configs import PAPER_ZOO
+from repro.energy import AnalyticLLMSimulator
+
+FIXED_IN = 32
+
+
+def run(models=None) -> dict:
+    models = models or sorted(PAPER_ZOO)
+    curves: dict = {}
+    for name in models:
+        sim = AnalyticLLMSimulator(PAPER_ZOO[name], kv_cache=False, seed=2)
+        pts = []
+        for tout in pow2_range(8, 4096):
+            us, (e, r) = timed(lambda s=sim, t=tout: s.measure(FIXED_IN, t),
+                               repeats=1)
+            tokens = (FIXED_IN + tout) * sim.batch
+            pts.append({
+                "tau_out": tout, "runtime_s": r, "energy_j": e,
+                "throughput_tok_s": tokens / r,
+                "energy_per_token_j": e / tokens,
+                "us_per_call": us,
+            })
+        curves[name] = pts
+        first, last = pts[0], pts[-1]
+        emit(f"fig2.{name}", sum(p["us_per_call"] for p in pts) / len(pts),
+             f"runtime {first['runtime_s']:.2f}->{last['runtime_s']:.1f}s "
+             f"J/tok {first['energy_per_token_j']:.3f}->{last['energy_per_token_j']:.3f}")
+    return curves
+
+
+def main() -> None:
+    curves = run()
+    for name, pts in curves.items():
+        # steep runtime increase with tau_out; throughput decreases;
+        # energy/token increases (no KV cache -> superlinear recompute)
+        assert pts[-1]["runtime_s"] > pts[0]["runtime_s"] * 10, name
+        assert pts[-1]["throughput_tok_s"] < pts[0]["throughput_tok_s"], name
+        assert pts[-1]["energy_per_token_j"] > pts[0]["energy_per_token_j"], name
+    mix = curves["mixtral-8x7b"][-1]["energy_per_token_j"]
+    l70 = curves["llama2-70b"][-1]["energy_per_token_j"]
+    emit("fig2.smoe_efficiency", 0.0,
+         f"mixtral {mix:.3f} < llama2-70b {l70:.3f} J/tok at 4096 out: {mix < l70}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run campaign (deliverable g) + a real
+CPU-executed micro-benchmark of one reduced serve_step per arch family."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_records(mesh: str = "pod") -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def main() -> None:
+    recs = load_records("pod")
+    if not recs:
+        emit("roofline.missing", 0.0,
+             "no dry-run results — run python -m repro.launch.dryrun first")
+        return
+    for r in recs:
+        t = r["roofline"]
+        mem = r["memory_analysis"]
+        emit(f"roofline.{r['arch']}.{r['shape']}", r.get("t_compile_s", 0) * 1e6,
+             f"dom={t['dominant']} compute={t['compute_s']*1e3:.2f}ms "
+             f"memory={t['memory_s']*1e3:.2f}ms collective={t['collective_s']*1e3:.2f}ms "
+             f"useful_flops={t['useful_flops_ratio']:.2f} "
+             f"mem/dev={mem['peak_bytes_per_device_tpu']/1e9:.2f}GB")
+    doms = {}
+    for r in recs:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    emit("roofline.summary", 0.0,
+         f"{len(recs)} baselines, dominant terms: {doms}")
+
+    # real-execution micro-bench: one reduced decode step per family
+    from repro.configs import get_config
+    from repro.models import get_api
+    for arch in ("qwen3-1.7b", "mamba2-130m", "granite-moe-3b-a800m",
+                 "recurrentgemma-9b"):
+        cfg = get_config(arch + "-reduced")
+        api = get_api(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        cache = api.init_cache(cfg, 2, 64)
+        tok = jax.numpy.zeros((2,), jax.numpy.int32)
+        step = jax.jit(lambda p, c, t: api.decode_step(cfg, p, c, {"token": t}))
+        step(params, cache, tok)  # compile
+        us, _ = timed(lambda: jax.block_until_ready(step(params, cache, tok)),
+                      repeats=10)
+        emit(f"roofline.cpu_decode_step.{arch}", us, "reduced config, CPU")
+
+
+if __name__ == "__main__":
+    main()

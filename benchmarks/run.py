@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV lines (the repo contract)."""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig1_input_tokens,
+    fig2_output_tokens,
+    fig3_zeta_sweep,
+    roofline_bench,
+    table1_models,
+    table2_anova,
+    table3_ols,
+)
+
+SUITES = [
+    ("table1", table1_models),
+    ("fig1", fig1_input_tokens),
+    ("fig2", fig2_output_tokens),
+    ("table2", table2_anova),
+    ("table3", table3_ols),
+    ("fig3", fig3_zeta_sweep),
+    ("roofline", roofline_bench),
+]
+
+
+def main() -> int:
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in SUITES:
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"{name}.wall_s,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc(limit=4, file=sys.stderr)
+            print(f"{name}.wall_s,{(time.time() - t0) * 1e6:.0f},FAILED {type(e).__name__}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Paper Table 1: the hosted-LLM fleet — params, vRAM, minimum accelerator
+count (A100-40GB as in the paper, plus the v5e target), leaderboard A_K."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs import PAPER_ZOO, TABLE1
+from repro.energy import A100_40GB, TPU_V5E, min_accelerators
+from repro.models import get_api
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, cfg in sorted(PAPER_ZOO.items()):
+        api = get_api(cfg)
+        us, n_params = timed(lambda c=cfg, a=api: a.count_params(c))
+        pbytes = n_params * 2
+        row = {
+            "model": name,
+            "params_b": n_params / 1e9,
+            "vram_gb": pbytes / 1e9,
+            "n_a100": min_accelerators(pbytes, A100_40GB),
+            "n_v5e": min_accelerators(pbytes, TPU_V5E),
+            "paper_n_a100": TABLE1[name]["n_a100"],
+            "a_k": TABLE1[name]["a_k"],
+        }
+        rows.append(row)
+        emit(f"table1.{name}", us,
+             f"params={row['params_b']:.2f}B vram={row['vram_gb']:.1f}GB "
+             f"a100={row['n_a100']}(paper {row['paper_n_a100']}) "
+             f"v5e={row['n_v5e']} A_K={row['a_k']}")
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    match = sum(r["n_a100"] == r["paper_n_a100"] for r in rows)
+    emit("table1.match_rate", 0.0, f"{match}/{len(rows)} chip counts match paper")
+
+
+if __name__ == "__main__":
+    main()

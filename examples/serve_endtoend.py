@@ -1,0 +1,13 @@
+"""End-to-end serving driver (deliverable b): characterize a two-model
+fleet by REAL execution on this host, fit the paper's workload models,
+route a batched workload with the energy-aware router, and serve it through
+the batched inference engines with wall-clock energy metering.
+
+    PYTHONPATH=src python examples/serve_endtoend.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(["--fleet", "llama2-7b-reduced,llama2-70b-reduced",
+                           "--queries", "16", "--zeta", "0.5"]))

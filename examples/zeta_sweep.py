@@ -1,0 +1,34 @@
+"""Reproduce the paper's Figure 3 (the zeta trade-off curves) as an ASCII
+table: energy / runtime / accuracy vs zeta, with the constant baselines.
+
+    PYTHONPATH=src python examples/zeta_sweep.py
+"""
+
+import numpy as np
+
+from benchmarks.fig3_zeta_sweep import ZETAS, run
+
+
+def main():
+    profiles, queries, sweep, capped, baselines = run()
+    m = len(queries)
+    w = 46
+
+    def bar(v, vmax):
+        n = int(v / vmax * w)
+        return "#" * n
+
+    emax = max(a.total_energy_j for a in sweep)
+    print(f"{'zeta':>5} {'energy (J)':>12} {'s/query':>8} {'mean A_K':>8}")
+    for z, a in zip(ZETAS, sweep):
+        print(f"{z:5.2f} {a.total_energy_j:12.0f} "
+              f"{a.total_runtime_s / m:8.3f} {a.mean_accuracy_ak:8.2f}  "
+              f"|{bar(a.total_energy_j, emax)}")
+    print("\nbaselines (constant in zeta):")
+    for name, a in baselines.items():
+        print(f"  {name:22s} E={a.total_energy_j:12.0f} J  "
+              f"{a.total_runtime_s / m:6.3f} s/query  A_K={a.mean_accuracy_ak:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Dry-run artifact analysis: HLO parsing and roofline terms."""
+
+from repro.analysis.hlo import HLOModule, Totals, analyze_hlo_text  # noqa: F401
+from repro.analysis.roofline import RooflineTerms, roofline_terms  # noqa: F401

@@ -1,0 +1,271 @@
+"""Post-SPMD HLO text analysis: per-device FLOPs and collective bytes with
+while-loop trip-count multiplication.
+
+XLA's `compiled.cost_analysis()` counts each while body ONCE, so for
+scan-over-layers models it underestimates by ~n_layers (verified
+empirically on this backend).  This parser rebuilds the computation call
+graph from `compiled.as_text()`:
+
+  * dot ops        -> FLOPs = 2 * |result| * |contracted dims|
+  * collectives    -> bytes = sum of operand buffer sizes, by opcode
+  * fusion/call    -> callee totals, once per call site
+  * while          -> (body + cond) totals x trip count, where the trip
+                      count is recovered from the loop-bound constant
+                      compared in the condition computation (the pattern
+                      lax.scan emits)
+
+All numbers are per-device (shapes in post-SPMD HLO are already
+partitioned); multiply by chip count for cluster totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in shape_str (handles
+    tuples by summation)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> tuple[list[int], str]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return [], ""
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dims, m.group(1)
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    collective_count: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] += v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape_str: str
+    opcode: str
+    line: str
+
+
+class HLOModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[_Op]] = {}
+        self.shapes: dict[str, str] = {}   # op name -> shape string (global)
+        self._parse(text)
+        self._totals_cache: dict[str, Totals] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        current: list[_Op] | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and line.rstrip().endswith("{"):
+                name = hdr.group(1)
+                current = []
+                self.computations[name] = current
+                # parameters declared in the header
+                for pm in re.finditer(r"([\w.\-]+):\s*([a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?)",
+                                      hdr.group(2)):
+                    self.shapes[pm.group(1)] = pm.group(2)
+                continue
+            if current is None:
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rest = m.group(1), m.group(2)
+            # rest: "<shape> <opcode>(operands), attrs"
+            om = re.match(r"((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[\d,:TSE()]*\})?))\s+([\w\-]+)",
+                          rest)
+            if not om:
+                continue
+            shape_str, opcode = om.group(1), om.group(2)
+            self.shapes[name] = shape_str
+            current.append(_Op(name=name, shape_str=shape_str, opcode=opcode, line=line))
+
+    # ------------------------------------------------------------------
+    def _operand_names(self, op: _Op) -> list[str]:
+        # operands inside the first (...) after opcode
+        idx = op.line.find(op.opcode + "(")
+        if idx < 0:
+            return []
+        seg = op.line[idx + len(op.opcode) + 1:]
+        depth = 1
+        out = []
+        buf = ""
+        for ch in seg:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    buf += " "
+                    break
+            buf += ch
+        return _OPERANDS_RE.findall(buf)
+
+    def _trip_count(self, cond_name: str) -> float:
+        """Loop bound from the condition computation (lax.scan pattern:
+        compare(iter, constant(N)), direction=LT)."""
+        ops = self.computations.get(cond_name, [])
+        best = 1.0
+        for op in ops:
+            if op.opcode == "compare" or "compare(" in op.line:
+                for c in _CONST_RE.findall(op.line):
+                    best = max(best, float(c))
+        if best == 1.0:  # fall back: any constant in the computation
+            for op in ops:
+                for c in _CONST_RE.findall(op.line):
+                    best = max(best, float(c))
+        return best
+
+    def _dot_flops(self, op: _Op) -> float:
+        result_dims, _ = _shape_dims(op.shape_str)
+        out = 1.0
+        for d in result_dims:
+            out *= d
+        # contraction size from lhs operand shape + lhs_contracting_dims
+        operands = self._operand_names(op)
+        contr = 1.0
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+        if m and operands:
+            lhs_shape = self.shapes.get(operands[0], "")
+            lhs_dims, _ = _shape_dims(lhs_shape)
+            for ds in m.group(1).split(","):
+                if ds and int(ds) < len(lhs_dims):
+                    contr *= lhs_dims[int(ds)]
+        return 2.0 * out * contr
+
+    # ------------------------------------------------------------------
+    def computation_totals(self, name: str) -> Totals:
+        if name in self._totals_cache:
+            return self._totals_cache[name]
+        t = Totals()
+        self._totals_cache[name] = t   # break cycles defensively
+        for op in self.computations.get(name, []):
+            if op.opcode == "dot":
+                t.flops += self._dot_flops(op)
+            elif op.opcode in COLLECTIVE_OPS or op.opcode.rstrip("-start") in COLLECTIVE_OPS:
+                base = op.opcode.replace("-start", "")
+                if base in COLLECTIVE_OPS:
+                    b = sum(_shape_bytes(self.shapes.get(o, ""))
+                            for o in self._operand_names(op))
+                    if b == 0:
+                        b = _shape_bytes(op.shape_str)
+                    t.collective_bytes[base] += b
+                    t.collective_count[base] += 1
+            elif op.opcode == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    t.add(self.computation_totals(m.group(1)))
+            elif op.opcode == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if m:
+                    t.add(self.computation_totals(m.group(1)))
+            elif op.opcode == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trips = self._trip_count(cond)
+                    t.add(self.computation_totals(body), trips)
+                    t.add(self.computation_totals(cond), trips)
+            elif op.opcode == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)=%?([\w.\-]+)", op.line):
+                    t.add(self.computation_totals(m.group(1)))
+        self._totals_cache[name] = t
+        return t
+
+    def entry_totals(self) -> Totals:
+        # the ENTRY computation is the one not called by anyone — find by
+        # name conventions first, else pick the largest
+        for cand in self.computations:
+            if cand.startswith("main"):
+                return self.computation_totals(cand)
+        # fallback: computation with most ops
+        name = max(self.computations, key=lambda k: len(self.computations[k]))
+        return self.computation_totals(name)
+
+
+def analyze_hlo_text(text: str) -> Totals:
+    return HLOModule(text).entry_totals()
+
+
+def float_normalization_bytes(text_or_module) -> int:
+    """Bytes of XLA:CPU's float-normalization upcasts: the CPU backend has
+    no native bf16 compute, so it inserts entry-level f32 copies of every
+    bf16 parameter (weights, caches).  These buffers do NOT exist on the
+    TPU target — subtract them to get the TPU-relevant peak memory.
+
+    Heuristic: entry-computation `convert`/`wrapped_convert` fusions with
+    f32 results > 1 MiB (only the normalization pass produces whole-stack
+    entry-level converts at that scale in these graphs)."""
+    mod = (text_or_module if isinstance(text_or_module, HLOModule)
+           else HLOModule(text_or_module))
+    entry_name = None
+    for cand in mod.computations:
+        if cand.startswith("main"):
+            entry_name = cand
+            break
+    if entry_name is None:
+        entry_name = max(mod.computations, key=lambda k: len(mod.computations[k]))
+    total = 0
+    for op in mod.computations[entry_name]:
+        if not op.shape_str.startswith("f32"):
+            continue
+        is_upcast = (op.opcode == "convert"
+                     or (op.opcode == "fusion" and "wrapped_convert" in op.line))
+        if is_upcast:
+            b = _shape_bytes(op.shape_str)
+            if b > (1 << 20):
+                total += b
+    return total

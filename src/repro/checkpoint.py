@@ -1,0 +1,104 @@
+"""Checkpointing: save/restore parameter + optimizer-state pytrees.
+
+Tensor data is written as raw .npy files inside a directory, with a JSON
+manifest for the tree structure and dtypes (bf16 stored as uint16 views —
+npy has no bfloat16).  Atomic via write-to-tmp + rename.  Restore places
+arrays with jax.device_put against an optional sharding tree, so a
+checkpoint written on one topology can be reloaded onto another (the specs
+are re-resolved, not stored).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> list[tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}/{k}" if prefix else str(k)))
+        return out
+    return [(prefix, tree)]
+
+
+def _unflatten(items: dict[str, Any]) -> dict:
+    root: dict = {}
+    for path, v in items.items():
+        keys = path.split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+    return root
+
+
+def save_checkpoint(path: str | Path, tree: Any, *, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    """Write `tree` (nested dict of arrays) to `path` atomically."""
+    path = Path(path)
+    tmp = Path(tempfile.mkdtemp(dir=path.parent if path.parent.exists() else None,
+                                prefix=path.name + ".tmp"))
+    manifest: dict = {"step": step, "metadata": metadata or {}, "tensors": {}}
+    try:
+        for i, (name, leaf) in enumerate(_flatten(tree)):
+            arr = np.asarray(leaf)
+            dtype = str(arr.dtype)
+            if arr.dtype == jnp.bfloat16:
+                arr = arr.view(np.uint16)
+            elif "float8" in dtype:
+                arr = arr.view(np.uint8)
+            fname = f"t{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            manifest["tensors"][name] = {"file": fname, "dtype": dtype}
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if path.exists():
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+    finally:
+        if tmp.exists() and tmp != path:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def load_checkpoint(path: str | Path, *, shardings: Any | None = None
+                    ) -> tuple[dict, int, dict]:
+    """Returns (tree, step, metadata).  With `shardings` (same-structure
+    pytree of jax Shardings), each array is device_put onto its sharding."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    shard_map = dict(_flatten(shardings)) if shardings is not None else {}
+    items: dict[str, Any] = {}
+    for name, info in manifest["tensors"].items():
+        arr = np.load(path / info["file"])
+        dtype = info["dtype"]
+        if dtype == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        elif "float8" in dtype:
+            arr = arr.view(jnp.dtype(dtype))
+        sh = shard_map.get(name)
+        items[name] = (jax.device_put(arr, sh) if sh is not None
+                       else jnp.asarray(arr))
+    return _unflatten(items), int(manifest["step"]), manifest["metadata"]
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    """Highest step among `step_NNNNN` children of ckpt_dir."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")
+             if p.name.split("_")[1].isdigit()]
+    return max(steps) if steps else None
+
+
+def step_path(ckpt_dir: str | Path, step: int) -> Path:
+    return Path(ckpt_dir) / f"step_{step:08d}"

@@ -1,0 +1,89 @@
+"""The four assigned input shapes and per-arch input_specs().
+
+`input_specs(cfg, shape)` returns (kind, specs) where kind is
+"train" | "prefill" | "decode" and specs is a dict of ShapeDtypeStructs
+(no allocation — this is the dry-run contract).  Decode shapes lower
+serve_step: ONE token against a cache of seq_len (window-bounded for the
+long_500k sliding-window / recurrent modes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.vlm import VISION_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+    long_context: bool = False
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode", long_context=True),
+}
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model inputs (tokens / frontier-stub embeddings) for one step kind.
+    The decode cache spec is produced separately via eval_shape on
+    init_cache (see repro.launch.dryrun)."""
+    B, S = shape.global_batch, shape.seq_len
+    emb_dtype = jnp.dtype(cfg.param_dtype)
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            s_txt = S - cfg.n_patches
+            return {
+                "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, VISION_DIM), emb_dtype),
+                "tokens": _i32(B, s_txt),
+                "labels": _i32(B, s_txt),
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), emb_dtype),
+                "tokens": _i32(B, S),
+                "labels": _i32(B, S),
+            }
+        return {"tokens": _i32(B, S), "labels": _i32(B, S)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            s_txt = S - cfg.n_patches
+            return {
+                "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, VISION_DIM), emb_dtype),
+                "tokens": _i32(B, s_txt),
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), emb_dtype),
+                "tokens": _i32(B, S),
+            }
+        return {"tokens": _i32(B, S)}
+
+    # decode: one token; the cache is a separate argument
+    return {"token": _i32(B)}
+
+
+def long_context_note(cfg: ModelConfig) -> str:
+    """How each family runs the 524288-token decode (DESIGN.md §5)."""
+    if cfg.family == "ssm":
+        return "native (constant-size SSD state)"
+    if cfg.family == "hybrid":
+        return "native (RG-LRU state + local attention window)"
+    return f"sliding_window({cfg.long_context_window})"

@@ -1,0 +1,313 @@
+"""Offline energy-optimal workload scheduling (paper §4, §6.3).
+
+The paper encodes Eq. 2 as an ILP in PuLP.  The evaluated problem has a
+transportation structure (each query assigned to exactly one model; per-model
+share constraints), for which exact combinatorial algorithms exist:
+
+  * ``schedule()`` — per-query argmin over the cost matrix.  This is the
+    exact optimum of Eq. 2 subject only to coverage/disjointness (Eqs. 4–5);
+    the strict-share constraint (Eq. 3: every model gets >0 queries) is
+    repaired with minimum-regret swaps, which preserves optimality among
+    feasible solutions when m >> K (argument: the repair chooses the global
+    minimum extra cost over all ways to give a starved model one query).
+
+  * ``schedule_capacitated()`` — γ-constrained variant (the paper's data
+    center partition γ_K).  Solved exactly as a min-cost flow
+    (successive shortest augmenting paths with Johnson potentials).
+
+Baselines from the paper's Figure 3: single-model, round-robin, random.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.energy_model import (
+    LLMProfile,
+    NormalizedCosts,
+    Query,
+    normalized_costs,
+    objective_matrix,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """A disjoint partition of the workload Q into {Q_K} (Eqs. 4–5)."""
+
+    model_names: tuple[str, ...]
+    assignee: np.ndarray        # (m,) int — model index per query
+    objective: float            # Eq. 2 value
+    total_energy_j: float
+    total_runtime_s: float
+    total_accuracy: float       # Σ a_K(q) over assignment (paper's accuracy metric)
+    mean_accuracy_ak: float     # workload-weighted mean A_K (plotted in Fig. 3c)
+
+    def counts(self) -> np.ndarray:
+        return np.bincount(self.assignee, minlength=len(self.model_names))
+
+
+def _evaluate(
+    costs: NormalizedCosts, assignee: np.ndarray, zeta: float
+) -> Assignment:
+    m = len(assignee)
+    rows = np.arange(m)
+    obj = objective_matrix(costs, zeta)[rows, assignee].sum()
+    tin = np.array([q[0] for q in costs.queries], dtype=np.float64)
+    tout = np.array([q[1] for q in costs.queries], dtype=np.float64)
+    tok = tin + tout
+    a_k_per_query = costs.accuracy[rows, assignee] / np.maximum(tok, 1.0)
+    return Assignment(
+        model_names=costs.model_names,
+        assignee=assignee.copy(),
+        objective=float(obj),
+        total_energy_j=float(costs.energy[rows, assignee].sum()),
+        total_runtime_s=float(costs.runtime[rows, assignee].sum()),
+        total_accuracy=float(costs.accuracy[rows, assignee].sum()),
+        mean_accuracy_ak=float(a_k_per_query.mean()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exact unconstrained (coverage-only) scheduler
+# ---------------------------------------------------------------------------
+
+
+def schedule(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    zeta: float,
+    *,
+    enforce_nonempty: bool = True,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    """Optimal partition for Eq. 2 (argmin per query + Eq. 3 repair)."""
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    C = objective_matrix(costs, zeta)
+    m, k = C.shape
+    assignee = C.argmin(axis=1)
+
+    if enforce_nonempty and m >= k:
+        counts = np.bincount(assignee, minlength=k)
+        starved = np.nonzero(counts == 0)[0]
+        if len(starved):
+            # exact joint repair: assign one query to each starved model,
+            # donors keep >= 1 — a small min-cost flow over the regrets
+            # (greedy per-starved-model repair is not optimal when several
+            # models are starved at once)
+            n_s = len(starved)
+            mcf = _MinCostFlow(1 + n_s + m + k + 1)
+            src = 0
+            snk = 1 + n_s + m + k
+            base = C[np.arange(m), assignee]
+            shift = float(np.max(C)) + 1.0  # make arc costs non-negative
+            for si, s in enumerate(starved):
+                mcf.add_edge(src, 1 + si, 1, 0.0)
+                for i in range(m):
+                    regret = float(C[i, s] - base[i])
+                    mcf.add_edge(1 + si, 1 + n_s + i, 1, regret + shift)
+            for i in range(m):
+                mcf.add_edge(1 + n_s + i, 1 + n_s + m + int(assignee[i]), 1, 0.0)
+            for j in range(k):
+                cap = max(0, int(counts[j]) - 1)
+                mcf.add_edge(1 + n_s + m + j, snk, cap, 0.0)
+            flow, _ = mcf.min_cost_flow(src, snk, n_s)
+            if flow == n_s:
+                for si, s in enumerate(starved):
+                    for e in mcf.graph[1 + si]:
+                        v, cap, _, _ = e
+                        if 1 + n_s <= v < 1 + n_s + m and cap == 0:
+                            assignee[v - 1 - n_s] = s
+                            break
+    return _evaluate(costs, assignee, zeta)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-constrained (γ partition) scheduler — exact min-cost flow
+# ---------------------------------------------------------------------------
+
+
+def _capacities_from_gamma(gamma: Sequence[float], m: int) -> np.ndarray:
+    g = np.asarray(gamma, dtype=np.float64)
+    if abs(g.sum() - 1.0) > 1e-6:
+        raise ValueError(f"gamma must sum to 1, got {g.sum()}")
+    caps = np.floor(g * m).astype(int)
+    # distribute the remainder to largest fractional parts
+    rem = m - caps.sum()
+    frac = g * m - np.floor(g * m)
+    for j in np.argsort(-frac)[:rem]:
+        caps[j] += 1
+    return caps
+
+
+class _MinCostFlow:
+    """Successive shortest augmenting paths with Johnson potentials."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.graph: list[list[list]] = [[] for _ in range(n)]  # [to, cap, cost, rev_idx]
+
+    def add_edge(self, u: int, v: int, cap: int, cost: float) -> None:
+        self.graph[u].append([v, cap, cost, len(self.graph[v])])
+        self.graph[v].append([u, 0, -cost, len(self.graph[u]) - 1])
+
+    def min_cost_flow(self, s: int, t: int, maxf: int) -> tuple[int, float]:
+        n = self.n
+        prevv = [0] * n
+        preve = [0] * n
+        INF = float("inf")
+        flow, cost = 0, 0.0
+        h = [0.0] * n  # potentials (all edge costs are >= 0 after row shift)
+        while flow < maxf:
+            dist = [INF] * n
+            dist[s] = 0.0
+            pq = [(0.0, s)]
+            while pq:
+                d, u = heapq.heappop(pq)
+                if d > dist[u] + 1e-12:
+                    continue
+                for ei, e in enumerate(self.graph[u]):
+                    v, cap, c, _ = e
+                    if cap <= 0:
+                        continue
+                    nd = d + c + h[u] - h[v]
+                    if nd < dist[v] - 1e-12:
+                        dist[v] = nd
+                        prevv[v] = u
+                        preve[v] = ei
+                        heapq.heappush(pq, (nd, v))
+            if dist[t] == INF:
+                break
+            for i in range(n):
+                if dist[i] < INF:
+                    h[i] += dist[i]
+            # bottleneck along path
+            d = maxf - flow
+            v = t
+            while v != s:
+                d = min(d, self.graph[prevv[v]][preve[v]][1])
+                v = prevv[v]
+            v = t
+            while v != s:
+                e = self.graph[prevv[v]][preve[v]]
+                e[1] -= d
+                self.graph[v][e[3]][1] += d
+                cost += e[2] * d
+                v = prevv[v]
+            flow += d
+        return flow, cost
+
+
+def schedule_capacitated(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    zeta: float,
+    gamma: Sequence[float],
+    *,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    """Exact optimum of Eq. 2 with |Q_K| ≤ γ_K·|Q| capacities."""
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    C = objective_matrix(costs, zeta)
+    m, k = C.shape
+    caps = _capacities_from_gamma(gamma, m)
+
+    # Row-shift so all arc costs are non-negative (doesn't change argmin
+    # structure: every query is assigned exactly once).
+    shift = C.min(axis=1, keepdims=True)
+    Cs = C - shift
+
+    # nodes: 0 = source, 1..m = queries, m+1..m+k = models, m+k+1 = sink
+    mcf = _MinCostFlow(m + k + 2)
+    src, snk = 0, m + k + 1
+    for i in range(m):
+        mcf.add_edge(src, 1 + i, 1, 0.0)
+        for j in range(k):
+            mcf.add_edge(1 + i, 1 + m + j, 1, float(Cs[i, j]))
+    for j in range(k):
+        mcf.add_edge(1 + m + j, snk, int(caps[j]), 0.0)
+
+    flow, _ = mcf.min_cost_flow(src, snk, m)
+    if flow < m:
+        raise RuntimeError(f"infeasible: routed {flow}/{m} queries")
+
+    assignee = np.full(m, -1, dtype=int)
+    for i in range(m):
+        for e in mcf.graph[1 + i]:
+            v, cap, _, _ = e
+            if m + 1 <= v <= m + k and cap == 0:  # saturated forward arc
+                assignee[i] = v - m - 1
+                break
+    assert (assignee >= 0).all()
+    return _evaluate(costs, assignee, zeta)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (paper Fig. 3 constant lines)
+# ---------------------------------------------------------------------------
+
+
+def schedule_single_model(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    model_index: int,
+    *,
+    zeta: float = 0.5,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    assignee = np.full(len(queries), model_index, dtype=int)
+    return _evaluate(costs, assignee, zeta)
+
+
+def schedule_round_robin(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    *,
+    zeta: float = 0.5,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    assignee = np.arange(len(queries)) % len(profiles)
+    return _evaluate(costs, assignee, zeta)
+
+
+def schedule_random(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    *,
+    zeta: float = 0.5,
+    seed: int = 0,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    rng = np.random.default_rng(seed)
+    assignee = rng.integers(0, len(profiles), size=len(queries))
+    return _evaluate(costs, assignee, zeta)
+
+
+def zeta_sweep(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    zetas: Sequence[float],
+    *,
+    gamma: Sequence[float] | None = None,
+) -> list[Assignment]:
+    """The paper's Figure 3 sweep: one Assignment per ζ value."""
+    costs = normalized_costs(profiles, queries)
+    out = []
+    for z in zetas:
+        if gamma is None:
+            out.append(schedule(profiles, queries, z, costs=costs))
+        else:
+            out.append(schedule_capacitated(profiles, queries, z, gamma, costs=costs))
+    return out

@@ -1,0 +1,8 @@
+"""Data pipeline: synthetic workloads and token streams."""
+
+from repro.data.workloads import (  # noqa: F401
+    WorkloadSpec,
+    alpaca_like_workload,
+    grid_workload,
+    token_batches,
+)

@@ -1,0 +1,115 @@
+"""Workload generation.
+
+The paper's case study uses 500 queries from the Alpaca dataset (52,002
+instruction/GPT-4-answer pairs).  Alpaca is not shippable in this offline
+container, so `alpaca_like_workload` draws (τin, τout) from log-normal
+distributions fit to Alpaca's published token-length statistics
+(instruction+input: median ≈ 21 tokens, long tail to ~500; output:
+median ≈ 65, long tail to ~1000), truncated to the paper's measured range.
+
+`token_batches` turns a workload into padded token/label arrays for the
+training and serving paths (synthetic ids — the substrate is length-
+driven, exactly like the paper's standardized prompts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+Query = tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    n_queries: int = 500
+    in_log_mean: float = 3.4      # exp(3.4) ~ 30 tokens
+    in_log_sigma: float = 0.9
+    out_log_mean: float = 4.2     # exp(4.2) ~ 67 tokens
+    out_log_sigma: float = 0.9
+    min_tokens: int = 8
+    max_in: int = 2048
+    max_out: int = 4096
+    seed: int = 0
+
+
+def alpaca_like_workload(spec: WorkloadSpec = WorkloadSpec()) -> list[Query]:
+    rng = np.random.default_rng(spec.seed)
+    tin = np.exp(rng.normal(spec.in_log_mean, spec.in_log_sigma, spec.n_queries))
+    tout = np.exp(rng.normal(spec.out_log_mean, spec.out_log_sigma, spec.n_queries))
+    tin = np.clip(tin, spec.min_tokens, spec.max_in).astype(int)
+    tout = np.clip(tout, spec.min_tokens, spec.max_out).astype(int)
+    return [(int(a), int(b)) for a, b in zip(tin, tout)]
+
+
+def grid_workload(lo: int = 8, hi: int = 2048) -> list[Query]:
+    """Power-of-two grid, the paper's §6.1 ANOVA campaign."""
+    levels = []
+    v = lo
+    while v <= hi:
+        levels.append(v)
+        v *= 2
+    return [(a, b) for a in levels for b in levels]
+
+
+def token_batches(
+    queries: Sequence[Query],
+    batch_size: int,
+    vocab_size: int,
+    *,
+    pad_to: int | None = None,
+    seed: int = 0,
+) -> Iterator[dict]:
+    """Yield padded batches {"tokens": [B, S], "lengths": [B], "tau_out": [B]}.
+
+    Token ids are synthetic (uniform); lengths drive cost, as in the paper's
+    standardized prompts.  S = pad_to or the max τin in the batch, rounded
+    up to a multiple of 8.
+    """
+    rng = np.random.default_rng(seed)
+    for i in range(0, len(queries), batch_size):
+        chunk = queries[i : i + batch_size]
+        if len(chunk) < batch_size:  # repeat-pad the final partial batch
+            chunk = list(chunk) + [chunk[-1]] * (batch_size - len(chunk))
+        lens = np.array([q[0] for q in chunk], dtype=np.int32)
+        touts = np.array([q[1] for q in chunk], dtype=np.int32)
+        S = int(pad_to or max(8, int(np.ceil(lens.max() / 8)) * 8))
+        toks = rng.integers(1, vocab_size, size=(batch_size, S), dtype=np.int64)
+        mask = np.arange(S)[None, :] < lens[:, None]
+        toks = np.where(mask, toks, 0)
+        yield {
+            "tokens": toks.astype(np.int32),
+            "lengths": lens,
+            "tau_out": touts,
+        }
+
+
+def lm_train_batches(
+    n_steps: int, batch_size: int, seq_len: int, vocab_size: int, *,
+    seed: int = 0, kind: str = "markov", noise: float = 0.15
+) -> Iterator[dict]:
+    """Synthetic LM training batches with next-token labels.
+
+    kind="markov": a noisy deterministic chain (next = 3*cur+7 mod V with
+    prob 1-noise, else uniform) — learnable structure, so training loss
+    visibly falls below ln(V).  kind="uniform": i.i.d. tokens (loss floor
+    is exactly ln(V); useful for cost benchmarking only)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_steps):
+        if kind == "uniform":
+            toks = rng.integers(1, vocab_size,
+                                size=(batch_size, seq_len + 1), dtype=np.int64)
+        else:
+            toks = np.empty((batch_size, seq_len + 1), np.int64)
+            toks[:, 0] = rng.integers(1, vocab_size, batch_size)
+            for t in range(seq_len):
+                nxt = (3 * toks[:, t] + 7) % vocab_size
+                flip = rng.random(batch_size) < noise
+                nxt[flip] = rng.integers(1, vocab_size, int(flip.sum()))
+                toks[:, t + 1] = nxt
+        yield {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }

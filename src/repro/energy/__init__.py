@@ -1,0 +1,15 @@
+"""Energy substrate: hardware specs, meters, and the analytic simulator."""
+
+from repro.energy.costs import PassCosts, kv_bytes_per_token, pass_costs  # noqa: F401
+from repro.energy.hardware import (  # noqa: F401
+    A100_40GB,
+    EPYC_7742,
+    GENERIC_HOST,
+    Node,
+    SWING_NODE,
+    TPU_NODE,
+    TPU_V5E,
+    min_accelerators,
+)
+from repro.energy.meter import ModeledMeter, WallClockMeter  # noqa: F401
+from repro.energy.simulator import AnalyticLLMSimulator, PhaseBreakdown  # noqa: F401

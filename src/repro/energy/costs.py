@@ -1,0 +1,136 @@
+"""Analytic per-pass FLOP/byte cost model for every architecture family.
+
+`pass_costs(cfg, new_tokens, context, batch)` returns the FLOPs and HBM
+bytes of one forward pass that processes `new_tokens` positions per
+sequence against `context` total attended positions.  This is the
+structural cost surface the energy simulator integrates over a request —
+deliberately richer than the paper's bilinear e_K (quadratic attention
+terms, MoE router overhead, constant-state SSM), so fitting Eq. 6/7 against
+it is a real test of the paper's model form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models import active_params, get_api
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PassCosts:
+    flops: float
+    hbm_bytes: float
+
+    def __add__(self, other: "PassCosts") -> "PassCosts":
+        return PassCosts(self.flops + other.flops, self.hbm_bytes + other.hbm_bytes)
+
+
+def _dtype_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.param_dtype == "bfloat16" else 4
+
+
+def jnp_dtype_bytes(name: str) -> int:
+    import numpy as np
+    import jax.numpy as jnp
+    return jnp.dtype(name).itemsize
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> float:
+    """Cache bytes written per token per layer-stack (all layers)."""
+    b = jnp_dtype_bytes(cfg.cache_dtype) if cfg.cache_dtype else _dtype_bytes(cfg)
+    if cfg.family == "ssm":
+        return 0.0  # constant-size state, no per-token growth
+    if cfg.use_mla:
+        return cfg.n_layers * (cfg.kv_lora_rank + cfg.qk_rope_dim) * b
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(1, len(cfg.block_pattern))
+        return n_attn * 2 * cfg.n_kv_heads * cfg.head_dim_ * b
+    n_layers = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    return n_layers * 2 * cfg.n_kv_heads * cfg.head_dim_ * b
+
+
+def _attention_flops(cfg: ModelConfig, new_tokens: float, context: float,
+                     batch: float) -> float:
+    """Score + weighted-value FLOPs for all attention layers."""
+    if cfg.family == "ssm":
+        # SSD: intra-chunk quadratic within chunk + state updates, ~linear
+        H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        per_tok = 2 * H * P * N * 4  # B·x outer product, C·h, decay, gather
+        return cfg.n_layers * batch * new_tokens * per_tok
+    heads = cfg.n_heads
+    hd = cfg.head_dim_
+    if cfg.use_mla:
+        hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(1, len(cfg.block_pattern))
+        ctx = min(context, cfg.local_window or context)
+        return n_attn * batch * 4 * heads * hd * new_tokens * ctx
+    n_layers = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    ctx = context
+    if cfg.window:
+        ctx = min(context, cfg.window)
+    flops = n_layers * batch * 4 * heads * hd * new_tokens * ctx
+    if cfg.family == "encdec":
+        # cross attention into n_frames memory
+        flops += cfg.dec_layers * batch * 4 * heads * hd * new_tokens * cfg.n_frames
+    return flops
+
+
+def router_overhead_flops(cfg: ModelConfig, new_tokens: float, batch: float) -> float:
+    """MoE routing: logits + top-k + dispatch bookkeeping (the 'added
+    runtime and energy overhead' of §5.2)."""
+    if cfg.family != "moe":
+        return 0.0
+    nm = cfg.n_layers - cfg.n_dense_layers
+    return nm * batch * new_tokens * (2 * cfg.d_model * cfg.n_experts
+                                      + 32 * cfg.n_experts)
+
+
+def pass_costs(cfg: ModelConfig, new_tokens: float, context: float,
+               batch: float, *, include_weights: bool = True) -> PassCosts:
+    """One forward pass: `new_tokens` positions/sequence, `context` attended."""
+    b = _dtype_bytes(cfg)
+    n_active = active_params(cfg)
+    tokens = batch * new_tokens
+
+    flops = 2.0 * n_active * tokens
+    flops += _attention_flops(cfg, new_tokens, context, batch)
+    flops += router_overhead_flops(cfg, new_tokens, batch)
+
+    bytes_ = 0.0
+    if include_weights:
+        api = get_api(cfg)
+        bytes_ += api.count_params(cfg) * b if cfg.family != "moe" else _moe_weight_bytes(cfg, tokens, b)
+    # activations: ~12 d_model reads/writes per token per layer
+    bytes_ += cfg.n_layers * tokens * cfg.d_model * 12 * b
+    # cache traffic: write new tokens, read full context per new token (decode)
+    kvb = kv_bytes_per_token(cfg)
+    bytes_ += tokens * kvb
+    if new_tokens <= 2:  # decode-like pass: read the whole cache
+        ctx = context
+        if cfg.family == "hybrid":
+            ctx = min(context, cfg.local_window or context)
+        elif cfg.window:
+            ctx = min(context, cfg.window)
+        bytes_ += batch * ctx * kvb
+        if cfg.family == "ssm":
+            ssm_state_bytes = (cfg.n_layers * cfg.ssm_nheads * cfg.ssm_headdim
+                               * cfg.ssm_state * 4)
+            bytes_ += batch * 2 * ssm_state_bytes
+    return PassCosts(flops=flops, hbm_bytes=bytes_)
+
+
+def _moe_weight_bytes(cfg: ModelConfig, tokens: float, b: int) -> float:
+    """MoE weight traffic: non-expert weights once + experts actually hit.
+    With many tokens every expert is touched; with few (decode), only
+    ~tokens*top_k experts stream in."""
+    api = get_api(cfg)
+    total = api.count_params(cfg)
+    de = cfg.d_expert or cfg.d_ff
+    nm = cfg.n_layers - cfg.n_dense_layers
+    per_expert = 3 * cfg.d_model * de
+    routed = nm * cfg.n_experts * per_expert
+    base = total - routed
+    hit = min(float(cfg.n_experts), tokens * cfg.top_k)
+    return (base + nm * hit * per_expert) * b

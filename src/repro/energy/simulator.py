@@ -1,0 +1,130 @@
+"""Per-request analytic energy/runtime simulator (the NVML/uProf stand-in).
+
+Integrates the structural cost model (repro.energy.costs) over a request's
+lifetime on a Node using roofline timing:
+
+    t_pass = max(flops / (n·peak·eff), bytes / (n·bw·eff)) + dispatch
+    E_pass = idle_w·n·t_pass + e_flop·flops + e_byte·bytes + host
+
+With kv_cache=False (the paper's measurement mode) each generated token
+re-runs the full prefix — runtime/energy pick up τin·τout and τout²
+terms, which is what makes the paper's interaction-term OLS non-vacuous.
+
+Multiplicative log-normal noise gives trial-to-trial variance so the
+§5.1.3 CI stopping rule operates as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.energy import costs as costs_lib
+from repro.energy.hardware import Node, SWING_NODE, min_accelerators
+from repro.models import get_api
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseBreakdown:
+    prefill_s: float
+    decode_s: float
+    prefill_j: float
+    decode_j: float
+    host_j: float
+
+    @property
+    def runtime_s(self) -> float:
+        return self.prefill_s + self.decode_s
+
+    @property
+    def energy_j(self) -> float:
+        return self.prefill_j + self.decode_j + self.host_j
+
+
+class AnalyticLLMSimulator:
+    """measure(tau_in, tau_out) -> (energy_j, runtime_s) — plug-compatible
+    with the characterization campaign."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        node: Node = SWING_NODE,
+        *,
+        batch: int = 32,               # the paper fixes batch 32
+        kv_cache: bool = False,        # the paper disables the KV cache
+        noise_sigma: float = 0.015,
+        seed: int = 0,
+        decode_chunk: int = 256,       # integrate decode in chunks for speed
+    ):
+        self.cfg = cfg
+        self.batch = batch
+        self.kv_cache = kv_cache
+        self.noise_sigma = noise_sigma
+        self.rng = np.random.default_rng(seed)
+        self.decode_chunk = decode_chunk
+
+        api = get_api(cfg)
+        pbytes = api.count_params(cfg) * (2 if cfg.param_dtype == "bfloat16" else 4)
+        n = min_accelerators(pbytes, node.accel)
+        self.node = node.with_accelerators(n)
+
+    # ------------------------------------------------------------------
+    def _pass_time_energy(self, pc: costs_lib.PassCosts) -> tuple[float, float]:
+        a = self.node.accel
+        n = self.node.n_accel
+        t_c = pc.flops / (n * a.peak_flops * a.flops_efficiency)
+        t_m = pc.hbm_bytes / (n * a.hbm_bw * a.bw_efficiency)
+        t = max(t_c, t_m) + self.node.dispatch_overhead_s
+        e = (a.idle_w * n * t
+             + a.j_per_flop * pc.flops
+             + a.j_per_byte_hbm * pc.hbm_bytes)
+        return t, e
+
+    def simulate(self, tau_in: int, tau_out: int) -> PhaseBreakdown:
+        cfg, B = self.cfg, self.batch
+        # prefill over the prompt
+        pc = costs_lib.pass_costs(cfg, tau_in, tau_in, B)
+        t_pre, e_pre = self._pass_time_energy(pc)
+
+        t_dec = 0.0
+        e_dec = 0.0
+        if self.kv_cache:
+            # one single-token pass per output token, growing context
+            step = self.decode_chunk
+            for t0 in range(0, tau_out, step):
+                n_steps = min(step, tau_out - t0)
+                ctx = tau_in + t0 + n_steps / 2.0
+                pc = costs_lib.pass_costs(cfg, 1, ctx, B)
+                t1, e1 = self._pass_time_energy(pc)
+                t_dec += t1 * n_steps
+                e_dec += e1 * n_steps
+        else:
+            # paper mode: re-run the full prefix for every generated token
+            step = self.decode_chunk
+            for t0 in range(0, tau_out, step):
+                n_steps = min(step, tau_out - t0)
+                L = tau_in + t0 + n_steps / 2.0
+                pc = costs_lib.pass_costs(cfg, L, L, B)
+                t1, e1 = self._pass_time_energy(pc)
+                t_dec += t1 * n_steps
+                e_dec += e1 * n_steps
+
+        # host-side energy over the whole request (paper's EPYC uProf term)
+        h = self.node.host
+        host_w = h.idle_w / 4.0 + h.active_w_per_core * h.serving_cores
+        e_host = host_w * (t_pre + t_dec)
+        return PhaseBreakdown(t_pre, t_dec, e_pre, e_dec, e_host)
+
+    def measure(self, tau_in: int, tau_out: int) -> tuple[float, float]:
+        pb = self.simulate(tau_in, tau_out)
+        noise = math.exp(self.rng.normal(0.0, self.noise_sigma))
+        noise2 = math.exp(self.rng.normal(0.0, self.noise_sigma))
+        return pb.energy_j * noise, pb.runtime_s * noise2
+
+    # per-query (batch-normalized) versions used by the scheduler case study
+    def measure_per_query(self, tau_in: int, tau_out: int) -> tuple[float, float]:
+        e, r = self.measure(tau_in, tau_out)
+        return e / self.batch, r / self.batch

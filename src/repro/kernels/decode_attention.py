@@ -1,0 +1,110 @@
+"""Flash-decode GQA attention Pallas kernel — the serving hot spot.
+
+One new query token per sequence attends over a long KV cache.  TPU-native
+design (not a CUDA port): the cache is streamed HBM->VMEM in S-blocks while
+the (tiny) query block and the online-softmax state live in VMEM scratch;
+the MXU sees [G, D] x [D, BS] and [G, BS] x [BS, D] matmuls per block, with
+G (query heads per KV head) padded to the 8-sublane tile and D a multiple
+of 128 lanes.
+
+Grid: (B, Hkv, S/BS).  The S dimension is innermost/sequential ("arbitrary"
+semantics): scratch m/l/acc carries the running max / normalizer / value
+accumulator across S-blocks; the output is written on the last block.
+
+Masking: positions > pos contribute nothing (NEG_INF before softmax), so
+one kernel serves both the growing-prefix case and full ring buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_s: int, scale: float):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                     # [G, D]
+    k = k_ref[0, :, 0, :]               # [BS, D]
+    v = v_ref[0, :, 0, :]               # [BS, D]
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [G, BS]
+
+    k_pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos <= pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                 # [G, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)              # [G, BS]
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # [G, D]
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_gqa(q: jax.Array, k: jax.Array, v: jax.Array, pos,
+                     *, block_s: int = 512, interpret: bool = False) -> jax.Array:
+    """q [B,Hq,D]; k,v [B,S,Hkv,D]; pos scalar int32 (mask: index <= pos).
+    Returns [B,Hq,D] in q.dtype."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    # pad G to the 8-sublane tile so [G, D] blocks are MXU/VPU friendly
+    Gp = max(8, ((G + 7) // 8) * 8)
+    qg = q.reshape(B, Hkv, G, D)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+
+    grid = (B, Hkv, n_s)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                    # pos
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, s: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, block_s, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, block_s, 1, D), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),    # running max
+            pltpu.VMEM((Gp, 1), jnp.float32),    # running normalizer
+            pltpu.VMEM((Gp, D), jnp.float32),    # value accumulator
+        ],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), qg, k, v)
+    return out[:, :, :G, :].reshape(B, Hq, D)

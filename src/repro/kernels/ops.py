@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On TPU these lower to the real kernels; on CPU (this container) callers
+pass interpret=True (tests) or use the pure-jnp paths in repro.models.
+`use_kernels(cfg)` is the engine-level switch.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention import flash_decode_gqa
+from repro.kernels.rglru_scan import rglru_scan_pallas
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, pos, *, block_s: int = 512,
+                     interpret: bool = False):
+    """Flash-decode GQA: q [B,Hq,D]; k,v [B,S,Hkv,D]; pos scalar."""
+    return flash_decode_gqa(q, k, v, pos, block_s=block_s, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xdt, dA, B, C, *, chunk: int = 128, interpret: bool = False):
+    """Mamba-2 SSD chunk scan.  Returns (y, final_state)."""
+    return ssd_scan(xdt, dA, B, C, chunk=chunk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_w", "interpret"))
+def rglru(a, b, *, block_s: int = 256, block_w: int = 512,
+          interpret: bool = False):
+    """RG-LRU recurrence h_t = a_t h_{t-1} + b_t."""
+    return rglru_scan_pallas(a, b, block_s=block_s, block_w=block_w,
+                             interpret=interpret)

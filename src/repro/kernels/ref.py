@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Kept dependency-free of the model modules so kernel tests stand alone.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos) -> jax.Array:
+    """Flash-decode oracle.  q [B,Hq,D]; k,v [B,S,Hkv,D]; entries with
+    index > pos masked.  Returns [B,Hq,D] in q.dtype."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def ssd_scan_ref(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
+                 h0: jax.Array | None = None):
+    """Sequential SSD oracle.
+
+    xdt [b,s,h,p] (x*dt), dA [b,s,h] (dt*A, negative), B,C [b,s,h,n].
+    Returns (y [b,s,h,p] f32, final_state [b,h,p,n] f32).
+    State recurrence: S_t = exp(dA_t)*S_{t-1} + B_t (x) xdt_t; y_t = C_t . S_t.
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    state0 = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dA_t, B_t, C_t = inp
+        decay = jnp.exp(dA_t.astype(jnp.float32))[:, :, None, None]
+        upd = jnp.einsum("bhp,bhn->bhpn", x_t.astype(jnp.float32),
+                         B_t.astype(jnp.float32))
+        state = state * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_t.astype(jnp.float32))
+        return state, y
+
+    xs = (xdt.transpose(1, 0, 2, 3), dA.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """Linear-recurrence oracle: h_t = a_t*h_{t-1} + b_t, h_0 given.
+    a, b [B,S,W] f32.  Returns h [B,S,W] f32."""
+    B, S, W = a.shape
+    state0 = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, state0,
+                         (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,8 @@
+"""Launch layer: production meshes, sharding rules, step builders, dry-run."""
+
+from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_chips  # noqa: F401
+from repro.launch.steps import (  # noqa: F401
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)

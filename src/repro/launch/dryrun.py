@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Everything below runs against 512 placeholder host devices so the
+# production mesh (16x16 single-pod / 2x16x16 multi-pod) can be built.
+# Tests may shrink the device count (and mesh) via REPRO_DRYRUN_DEVICES /
+# --mesh-shape BEFORE jax initializes devices.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+from pathlib import Path       # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import shard                                  # noqa: E402
+from repro.analysis.hlo import HLOModule, float_normalization_bytes  # noqa: E402
+from repro.analysis.roofline import roofline_terms       # noqa: E402
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, token_specs  # noqa: E402
+from repro.configs.shapes import InputShape              # noqa: E402
+from repro.energy.costs import pass_costs                # noqa: E402
+from repro.launch import sharding as shardrules          # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_chips  # noqa: E402
+from repro.launch.steps import build_prefill_step, build_serve_step, build_train_step  # noqa: E402
+from repro.models import active_params, get_api          # noqa: E402
+from repro.models.common import ModelConfig              # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-step quantities for the roofline table
+# ---------------------------------------------------------------------------
+
+_OPT_BYTES_PER_PARAM = {"adamw": 26.0, "adafactor": 9.0, "sgd": 14.0}
+
+
+def step_model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_act = active_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_act * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n_act * B * S
+    return 2.0 * n_act * B          # decode: one token per sequence
+
+
+def step_hbm_bytes(cfg: ModelConfig, shape: InputShape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    api = get_api(cfg)
+    if shape.kind == "train":
+        fwd = pass_costs(cfg, S, S, B).hbm_bytes
+        opt = api.count_params(cfg) * _OPT_BYTES_PER_PARAM[cfg.optimizer]
+        # fwd + bwd (~2x fwd traffic) + remat recompute (~1x) + optimizer
+        return fwd * 4.0 + opt
+    if shape.kind == "prefill":
+        return pass_costs(cfg, S, S, B).hbm_bytes
+    return pass_costs(cfg, 1, S, B).hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# One dry-run
+# ---------------------------------------------------------------------------
+
+
+def lower_one(cfg: ModelConfig, shape: InputShape, mesh, rules: dict):
+    """Lower + compile one (config x shape) on a mesh.  Returns (compiled,
+    seconds_to_lower, seconds_to_compile)."""
+    api = get_api(cfg)
+    with mesh, shard.use_rules(rules, shardrules.mesh_axis_sizes(mesh)):
+        pshapes = api.param_shapes(cfg)
+        defs = api.param_defs(cfg)
+        if shape.kind == "train":
+            # FSDP: params + optimizer state sharded over data as well
+            pspecs = shardrules.fsdp_specs(defs, rules, mesh)
+        else:
+            pspecs = api.param_specs(cfg, rules)
+        params_sds = shardrules.with_sharding(pshapes, pspecs, mesh)
+        tspecs = token_specs(cfg, shape)
+        inputs_sds = shardrules.with_sharding(
+            tspecs, shardrules.input_pspecs(tspecs, rules), mesh)
+
+        t0 = time.time()
+        if shape.kind == "train":
+            step, opt = build_train_step(cfg, param_pspecs=pspecs)
+            opt_shapes = jax.eval_shape(opt.init, pshapes)
+            opt_specs = shardrules.opt_state_pspecs(
+                cfg.optimizer, defs, rules, param_spec_tree=pspecs)
+            opt_sds = shardrules.with_sharding(opt_shapes, opt_specs, mesh)
+            from jax.sharding import PartitionSpec as P
+            out_sh = (jax.sharding.NamedSharding(mesh, P()),
+                      shardrules.to_named(
+                          jax.tree.map(lambda s: s, pspecs,
+                                       is_leaf=lambda x: isinstance(x, P)), mesh),
+                      shardrules.to_named(opt_specs, mesh))
+            lowered = jax.jit(step, donate_argnums=(0, 1),
+                              out_shardings=out_sh).lower(
+                params_sds, opt_sds, inputs_sds)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(cfg, cache_len=shape.seq_len,
+                                      long_context=shape.long_context)
+            logits_struct, cache_struct = jax.eval_shape(
+                step, params_sds, inputs_sds)
+            from jax.sharding import PartitionSpec as P
+            out_sh = (
+                shardrules.named_legal(
+                    logits_struct, shard.resolve(("batch", "vocab"), rules), mesh),
+                shardrules.named_legal(
+                    cache_struct, shardrules.cache_pspecs(cache_struct, rules), mesh))
+            lowered = jax.jit(step, out_shardings=out_sh).lower(
+                params_sds, inputs_sds)
+        else:
+            step = build_serve_step(cfg)
+            cache_struct = jax.eval_shape(partial(
+                api.init_cache, cfg, shape.global_batch, shape.seq_len,
+                long_context=shape.long_context))
+            cache_specs = shardrules.cache_pspecs(cache_struct, rules)
+            cache_sds = shardrules.with_sharding(cache_struct, cache_specs, mesh)
+            logits_struct, _ = jax.eval_shape(
+                step, params_sds, cache_sds, inputs_sds)
+            out_sh = (
+                shardrules.named_legal(
+                    logits_struct, shard.resolve(("batch", "vocab"), rules), mesh),
+                shardrules.named_legal(cache_struct, cache_specs, mesh))
+            lowered = jax.jit(step, donate_argnums=(1,),
+                              out_shardings=out_sh).lower(
+                params_sds, cache_sds, inputs_sds)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+            rules_extra: dict | None = None, force: bool = False,
+            mesh=None, tag: str = "", cfg_overrides: dict | None = None) -> dict:
+    mesh_name = ("multipod" if multi_pod else "pod") + (f"-{tag}" if tag else "")
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    rules = shardrules.build_rules(cfg, shape, multi_pod=multi_pod,
+                                   extra=rules_extra)
+
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "rules": {k: list(v) if isinstance(v, tuple) else v
+                  for k, v in rules.items()},
+        "status": "error",
+    }
+    try:
+        compiled, t_lower, t_compile = lower_one(cfg, shape, mesh, rules)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo_mod = HLOModule(compiled.as_text())
+        totals = hlo_mod.entry_totals()
+        upcast = float_normalization_bytes(hlo_mod)
+        terms = roofline_terms(
+            arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+            hlo_totals=totals,
+            hbm_bytes_global=step_hbm_bytes(cfg, shape),
+            model_flops=step_model_flops(cfg, shape),
+        )
+        record.update({
+            "status": "ok",
+            "t_lower_s": t_lower,
+            "t_compile_s": t_compile,
+            "memory_analysis": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "code_bytes": int(mem.generated_code_size_in_bytes),
+                "peak_bytes_per_device": int(
+                    mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes),
+                # XLA:CPU upcasts every bf16 stack to f32 at entry (no such
+                # buffers exist on the TPU target) — subtract for the
+                # deployment-relevant number:
+                "cpu_float_normalization_bytes": int(upcast),
+                "peak_bytes_per_device_tpu": int(max(
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes,
+                    mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes
+                    - upcast)),
+            },
+            "cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+            "hlo": {
+                "flops_per_device": totals.flops,
+                "collective_bytes_per_device": dict(totals.collective_bytes),
+                "collective_counts": dict(totals.collective_count),
+            },
+            "roofline": terms.to_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — campaign must survive one failure
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc(limit=8)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description="multi-pod dry-run campaign")
+    p.add_argument("--arch", action="append", default=None,
+                   help="arch id (repeatable); default: all assigned")
+    p.add_argument("--shape", action="append", default=None,
+                   choices=list(INPUT_SHAPES), help="input shape (repeatable)")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--tag", default="", help="suffix for perf-experiment runs")
+    p.add_argument("--rule", action="append", default=[],
+                   help="logical-axis override, e.g. kv_seq=model or batch=-")
+    p.add_argument("--cfg", action="append", default=[],
+                   help="config override, e.g. cache_dtype=float8_e4m3fn or "
+                        "microbatch=16 (ints auto-parsed)")
+    args = p.parse_args(argv)
+
+    cfg_overrides = {}
+    for c in args.cfg:
+        k, v = c.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            if v in ("true", "True", "false", "False"):
+                v = v.lower() == "true"
+        cfg_overrides[k] = v
+
+    archs = args.arch or list(ASSIGNED_ARCHS)
+    shapes = args.shape or list(INPUT_SHAPES)
+    rules_extra = {}
+    for r in args.rule:
+        k, v = r.split("=", 1)
+        if v in ("-", "none", "None"):
+            rules_extra[k] = None
+        elif "," in v:
+            rules_extra[k] = tuple(v.split(","))
+        else:
+            rules_extra[k] = v
+
+    out_dir = Path(args.out)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            t0 = time.time()
+            rec = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                          out_dir=out_dir, rules_extra=rules_extra or None,
+                          force=args.force, mesh=mesh, tag=args.tag,
+                          cfg_overrides=cfg_overrides or None)
+            dt = time.time() - t0
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                mb = rec["memory_analysis"]["peak_bytes_per_device_tpu"] / 1e9
+                print(f"OK   {arch:24s} {shape_name:12s} {rec['mesh']:9s} "
+                      f"mem/dev={mb:6.2f}GB dom={r['dominant']:10s} "
+                      f"step={r['step_s']*1e3:9.3f}ms  ({dt:.0f}s)", flush=True)
+            else:
+                failures += 1
+                print(f"FAIL {arch:24s} {shape_name:12s} {rec['mesh']:9s} "
+                      f"{rec['error']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,238 @@
+"""Sharding rule resolution for the launch layer: batch/cache/optimizer
+specs per (config x input shape x mesh), built on the logical-axis rules in
+repro.shard.
+
+The rules table is the §Perf lever: dryrun.py accepts overrides like
+--rule kv_seq=model to move the KV cache onto the flash-decode layout
+without touching model code.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import shard
+from repro.configs.shapes import InputShape
+from repro.models import cache as cachelib
+from repro.models.common import ModelConfig, ParamDef, _flatten_defs, _set_path
+
+
+def config_rule_overrides(cfg: ModelConfig) -> dict:
+    """Per-config logical-axis overrides (e.g. DeepSeek-V3 shards its 256
+    experts over data x model)."""
+    ov: dict = {}
+    if cfg.family == "moe":
+        axes = tuple(cfg.expert_shard_axes)
+        ov["expert"] = axes if len(axes) > 1 else axes[0]
+        if len(axes) > 1:
+            ov["capacity"] = None   # capacity dim can't reuse the data axis
+    return ov
+
+
+def shape_rule_overrides(shape: InputShape) -> dict:
+    """Per-input-shape layout policy.
+
+    train    — sequence-parallel activations ("seq": model): the per-layer
+               hidden states saved for backward shard 16x further, which is
+               what fits 67B/95-layer training in 16 GB/chip.
+    decode   — fully sequence-parallel attention: cache S-sharded over
+               model (flash-decode), attention heads replicated, weights
+               row-parallel ("embed_w": model) so per-token all-reduces are
+               tiny instead of per-layer cache all-gathers.
+    long_500k— batch=1: cache sequence takes the data axis too.
+    """
+    if shape.kind == "train":
+        return {"seq": "model"}
+    if shape.kind == "decode":
+        ov = {"embed_w": "model", "heads": None, "kv_heads": None}
+        if shape.name == "long_500k":
+            ov.update({"batch": None, "kv_seq": "data", "capacity": None})
+        return ov
+    return {}
+
+
+def build_rules(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
+                extra: dict | None = None) -> dict:
+    rules = shard.make_rules(multi_pod=multi_pod,
+                             overrides=config_rule_overrides(cfg))
+    rules.update(shape_rule_overrides(shape))
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Input / cache / optimizer specs
+# ---------------------------------------------------------------------------
+
+_INPUT_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "token": ("batch",),
+    "patches": ("batch", None, None),
+    "frames": ("batch", "frames", None),
+}
+
+
+def input_pspecs(specs: dict, rules: dict) -> dict:
+    return {k: shard.resolve(_INPUT_AXES[k], rules) for k in specs}
+
+
+_CACHE_AXES = {
+    cachelib.KVCache: {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "pos": (),
+    },
+    cachelib.WindowKVCache: {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "pos": (),
+    },
+    cachelib.MLACache: {
+        "c_kv": ("layers", "batch", "kv_seq", None),
+        "k_rope": ("layers", "batch", "kv_seq", None),
+        "pos": (),
+    },
+    cachelib.SSMCache: {
+        "conv": ("layers", "batch", None, "mlp"),
+        "state": ("layers", "batch", "ssm_heads", None, None),
+        "pos": (),
+    },
+    cachelib.HybridCache: {
+        "lru": ("layers", "batch", "lru"),
+        "conv": ("layers", "batch", None, "lru"),
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "pos": (),
+    },
+    cachelib.EncDecCache: {
+        "self_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "self_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "cross_k": ("layers", "batch", "frames", "kv_heads", None),
+        "cross_v": ("layers", "batch", "frames", "kv_heads", None),
+        "pos": (),
+    },
+}
+
+
+def cache_pspecs(cache_struct, rules: dict):
+    """Same-structure pytree of PartitionSpecs for a cache object
+    (works on real caches or eval_shape structs)."""
+    axes_map = _CACHE_AXES[type(cache_struct)]
+    kw = {name: shard.resolve(axes, rules) for name, axes in axes_map.items()}
+    return type(cache_struct)(**kw)
+
+
+def opt_state_pspecs(opt_name: str, param_defs: dict, rules: dict, *,
+                     param_spec_tree: dict | None = None, mesh=None) -> dict:
+    """Optimizer-state PartitionSpecs mirroring the (possibly FSDP'd)
+    parameter layout."""
+    flat = _flatten_defs(param_defs)
+
+    def leaf_entries(path: str, d: ParamDef) -> list:
+        if param_spec_tree is not None:
+            node = param_spec_tree
+            for k in path.split("/"):
+                node = node[k]
+            spec = node
+        else:
+            spec = shard.resolve(d.axes, rules)
+            if mesh is not None:
+                spec = legalize_spec(d.shape, spec, mesh)
+        return list(spec) + [None] * (len(d.shape) - len(spec))
+
+    def trim(entries: list) -> P:
+        entries = list(entries)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    if opt_name in ("adamw", "sgd"):
+        m: dict = {}
+        for path, d in flat:
+            _set_path(m, path, trim(leaf_entries(path, d)))
+        import copy
+        if opt_name == "sgd":
+            return {"m": m}
+        return {"m": m, "v": copy.deepcopy(m), "step": P()}
+    if opt_name == "adafactor":
+        f: dict = {}
+        for path, d in flat:
+            e = leaf_entries(path, d)
+            if len(d.shape) >= 2:
+                _set_path(f, path, {"vr": trim(e[:-1]),
+                                    "vc": trim(e[:-2] + e[-1:])})
+            else:
+                _set_path(f, path, {"v": trim(e)})
+        return {"f": f, "step": P()}
+    raise KeyError(opt_name)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def legalize_spec(shape: tuple, spec: P, mesh) -> P:
+    """Input-sharding legalization (see repro.shard.legalize_spec)."""
+    return shard.legalize_spec(shape, spec, mesh_axis_sizes(mesh))
+
+
+def fsdp_specs(param_defs: dict, rules: dict, mesh, *,
+               fsdp_axes: tuple = ("data",)) -> dict:
+    """ZeRO/FSDP parameter layout: after resolving the tensor-parallel spec,
+    additionally shard each parameter over the data axis on its largest
+    free dividing dim.  Weights are then all-gathered per layer inside the
+    scan (the FSDP exchange), which is what lets 67B-671B training states
+    fit 16 GB/chip."""
+    sizes = mesh_axis_sizes(mesh)
+    f = 1
+    for a in fsdp_axes:
+        f *= sizes[a]
+    fsdp_entry = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+
+    out: dict = {}
+    for path, d in _flatten_defs(param_defs):
+        spec = shard.legalize_spec(d.shape, shard.resolve(d.axes, rules), sizes)
+        entries = list(spec) + [None] * (len(d.shape) - len(spec))
+        used = set()
+        for e in entries:
+            if e is not None:
+                used.update(e if isinstance(e, tuple) else (e,))
+        if not any(a in used for a in fsdp_axes):
+            cands = sorted(
+                (j for j in range(len(entries))
+                 if entries[j] is None and d.shape[j] % f == 0 and d.shape[j] >= f),
+                key=lambda j: -d.shape[j])
+            if cands:
+                entries[cands[0]] = fsdp_entry
+        while entries and entries[-1] is None:
+            entries.pop()
+        _set_path(out, path, P(*entries))
+    return out
+
+
+def named_legal(struct_tree, spec_tree, mesh):
+    """(shapes, specs) -> legalized NamedSharding pytree (for out_shardings)."""
+    return jax.tree.map(
+        lambda st, sp: NamedSharding(mesh, legalize_spec(st.shape, sp, mesh)),
+        struct_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+def to_named(tree, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def with_sharding(struct_tree, spec_tree, mesh):
+    """Attach (legalized) NamedShardings to a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda st, sp: jax.ShapeDtypeStruct(
+            st.shape, st.dtype,
+            sharding=NamedSharding(mesh, legalize_spec(st.shape, sp, mesh))),
+        struct_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,94 @@
+"""Step builders: the three jittable entry points the launcher, dry-run and
+examples all share.
+
+train_step: CE loss + gradient accumulation over microbatches (lax.scan)
++ optimizer update.  prefill_step / serve_step: the serving pair.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_api
+from repro.models.common import ModelConfig
+from repro.optim import get_optimizer
+
+
+def build_train_step(cfg: ModelConfig, *, lr: float = 1e-4,
+                     param_pspecs=None) -> tuple[Callable, object]:
+    """Returns (train_step(params, opt_state, batch) -> (loss, params,
+    opt_state), optimizer).
+
+    param_pspecs (optional): PartitionSpec tree matching params — the
+    gradient accumulator is constrained to it so grads stay FSDP-sharded
+    through the microbatch scan instead of being all-reduced replicated
+    (measured: the dominant all-reduce traffic in 671B training)."""
+    api = get_api(cfg)
+    opt = get_optimizer(cfg.optimizer)
+
+    def loss_fn(p, mb):
+        loss, _ = api.train_loss(cfg, p, mb)
+        return loss
+
+    accum_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+    def constrain_grads(g):
+        if param_pspecs is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, param_pspecs)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        mb_size = cfg.microbatch or B
+        if mb_size >= B:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            n = B // mb_size
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n, mb_size) + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            zeros = constrain_grads(zeros)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = constrain_grads(g)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(accum_dtype), acc, g)
+                acc = constrain_grads(acc)
+                return (acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return loss, params, opt_state
+
+    return train_step, opt
+
+
+def build_prefill_step(cfg: ModelConfig, *, cache_len: int,
+                       long_context: bool = False) -> Callable:
+    api = get_api(cfg)
+
+    def prefill_step(params, inputs):
+        return api.prefill(cfg, params, inputs, cache_len=cache_len,
+                           long_context=long_context)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """ONE new token against the cache — the decode dry-run target."""
+    api = get_api(cfg)
+
+    def serve_step(params, cache, inputs):
+        return api.decode_step(cfg, params, cache, inputs)
+
+    return serve_step

@@ -1,0 +1,4 @@
+"""Model zoo: six architecture families behind one functional API."""
+
+from repro.models.common import ModelConfig  # noqa: F401
+from repro.models.registry import ModelAPI, active_params, get_api  # noqa: F401

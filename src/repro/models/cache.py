@@ -1,0 +1,188 @@
+"""Decode-time state containers (KV caches and recurrent states).
+
+All are registered pytrees so they flow through jit/scan/pjit.  `pos` is a
+scalar int32: the absolute position of the *next* token to be written.
+Sliding-window caches are ring buffers of size `window`; keys are stored
+already-roped at absolute positions so the ring overwrite is safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _register(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    data = [f for f in fields if f != "meta"]
+    jax.tree_util.register_dataclass(cls, data_fields=data, meta_fields=["meta"] if "meta" in fields else [])
+    return cls
+
+
+@_register
+@dataclasses.dataclass
+class KVCache:
+    """Full attention cache: k, v [L, B, S, Hkv, Dh]."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array   # scalar int32
+
+    @staticmethod
+    def init(n_layers, batch, cache_len, n_kv, head_dim, dtype) -> "KVCache":
+        shape = (n_layers, batch, cache_len, n_kv, head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros((), jnp.int32))
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[2]
+
+
+@_register
+@dataclasses.dataclass
+class WindowKVCache:
+    """Ring-buffer sliding-window cache: k, v [L, B, W, Hkv, Dh]."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(n_layers, batch, window, n_kv, head_dim, dtype) -> "WindowKVCache":
+        shape = (n_layers, batch, window, n_kv, head_dim)
+        return WindowKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                             jnp.zeros((), jnp.int32))
+
+    @property
+    def window(self) -> int:
+        return self.k.shape[2]
+
+
+@_register
+@dataclasses.dataclass
+class MLACache:
+    """DeepSeek-V3 latent cache: c_kv [L, B, S, kv_lora], k_rope [L, B, S, rope_dim]."""
+    c_kv: jax.Array
+    k_rope: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(n_layers, batch, cache_len, kv_lora, rope_dim, dtype) -> "MLACache":
+        return MLACache(
+            jnp.zeros((n_layers, batch, cache_len, kv_lora), dtype),
+            jnp.zeros((n_layers, batch, cache_len, rope_dim), dtype),
+            jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def cache_len(self) -> int:
+        return self.c_kv.shape[2]
+
+
+@_register
+@dataclasses.dataclass
+class SSMCache:
+    """Mamba-2 state: conv_state [L, B, K-1, conv_ch], ssd_state [L, B, H, P, N]."""
+    conv: jax.Array
+    state: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(n_layers, batch, conv_kernel, conv_ch, nheads, headdim, state, dtype) -> "SSMCache":
+        return SSMCache(
+            jnp.zeros((n_layers, batch, conv_kernel - 1, conv_ch), dtype),
+            jnp.zeros((n_layers, batch, nheads, headdim, state), jnp.float32),
+            jnp.zeros((), jnp.int32),
+        )
+
+
+@_register
+@dataclasses.dataclass
+class HybridCache:
+    """RecurrentGemma: RG-LRU states + conv states for recurrent layers,
+    sliding-window KV for attention layers."""
+    lru: jax.Array      # [Lr, B, width] f32
+    conv: jax.Array     # [Lr, B, K-1, width]
+    k: jax.Array        # [La, B, W, Hkv, Dh]
+    v: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(n_rec, n_attn, batch, width, conv_kernel, window, n_kv, head_dim, dtype) -> "HybridCache":
+        kv = (n_attn, batch, window, n_kv, head_dim)
+        return HybridCache(
+            jnp.zeros((n_rec, batch, width), jnp.float32),
+            jnp.zeros((n_rec, batch, conv_kernel - 1, width), dtype),
+            jnp.zeros(kv, dtype), jnp.zeros(kv, dtype),
+            jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def window(self) -> int:
+        return self.k.shape[2]
+
+
+@_register
+@dataclasses.dataclass
+class EncDecCache:
+    """Seamless decoder cache: self-attn KV + precomputed cross-attn KV."""
+    self_k: jax.Array    # [L, B, S, H, Dh]
+    self_v: jax.Array
+    cross_k: jax.Array   # [L, B, T_frames, H, Dh]
+    cross_v: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(n_layers, batch, cache_len, n_frames, n_kv, head_dim, dtype) -> "EncDecCache":
+        s = (n_layers, batch, cache_len, n_kv, head_dim)
+        c = (n_layers, batch, n_frames, n_kv, head_dim)
+        return EncDecCache(jnp.zeros(s, dtype), jnp.zeros(s, dtype),
+                           jnp.zeros(c, dtype), jnp.zeros(c, dtype),
+                           jnp.zeros((), jnp.int32))
+
+    @property
+    def cache_len(self) -> int:
+        return self.self_k.shape[2]
+
+
+def onehot_write(cache_l: jax.Array, new: jax.Array, slot) -> jax.Array:
+    """Write one token into a per-layer cache slice at `slot` along axis 1.
+
+    cache_l [B, S, ...rest]; new [B, ...rest].  Implemented as an
+    elementwise one-hot blend instead of dynamic_update_slice: DUS at a
+    dynamic index on a SHARDED sequence dim makes GSPMD replicate the whole
+    buffer ("involuntary full rematerialization"); the one-hot blend stays
+    elementwise on the sharded layout."""
+    S = cache_l.shape[1]
+    blend_dt = new.dtype            # fp8 caches blend in the compute dtype
+    oh = (jnp.arange(S) == slot).astype(blend_dt)
+    oh = oh.reshape((1, S) + (1,) * (cache_l.ndim - 2))
+    out = cache_l.astype(blend_dt) * (1 - oh) + new[:, None].astype(blend_dt) * oh
+    return out.astype(cache_l.dtype)
+
+
+def ring_pack(ks: jax.Array, vs: jax.Array, window: int, pos_end: int):
+    """Pack full-sequence K/V [L,B,S,H,D] into ring buffers [L,B,W,H,D]
+    holding the last min(S, W) positions at slot = pos % W."""
+    S = ks.shape[2]
+    take = min(S, window)
+    pos = jnp.arange(pos_end - take, pos_end)
+    slots = pos % window
+    shape = ks.shape[:2] + (window,) + ks.shape[3:]
+    k = jnp.zeros(shape, ks.dtype).at[:, :, slots].set(ks[:, :, -take:])
+    v = jnp.zeros(shape, vs.dtype).at[:, :, slots].set(vs[:, :, -take:])
+    return k, v
+
+
+def write_kv(k_cache: jax.Array, v_cache: jax.Array, layer: jax.Array | int,
+             k_new: jax.Array, v_new: jax.Array, slot: jax.Array):
+    """Write one token's K/V at `slot` for `layer`.
+    k_cache [L,B,S,H,D]; k_new [B,H,D]."""
+    k_new = k_new[None, :, None]  # [1,B,1,H,D]
+    v_new = v_new[None, :, None]
+    idx = (layer, 0, slot, 0, 0)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), idx)
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), idx)
+    return k_cache, v_cache

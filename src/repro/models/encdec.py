@@ -1,0 +1,232 @@
+"""Seamless-M4T-v2 text backbone: encoder-decoder transformer (audio family).
+
+The speech frontend (mel + conformer feature extractor) is the allowed stub:
+`input_specs()` supplies precomputed frame embeddings [B, T_frames, d_model].
+The backbone is NLLB-style: 24 encoder layers (bidirectional self-attention
+over frames) + 24 decoder layers (causal self-attention + cross-attention
+into the encoder memory).  kv=16 == n_heads (MHA).  RoPE is used for
+encoder/decoder self-attention positions; cross-attention is position-free.
+
+Decode state: self-attention KV cache + cross-attention K/V precomputed
+once at prefill (the standard enc-dec serving optimization).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import shard
+from repro.models import attention as attnlib
+from repro.models import cache as cachelib
+from repro.models import dense
+from repro.models.common import (
+    ModelConfig,
+    padded_vocab,
+    ParamDef,
+    cross_entropy,
+    embed_tokens,
+    lm_logits,
+    maybe_remat,
+    mlp_defs,
+    rmsnorm,
+    rope,
+)
+from repro.models.common import swiglu
+
+
+def _xattn_defs(cfg: ModelConfig, n: int) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim_
+    L, A = (n,), ("layers",)
+    return {
+        "wq": ParamDef(L + (d, h, hd), A + ("embed_w", "heads", None)),
+        "wk": ParamDef(L + (d, h, hd), A + ("embed_w", "kv_heads", None)),
+        "wv": ParamDef(L + (d, h, hd), A + ("embed_w", "kv_heads", None)),
+        "wo": ParamDef(L + (h, hd, d), A + ("heads", None, "embed_w"),
+                       scale=0.02 / max(1, (2 * cfg.n_layers) ** 0.5)),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    ne, nd = cfg.enc_layers, cfg.dec_layers
+    d = cfg.d_model
+    return {
+        "adapter": ParamDef((d, d), ("embed_w", None)),  # frame-embed adapter
+        "embed": ParamDef((padded_vocab(cfg.vocab_size), d), ("vocab", "embed_w")),
+        "encoder": {
+            "attn": dense.attn_defs(cfg, ne),
+            "mlp": mlp_defs(d, cfg.d_ff, ne),
+            "ln_attn": {"w": ParamDef((ne, d), ("layers", None), init="zeros")},
+            "ln_mlp": {"w": ParamDef((ne, d), ("layers", None), init="zeros")},
+        },
+        "enc_norm": {"w": ParamDef((d,), (None,), init="zeros")},
+        "decoder": {
+            "self": dense.attn_defs(cfg, nd),
+            "cross": _xattn_defs(cfg, nd),
+            "mlp": mlp_defs(d, cfg.d_ff, nd),
+            "ln_self": {"w": ParamDef((nd, d), ("layers", None), init="zeros")},
+            "ln_cross": {"w": ParamDef((nd, d), ("layers", None), init="zeros")},
+            "ln_mlp": {"w": ParamDef((nd, d), ("layers", None), init="zeros")},
+        },
+        "final_norm": {"w": ParamDef((d,), (None,), init="zeros")},
+        "head": ParamDef((d, padded_vocab(cfg.vocab_size)), ("embed_w", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames [B, T, d] (stubbed frontend output) -> memory [B, T, d]."""
+    x = jnp.einsum("btd,de->bte", frames.astype(cfg.dtype), params["adapter"])
+
+    def body(h, pl):
+        h = shard.constrain(h, "batch", "seq", None)
+        a, _, _ = dense.attention_full(cfg, pl["attn"],
+                                       rmsnorm(h, pl["ln_attn"]["w"], cfg.rmsnorm_eps),
+                                       causal=False)
+        h = h + a
+        m = swiglu(rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+                   pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+        return h + m, None
+
+    body = maybe_remat(body, cfg.remat)
+    h, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(h, params["enc_norm"]["w"], cfg.rmsnorm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _cross_attention_full(cfg, pl, x, mem_k, mem_v):
+    """x [B,S,d]; mem_k/mem_v [B,T,H,Dh] precomputed."""
+    q = jnp.einsum("...d,dhe->...he", x, pl["wq"])
+    o = attnlib.full_attention(q, mem_k, mem_v, causal=False)
+    return jnp.einsum("...he,hed->...d", o, pl["wo"])
+
+
+def _cross_kv(cfg, pl, memory):
+    k = jnp.einsum("btd,dhe->bthe", memory, pl["wk"])
+    v = jnp.einsum("btd,dhe->bthe", memory, pl["wv"])
+    return k, v
+
+
+def _cross_attention_token(cfg, pl, x, k_l, v_l):
+    """x [B,d]; k_l/v_l [B,T,H,Dh]."""
+    q = jnp.einsum("bd,dhe->bhe", x, pl["wq"])
+    T = k_l.shape[1]
+    o = attnlib.decode_attention(q, k_l, v_l, jnp.asarray(T - 1, jnp.int32))
+    return jnp.einsum("bhe,hed->bd", o, pl["wo"])
+
+
+def decode_full(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                memory: jax.Array, *, window: int = 0, collect: bool = False):
+    """Teacher-forced decoder pass.  Returns (hidden, (ks, vs, ck, cv))."""
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(h, pl):
+        h = shard.constrain(h, "batch", "seq", None)
+        a, k, v = dense.attention_full(
+            cfg, pl["self"], rmsnorm(h, pl["ln_self"]["w"], cfg.rmsnorm_eps),
+            window=window)
+        h = h + a
+        ck, cv = _cross_kv(cfg, pl["cross"], memory)
+        c = _cross_attention_full(
+            cfg, pl["cross"], rmsnorm(h, pl["ln_cross"]["w"], cfg.rmsnorm_eps),
+            ck, cv)
+        h = h + c
+        m = swiglu(rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+                   pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+        h = h + m
+        out = (k, v, ck, cv) if collect else None
+        return h, out
+
+    body = maybe_remat(body, cfg.remat)
+    h, kv = jax.lax.scan(body, x, params["decoder"])
+    return h, kv
+
+
+# ---------------------------------------------------------------------------
+# Registry API
+# ---------------------------------------------------------------------------
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict):
+    memory = encode(cfg, params, batch["frames"])
+    h, _ = decode_full(cfg, params, batch["tokens"], memory, window=cfg.window)
+    h = rmsnorm(h, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    loss, _ = cross_entropy(logits, batch["labels"])
+    return loss, {}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, *,
+            cache_len: int, long_context: bool = False):
+    """batch: {"frames": [B,T,d], "tokens": [B,S]} — encodes, runs the
+    decoder prefix, returns last logits + EncDecCache."""
+    window = cfg.long_context_window if long_context else cfg.window
+    memory = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    h, (ks, vs, ck, cv) = decode_full(cfg, params, tokens, memory,
+                                      window=window, collect=True)
+    hl = rmsnorm(h[:, -1], params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(hl, params["head"], cfg.vocab_size)
+    ks, vs = ks.astype(cfg.kv_dtype), vs.astype(cfg.kv_dtype)
+    if window:
+        ks, vs = cachelib.ring_pack(ks, vs, window, S)
+    else:
+        pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    cache = cachelib.EncDecCache(ks, vs, ck, cv, jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+               long_context: bool = False, dtype=None):
+    dtype = dtype or cfg.kv_dtype
+    window = cfg.long_context_window if long_context else cfg.window
+    s_len = min(window, cache_len) if window else cache_len
+    return cachelib.EncDecCache.init(cfg.dec_layers, batch, s_len,
+                                     cfg.n_frames, cfg.n_kv_heads,
+                                     cfg.head_dim_, dtype)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, batch: dict):
+    token = batch["token"]
+    pos = cache.pos
+    S = cache.cache_len
+    # ring when the cache is windowed (long-context mode)
+    ring = bool(cfg.long_context_window and S == cfg.long_context_window) or bool(cfg.window)
+    slot = jnp.where(jnp.asarray(ring), pos % S, jnp.minimum(pos, S - 1))
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(h, inp):
+        pl, k_l, v_l, ck_l, cv_l = inp
+        xin = rmsnorm(h, pl["ln_self"]["w"], cfg.rmsnorm_eps)
+        k_new, v_new = dense.project_kv_token(cfg, pl["self"], xin, pos)
+        k_l = cachelib.onehot_write(k_l, k_new, slot)
+        v_l = cachelib.onehot_write(v_l, v_new, slot)
+        a = dense.attention_decode(cfg, pl["self"], xin, k_l, v_l, pos, ring=ring)
+        h = h + a
+        c = _cross_attention_token(
+            cfg, pl["cross"], rmsnorm(h, pl["ln_cross"]["w"], cfg.rmsnorm_eps),
+            ck_l, cv_l)
+        h = h + c
+        m = swiglu(rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+                   pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+        h = h + m
+        return h, (k_l, v_l)
+
+    h, (kc, vc) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache.self_k, cache.self_v,
+         cache.cross_k, cache.cross_v))
+    h = rmsnorm(h, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    new_cache = cachelib.EncDecCache(kc, vc, cache.cross_k, cache.cross_v, pos + 1)
+    return logits, new_cache

@@ -1,0 +1,333 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427).
+
+Repeating block pattern (recurrent, recurrent, local-attention); each
+temporal-mixing block is followed by its own MLP residual.  The RG-LRU
+recurrence
+
+    r_t = sigmoid(W_a u_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)            (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+is evaluated with jax.lax.associative_scan over the sequence (the TPU-native
+parallelization of a linear recurrence — this replaces the paper-agnostic
+CUDA linear-scan kernel).  Local attention is MQA (kv=1) with a bounded
+window, so decode state is O(window) — the long_500k shape runs natively.
+
+38 layers = 12 x (rec, rec, attn) + (rec, rec) tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import shard
+from repro.models import attention as attnlib
+from repro.models import cache as cachelib
+from repro.models.common import (
+    ModelConfig,
+    padded_vocab,
+    ParamDef,
+    cross_entropy,
+    embed_tokens,
+    lm_logits,
+    maybe_remat,
+    mlp_defs,
+    rmsnorm,
+    rope,
+    swiglu,
+)
+
+LRU_C = 8.0
+
+
+def pattern_counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_units, n_tail_rec, n_attn).  Unit = (rec, rec, attn)."""
+    per = len(cfg.block_pattern)            # 3
+    n_units = cfg.n_layers // per
+    rem = cfg.n_layers - n_units * per      # 38 - 36 = 2 tail rec layers
+    n_attn = n_units
+    return n_units, rem, n_attn
+
+
+def n_rec_layers(cfg: ModelConfig) -> int:
+    n_units, tail, _ = pattern_counts(cfg)
+    return 2 * n_units + tail
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+def _rec_defs(cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or cfg.d_model
+    L, A = (n,), ("layers",)
+    return {
+        "w_gate": ParamDef(L + (d, w), A + ("embed_w", "lru")),
+        "w_x": ParamDef(L + (d, w), A + ("embed_w", "lru")),
+        "conv_w": ParamDef(L + (cfg.conv_kernel, w), A + (None, "lru"), scale=0.1),
+        "conv_b": ParamDef(L + (w,), A + ("lru",), init="zeros"),
+        "w_a": ParamDef(L + (w, w), A + ("lru", None), scale=0.02),
+        "b_a": ParamDef(L + (w,), A + ("lru",), init="zeros"),
+        "w_i": ParamDef(L + (w, w), A + ("lru", None), scale=0.02),
+        "b_i": ParamDef(L + (w,), A + ("lru",), init="zeros"),
+        "lam": ParamDef(L + (w,), A + ("lru",), init="ones", scale=1.0),
+        "w_out": ParamDef(L + (w, d), A + ("lru", "embed_w"),
+                          scale=0.02 / max(1, (2 * cfg.n_layers) ** 0.5)),
+        "ln_mix": {"w": ParamDef(L + (d,), A + (None,), init="zeros")},
+        "mlp": mlp_defs(d, cfg.d_ff, n),
+        "ln_mlp": {"w": ParamDef(L + (d,), A + (None,), init="zeros")},
+    }
+
+
+def _attn_block_defs(cfg: ModelConfig, n: int) -> dict:
+    return {
+        "attn": _dense_attn_defs(cfg, n),
+        "ln_mix": {"w": ParamDef((n, cfg.d_model), ("layers", None), init="zeros")},
+        "mlp": mlp_defs(cfg.d_model, cfg.d_ff, n),
+        "ln_mlp": {"w": ParamDef((n, cfg.d_model), ("layers", None), init="zeros")},
+    }
+
+
+def _dense_attn_defs(cfg, n):
+    from repro.models import dense
+    return dense.attn_defs(cfg, n)
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    n_units, tail, _ = pattern_counts(cfg)
+    defs: dict = {
+        "embed": ParamDef((padded_vocab(cfg.vocab_size), cfg.d_model), ("vocab", "embed_w")),
+        "units": {
+            "rec_a": _rec_defs(cfg, n_units),
+            "rec_b": _rec_defs(cfg, n_units),
+            "attn": _attn_block_defs(cfg, n_units),
+        },
+        "final_norm": {"w": ParamDef((cfg.d_model,), (None,), init="zeros")},
+        "head": ParamDef((cfg.d_model, padded_vocab(cfg.vocab_size)), ("embed_w", "vocab")),
+    }
+    if tail:
+        defs["tail"] = {"rec": _rec_defs(cfg, tail)}
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _lru_coeffs(pl: dict, u: jax.Array):
+    """u [..., w] -> (a_t, b_t) of h_t = a_t*h + b_t, in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", uf, pl["w_a"].astype(jnp.float32)) + pl["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", uf, pl["w_i"].astype(jnp.float32)) + pl["b_i"].astype(jnp.float32))
+    log_a0 = jax.nn.log_sigmoid(pl["lam"].astype(jnp.float32))      # [w]
+    log_a = LRU_C * r * log_a0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(pl: dict, u: jax.Array, h0: jax.Array | None = None):
+    """Parallel RG-LRU over u [B,S,w].  Returns (h [B,S,w] f32, h_last)."""
+    a, b = _lru_coeffs(pl, u)
+    if h0 is not None:
+        # fold the initial state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_s, b_s[:, -1]
+
+
+def rglru_step(pl: dict, u: jax.Array, h: jax.Array):
+    """One-token RG-LRU.  u [B,w]; h [B,w] f32."""
+    a, b = _lru_coeffs(pl, u)
+    return a * h + b
+
+
+def _rec_mix_full(cfg, pl, x, h0=None, conv0=None):
+    """Recurrent temporal-mixing branch, full sequence.  x [B,S,d]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, pl["w_gate"]).astype(jnp.float32))
+    u = jnp.einsum("bsd,dw->bsw", x, pl["w_x"])
+    u = shard.constrain(u, "batch", "seq", "lru")
+    from repro.models.ssm import _causal_conv
+    u, conv_state = _causal_conv(u, pl["conv_w"], pl["conv_b"], state=conv0)
+    h, h_last = rglru_scan(pl, u)
+    y = (gate * h).astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, pl["w_out"]), h_last, conv_state
+
+
+def _rec_mix_step(cfg, pl, x, h, conv_state):
+    """x [B,d]; h [B,w] f32; conv_state [B,K-1,w]."""
+    gate = jax.nn.gelu(jnp.einsum("bd,dw->bw", x, pl["w_gate"]).astype(jnp.float32))
+    u = jnp.einsum("bd,dw->bw", x, pl["w_x"])
+    from repro.models.ssm import _causal_conv
+    u, conv_state = _causal_conv(u[:, None], pl["conv_w"], pl["conv_b"], state=conv_state)
+    h = rglru_step(pl, u[:, 0], h)
+    y = (gate * h).astype(x.dtype)
+    return jnp.einsum("bw,wd->bd", y, pl["w_out"]), h, conv_state
+
+
+def _rec_block_full(cfg, pl, x, conv0=None, h0=None):
+    mix, h_last, conv = _rec_mix_full(cfg, pl, rmsnorm(x, pl["ln_mix"]["w"], cfg.rmsnorm_eps))
+    x = x + mix
+    m = swiglu(rmsnorm(x, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+               pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+    return x + m, h_last, conv
+
+
+def _rec_block_step(cfg, pl, x, h, conv):
+    mix, h, conv = _rec_mix_step(cfg, pl, rmsnorm(x, pl["ln_mix"]["w"], cfg.rmsnorm_eps), h, conv)
+    x = x + mix
+    m = swiglu(rmsnorm(x, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+               pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+    return x + m, h, conv
+
+
+def _attn_block_full(cfg, pl, x, window):
+    from repro.models import dense
+    a, k, v = dense.attention_full(cfg, pl["attn"],
+                                   rmsnorm(x, pl["ln_mix"]["w"], cfg.rmsnorm_eps),
+                                   window=window)
+    x = x + a
+    m = swiglu(rmsnorm(x, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+               pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+    return x + m, k, v
+
+
+def _attn_block_step(cfg, pl, x, k_l, v_l, pos):
+    """k_l, v_l [B, W, 1, Dh] ring caches for this layer (token not yet
+    written).  Returns (x', k_l, v_l)."""
+    from repro.models import dense
+    W = k_l.shape[1]
+    slot = pos % W
+    xin = rmsnorm(x, pl["ln_mix"]["w"], cfg.rmsnorm_eps)
+    k_new, v_new = dense.project_kv_token(cfg, pl["attn"], xin, pos)
+    k_l = cachelib.onehot_write(k_l, k_new, slot)
+    v_l = cachelib.onehot_write(v_l, v_new, slot)
+    a = dense.attention_decode(cfg, pl["attn"], xin, k_l, v_l, pos, ring=True)
+    x = x + a
+    m = swiglu(rmsnorm(x, pl["ln_mlp"]["w"], cfg.rmsnorm_eps),
+               pl["mlp"]["w_gate"], pl["mlp"]["w_up"], pl["mlp"]["w_down"])
+    return x + m, k_l, v_l
+
+
+# ---------------------------------------------------------------------------
+# Full forward / decode over the (rec, rec, attn) unit scan
+# ---------------------------------------------------------------------------
+
+
+def forward_full(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                 collect: bool = False):
+    window = cfg.local_window
+
+    def unit_body(h, pu):
+        h = shard.constrain(h, "batch", "seq", None)
+        h, st_a, cv_a = _rec_block_full(cfg, pu["rec_a"], h)
+        h, st_b, cv_b = _rec_block_full(cfg, pu["rec_b"], h)
+        h, k, v = _attn_block_full(cfg, pu["attn"], h, window)
+        out = (st_a, cv_a, st_b, cv_b, k, v) if collect else None
+        return h, out
+
+    unit_body = maybe_remat(unit_body, cfg.remat)
+    h, unit_states = jax.lax.scan(unit_body, x, params["units"])
+
+    tail_states = None
+    if "tail" in params:
+        def tail_body(hh, pl):
+            hh, st, cv = _rec_block_full(cfg, pl, hh)
+            return hh, (st, cv) if collect else None
+        tail_body = maybe_remat(tail_body, cfg.remat)
+        h, tail_states = jax.lax.scan(tail_body, h, params["tail"]["rec"])
+    return h, unit_states, tail_states
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    h, _, _ = forward_full(cfg, params, x)
+    h = rmsnorm(h, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    loss, _ = cross_entropy(logits, batch["labels"])
+    return loss, {}
+
+
+def _assemble_cache(cfg, batch, unit_states, tail_states, pos_end):
+    n_units, tail, n_attn = pattern_counts(cfg)
+    st_a, cv_a, st_b, cv_b, ks, vs = unit_states
+    # interleave rec states in layer order: a0, b0, a1, b1, ...
+    lru = jnp.stack([st_a, st_b], axis=1).reshape((2 * n_units,) + st_a.shape[1:])
+    conv = jnp.stack([cv_a, cv_b], axis=1).reshape((2 * n_units,) + cv_a.shape[1:])
+    if tail_states is not None:
+        t_st, t_cv = tail_states
+        lru = jnp.concatenate([lru, t_st], axis=0)
+        conv = jnp.concatenate([conv, t_cv], axis=0)
+    W = cfg.local_window
+    k, v = cachelib.ring_pack(ks.astype(cfg.kv_dtype), vs.astype(cfg.kv_dtype),
+                              W, pos_end)
+    return cachelib.HybridCache(lru, conv, k, v, jnp.asarray(pos_end, jnp.int32))
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, *,
+            cache_len: int = 0, long_context: bool = False):
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    h, unit_states, tail_states = forward_full(cfg, params, x, collect=True)
+    hl = rmsnorm(h[:, -1], params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(hl, params["head"], cfg.vocab_size)
+    cache = _assemble_cache(cfg, batch, unit_states, tail_states, tokens.shape[1])
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int = 0, *,
+               long_context: bool = False, dtype=None):
+    dtype = dtype or cfg.kv_dtype
+    n_units, tail, n_attn = pattern_counts(cfg)
+    return cachelib.HybridCache.init(
+        2 * n_units + tail, n_attn, batch, cfg.lru_width or cfg.d_model,
+        cfg.conv_kernel, cfg.local_window, cfg.n_kv_heads, cfg.head_dim_, dtype)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, batch: dict):
+    token = batch["token"]
+    pos = cache.pos
+    n_units, tail, _ = pattern_counts(cfg)
+    x = jnp.take(params["embed"], token, axis=0)
+
+    B = x.shape[0]
+    lru_main = cache.lru[: 2 * n_units].reshape((n_units, 2) + cache.lru.shape[1:])
+    conv_main = cache.conv[: 2 * n_units].reshape((n_units, 2) + cache.conv.shape[1:])
+
+    def unit_body(h, inp):
+        pu, lru2, conv2, k_l, v_l = inp
+        h, ha, cva = _rec_block_step(cfg, pu["rec_a"], h, lru2[0], conv2[0])
+        h, hb, cvb = _rec_block_step(cfg, pu["rec_b"], h, lru2[1], conv2[1])
+        h, k_l, v_l = _attn_block_step(cfg, pu["attn"], h, k_l, v_l, pos)
+        return h, (jnp.stack([ha, hb]), jnp.stack([cva, cvb]), k_l, v_l)
+
+    h, (lru2, conv2, k, v) = jax.lax.scan(
+        unit_body, x, (params["units"], lru_main, conv_main, cache.k, cache.v))
+    lru = lru2.reshape((2 * n_units,) + cache.lru.shape[1:])
+    conv = conv2.reshape((2 * n_units,) + cache.conv.shape[1:])
+
+    if tail:
+        def tail_body(hh, inp):
+            pl, h0, cv0 = inp
+            hh, h1, cv1 = _rec_block_step(cfg, pl, hh, h0, cv0)
+            return hh, (h1, cv1)
+        h, (t_lru, t_conv) = jax.lax.scan(
+            tail_body, h, (params["tail"]["rec"],
+                           cache.lru[2 * n_units:], cache.conv[2 * n_units:]))
+        lru = jnp.concatenate([lru, t_lru], axis=0)
+        conv = jnp.concatenate([conv, t_conv], axis=0)
+
+    h = rmsnorm(h, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    return logits, cachelib.HybridCache(lru, conv, k, v, pos + 1)

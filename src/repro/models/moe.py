@@ -1,0 +1,581 @@
+"""Mixture-of-Experts transformers.
+
+Covers granite-moe-3b-a800m (GQA attention, 40 experts top-8),
+Mixtral 8x7B (paper zoo; GQA, 8 experts top-2) and deepseek-v3-671b
+(MLA attention, 1 shared + 256 routed top-8, leading dense layers, MTP).
+
+Expert-parallel dispatch is capacity-based: tokens are sorted by expert,
+scattered into an [E, C, d] buffer (sharded over the expert axis — this is
+what turns into the all-to-all on the production mesh), run through stacked
+expert GEMMs, and combined back with router gates.  This is the SMoE path
+whose energy efficiency the paper highlights in §5.2/§5.3.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import shard
+from repro.models import attention as attnlib
+from repro.models import cache as cachelib
+from repro.models import dense
+from repro.models.common import (
+    ModelConfig,
+    padded_vocab,
+    ParamDef,
+    cross_entropy,
+    embed_tokens,
+    lm_logits,
+    maybe_remat,
+    mlp_defs,
+    rmsnorm,
+    rope,
+    swiglu,
+)
+
+
+# ---------------------------------------------------------------------------
+# Router + capacity dispatch
+# ---------------------------------------------------------------------------
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, int(math.ceil(c / 8)) * 8)
+
+
+def moe_defs(cfg: ModelConfig, n_layers: int) -> dict:
+    d = cfg.d_model
+    de = cfg.d_expert or cfg.d_ff
+    E = cfg.n_experts
+    L = (n_layers,)
+    A = ("layers",)
+    defs = {
+        "router": ParamDef(L + (d, E), A + ("embed_w", None), scale=0.02),
+        "w_gate": ParamDef(L + (E, d, de), A + ("expert", "embed_w", "mlp")),
+        "w_up": ParamDef(L + (E, d, de), A + ("expert", "embed_w", "mlp")),
+        "w_down": ParamDef(L + (E, de, d), A + ("expert", "mlp", "embed_w"),
+                           scale=0.02 / max(1, (2 * cfg.n_layers) ** 0.5)),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = mlp_defs(d, de * cfg.n_shared_experts, n_layers)
+    return defs
+
+
+def _masked_take(operand: jax.Array, idx: jax.Array, oob: int) -> jax.Array:
+    """operand [N, d] gathered at idx [...] with idx == oob -> zeros."""
+    safe = jnp.minimum(idx, operand.shape[0] - 1)
+    out = jnp.take(operand, safe, axis=0)
+    return out * (idx < oob)[..., None].astype(out.dtype)
+
+
+@jax.custom_vjp
+def _dispatch(xt, idx_ec, tok2slot):
+    """xt [T, d] -> expert buffer [E, C, d] via slot-source indices
+    idx_ec [E, C] (value T = empty slot)."""
+    buf = _masked_take(xt, idx_ec, xt.shape[0])
+    return shard.constrain(buf, None, None, "moe_embed")
+
+
+def _dispatch_fwd(xt, idx_ec, tok2slot):
+    return _dispatch(xt, idx_ec, tok2slot), (tok2slot, xt.shape)
+
+
+def _dispatch_bwd(res, g):
+    # Transpose of a capacity-dropped permutation-gather is ANOTHER gather
+    # (via the token->slot table) — never a scatter, which GSPMD would
+    # replicate at 30 GB/device scale (measured).
+    tok2slot, (T, d) = res
+    E, C, _ = g.shape
+    g = shard.constrain(g, None, None, "moe_embed")
+    gt = _masked_take(g.reshape(E * C, d), tok2slot, E * C)   # [T, K, d]
+    gt = shard.constrain(gt, None, None, "moe_embed")
+    import numpy as _np
+    zi = _np.zeros(tok2slot.shape, jax.dtypes.float0)
+    return gt.sum(1), zi, zi
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine(y, gates, tok2slot, slot2pair):
+    """y [E, C, d], gates [T, K] -> out [T, d]; tok2slot [T, K] maps each
+    (token, k) pair to its flat slot (E*C = dropped)."""
+    E, C, d = y.shape
+    y = shard.constrain(y, None, None, "moe_embed")
+    pairs = _masked_take(y.reshape(E * C, d), tok2slot, E * C)  # [T, K, d]
+    pairs = shard.constrain(pairs, None, None, "moe_embed")
+    return (pairs * gates[..., None].astype(pairs.dtype)).sum(1)
+
+
+def _combine_fwd(y, gates, tok2slot, slot2pair):
+    return _combine(y, gates, tok2slot, slot2pair), (y, gates, tok2slot, slot2pair)
+
+
+def _combine_bwd(res, g):
+    y, gates, tok2slot, slot2pair = res
+    E, C, d = y.shape
+    T, K = gates.shape
+    g = shard.constrain(g, None, "moe_embed")
+    grad_pairs = g[:, None, :] * gates[..., None].astype(g.dtype)  # [T, K, d]
+    grad_pairs = shard.constrain(grad_pairs, None, None, "moe_embed")
+    grad_y = _masked_take(grad_pairs.reshape(T * K, d), slot2pair, T * K)
+    grad_y = grad_y.reshape(E, C, d).astype(y.dtype)
+    grad_y = shard.constrain(grad_y, None, None, "moe_embed")
+    pairs = _masked_take(y.reshape(E * C, d), tok2slot, E * C)
+    pairs = shard.constrain(pairs, None, None, "moe_embed")
+    grad_gates = (pairs.astype(g.dtype) * g[:, None, :]).sum(-1)
+    import numpy as _np
+    zi = _np.zeros(tok2slot.shape, jax.dtypes.float0)
+    zs = _np.zeros(slot2pair.shape, jax.dtypes.float0)
+    return grad_y, grad_gates.astype(gates.dtype), zi, zs
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_ffn(cfg: ModelConfig, pl: dict, x: jax.Array):
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    Sort-based capacity dispatch where BOTH directions (and both VJPs) are
+    gathers over d-sharded operands; the [E, C, d] buffer resharding to the
+    expert layout is the explicit expert-parallel all-to-all.  Token counts
+    beyond cfg.moe_token_chunk are processed in chunks (lax.scan) so the
+    [T*K, d] pair intermediates stay bounded at 32k-prefill scale."""
+    B, S, d = x.shape
+    T = B * S
+    chunk = cfg.moe_token_chunk
+    if chunk and T > chunk and T % chunk == 0:
+        n = T // chunk
+        xc = x.reshape(n, chunk, 1, d)
+
+        def body(carry, xg):
+            out_g, aux_g = _moe_ffn_inner(cfg, pl, xg)
+            return carry + aux_g, out_g
+
+        aux, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xc)
+        return outs.reshape(B, S, d), aux / n
+    return _moe_ffn_inner(cfg, pl, x)
+
+
+def _moe_ffn_inner(cfg: ModelConfig, pl: dict, x: jax.Array):
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt, pl["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                      # [T, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    C = expert_capacity(T, cfg)
+    pair_e = eidx.reshape(T * K)
+    order = jnp.argsort(pair_e, stable=True)
+    inv_order = jnp.argsort(order, stable=True)
+    pair_e_s = pair_e[order]
+    counts = jnp.bincount(pair_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * K) - starts[pair_e_s]
+    keep = rank < C
+
+    # index tables (all int32, all O(T*K + E*C)):
+    #   src [E, C]      — sorted-pair position feeding each slot (OOB = T*K)
+    #   slot2tok [E, C] — token id feeding each slot (OOB = T)
+    #   tok2slot [T, K] — flat slot of each pair (OOB = E*C)
+    arangeC = jnp.arange(C)[None, :]
+    src = starts[:, None] + arangeC
+    valid = arangeC < counts[:, None]
+    order_tok = order // K                                     # sorted pos -> token
+    slot2tok = jnp.where(valid, order_tok[jnp.minimum(src, T * K - 1)], T)
+    slot2pair = jnp.where(valid, order[jnp.minimum(src, T * K - 1)], T * K)
+    slot_sorted = jnp.where(keep, pair_e_s * C + rank, E * C)  # per sorted pair
+    tok2slot = slot_sorted[inv_order].reshape(T, K)
+
+    xt_sh = shard.constrain(xt, None, "moe_embed")
+    buf = _dispatch(xt_sh, slot2tok, tok2slot)                 # [E, C, d]
+    buf = shard.constrain(buf, "expert", "capacity", None)     # all-to-all
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, pl["w_gate"]).astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buf, pl["w_up"])
+    h = (g.astype(x.dtype) * u)
+    h = shard.constrain(h, "expert", "capacity", "mlp")
+    y = jnp.einsum("ecf,efd->ecd", h, pl["w_down"])
+    y = shard.constrain(y, "expert", "capacity", None)         # local GEMM out
+    y = shard.constrain(y, None, None, "moe_embed")            # all-to-all back
+
+    out = _combine(y, gates.astype(y.dtype), tok2slot, slot2pair)  # [T, d]
+    out = shard.constrain(out, None, "moe_embed")
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        sh = pl["shared"]
+        out = out + swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+
+    # Switch-style load-balance loss: E * Σ_e f_e · p_e
+    f = jnp.bincount(pair_e, weights=keep.astype(jnp.float32)[jnp.argsort(order)],
+                     length=E) / jnp.maximum(T * K, 1)
+    p_mean = probs.mean(0)
+    aux = cfg.router_aux_coef * E * jnp.sum(f * p_mean)
+    return out, aux
+
+
+def moe_ffn_token(cfg: ModelConfig, pl: dict, x: jax.Array):
+    """Decode-path MoE for [B, d] single tokens (wraps the batched path)."""
+    y, aux = moe_ffn(cfg, pl, x[:, None, :])
+    return y[:, 0, :], aux
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def mla_defs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    Dn, Dr, Dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    L = (n_layers,)
+    A = ("layers",)
+    return {
+        "w_q_a": ParamDef(L + (d, qr), A + ("embed_w", None)),
+        "q_norm": ParamDef(L + (qr,), A + (None,), init="zeros"),
+        "w_q_b": ParamDef(L + (qr, H, Dn + Dr), A + (None, "heads", None)),
+        "w_kv_a": ParamDef(L + (d, kr + Dr), A + ("embed_w", None)),
+        "kv_norm": ParamDef(L + (kr,), A + (None,), init="zeros"),
+        "w_kv_b": ParamDef(L + (kr, H, Dn + Dv), A + (None, "heads", None)),
+        "wo": ParamDef(L + (H, Dv, d), A + ("heads", None, "embed_w"),
+                       scale=0.02 / max(1, (2 * cfg.n_layers) ** 0.5)),
+    }
+
+
+def _mla_q(cfg, pl, x, positions):
+    """x [..., d] -> q_nope [..., H, Dn], q_rope [..., H, Dr] (roped)."""
+    Dn, Dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(jnp.einsum("...d,dr->...r", x, pl["w_q_a"]), pl["q_norm"], cfg.rmsnorm_eps)
+    q = jnp.einsum("...r,rhe->...he", cq, pl["w_q_b"])
+    q_nope, q_rope = q[..., :Dn], q[..., Dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(cfg, pl, x, positions):
+    """x [..., d] -> c_kv (normed) [..., kr], k_rope (roped) [..., Dr]."""
+    kr, Dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = jnp.einsum("...d,dr->...r", x, pl["w_kv_a"])
+    c_kv = rmsnorm(kv[..., :kr], pl["kv_norm"], cfg.rmsnorm_eps)
+    k_rope = kv[..., kr:]
+    # shared-across-heads rope: add a head axis of 1 for the helper
+    k_rope = rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention_full(cfg: ModelConfig, pl: dict, x: jax.Array, *,
+                       q_offset: int = 0, window: int = 0):
+    """Full-sequence MLA.  Returns (y, c_kv, k_rope) for the latent cache."""
+    B, S, _ = x.shape
+    Dn, Dv = cfg.qk_nope_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(q_offset + jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(cfg, pl, x, positions)
+    c_kv, k_rope = _mla_latents(cfg, pl, x, positions)
+    kv = jnp.einsum("bsr,rhe->bshe", c_kv, pl["w_kv_b"])
+    k_nope, value = kv[..., :Dn], kv[..., Dn:]
+    o = attnlib.mla_full_attention(q_nope, q_rope, k_nope, k_rope, value,
+                                   causal=True, window=window)
+    y = jnp.einsum("bshe,hed->bsd", o, pl["wo"])
+    return y, c_kv, k_rope
+
+
+def mla_attention_decode(cfg: ModelConfig, pl: dict, x: jax.Array,
+                         c_kv_l: jax.Array, k_rope_l: jax.Array,
+                         pos: jax.Array):
+    """One-token MLA over the latent cache (already containing this token).
+
+    Baseline path expands K/V from latents each step; cfg.mla_absorb=True
+    uses the absorbed-matmul decode (beyond-paper optimization)."""
+    B = x.shape[0]
+    Dn, Dr, Dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.full((B, 1), pos)
+    q_nope, q_rope = _mla_q(cfg, pl, x[:, None], positions)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]     # [B,H,*]
+    scale = 1.0 / ((Dn + Dr) ** 0.5)
+
+    c_kv_l = c_kv_l.astype(x.dtype)
+    k_rope_l = k_rope_l.astype(x.dtype)
+    if cfg.mla_absorb:
+        w_uk = pl["w_kv_b"][..., :Dn]               # [kr, H, Dn]
+        w_uv = pl["w_kv_b"][..., Dn:]               # [kr, H, Dv]
+        q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+        o = attnlib.mla_decode_absorbed(
+            q_lat, q_rope, c_kv_l, k_rope_l,
+            jnp.transpose(w_uv, (1, 0, 2)), pos, scale)
+    else:
+        kv = jnp.einsum("bsr,rhe->bshe", c_kv_l, pl["w_kv_b"])
+        k_nope, value = kv[..., :Dn], kv[..., Dn:]
+        s = jnp.einsum("bhn,bshn->bhs", q_nope, k_nope,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bhr,bsr->bhs", q_rope, k_rope_l,
+                        preferred_element_type=jnp.float32)
+        s *= scale
+        valid = jnp.arange(c_kv_l.shape[1]) <= pos
+        s = jnp.where(valid[None, None], s, attnlib.NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhs,bshv->bhv", w.astype(value.dtype), value)
+    return jnp.einsum("bhv,hvd->bd", o, pl["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Blocks / stacks
+# ---------------------------------------------------------------------------
+
+
+def _uses_mla(cfg: ModelConfig) -> bool:
+    return cfg.use_mla
+
+
+def layer_defs(cfg: ModelConfig) -> dict:
+    """Two stacks: leading dense-FFN layers (DeepSeek-V3) + MoE layers."""
+    nd = cfg.n_dense_layers
+    nm = cfg.n_layers - nd
+    att = mla_defs if _uses_mla(cfg) else dense.attn_defs
+    out: dict = {
+        "moe_blocks": {
+            "attn": att(cfg, nm),
+            "moe": moe_defs(cfg, nm),
+            "ln_attn": {"w": ParamDef((nm, cfg.d_model), ("layers", None), init="zeros")},
+            "ln_mlp": {"w": ParamDef((nm, cfg.d_model), ("layers", None), init="zeros")},
+        }
+    }
+    if nd:
+        out["dense_blocks"] = {
+            "attn": att(cfg, nd),
+            "mlp": mlp_defs(cfg.d_model, cfg.dense_d_ff or cfg.d_ff, nd),
+            "ln_attn": {"w": ParamDef((nd, cfg.d_model), ("layers", None), init="zeros")},
+            "ln_mlp": {"w": ParamDef((nd, cfg.d_model), ("layers", None), init="zeros")},
+        }
+    return out
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = {
+        "embed": ParamDef((padded_vocab(cfg.vocab_size), cfg.d_model), ("vocab", "embed_w")),
+        "blocks": layer_defs(cfg),
+        "final_norm": {"w": ParamDef((cfg.d_model,), (None,), init="zeros")},
+        "head": ParamDef((cfg.d_model, padded_vocab(cfg.vocab_size)), ("embed_w", "vocab")),
+    }
+    if cfg.mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * cfg.d_model, cfg.d_model), (None, "embed_w")),
+            "ln": {"w": ParamDef((cfg.d_model,), (None,), init="zeros")},
+            "mlp": mlp_defs(cfg.d_model, cfg.dense_d_ff or cfg.d_ff),
+        }
+    return defs
+
+
+def _attn_full(cfg, pl, xin, window):
+    if _uses_mla(cfg):
+        y, c_kv, k_rope = mla_attention_full(cfg, pl["attn"], xin, window=window)
+        return y, (c_kv, k_rope)
+    y, k, v = dense.attention_full(cfg, pl["attn"], xin, window=window)
+    return y, (k, v)
+
+
+def _stack_forward(cfg, blocks, x, *, moe: bool, window: int, collect: bool):
+    def body(carry, pl):
+        h, aux = carry
+        h = shard.constrain(h, "batch", "seq", None)
+        xin = rmsnorm(h, pl["ln_attn"]["w"], cfg.rmsnorm_eps)
+        a, kv = _attn_full(cfg, pl, xin, window)
+        h = h + a
+        xmid = rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps)
+        if moe:
+            m, a_loss = moe_ffn(cfg, pl["moe"], xmid)
+            aux = aux + a_loss
+        else:
+            mp = pl["mlp"]
+            m = swiglu(xmid, mp["w_gate"], mp["w_up"], mp["w_down"])
+        h = h + m
+        return (h, aux), (kv if collect else None)
+
+    body = maybe_remat(body, cfg.remat)
+    (h, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return h, aux, kvs
+
+
+def forward_full(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                 window: int = 0, collect: bool = False):
+    """Returns (hidden, aux_loss, caches) where caches stacks dense+moe
+    layers in order."""
+    blocks = params["blocks"]
+    kvs = []
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_dense_layers:
+        x, a0, kv0 = _stack_forward(cfg, blocks["dense_blocks"], x,
+                                    moe=False, window=window, collect=collect)
+        aux += a0
+        if collect:
+            kvs.append(kv0)
+    x, a1, kv1 = _stack_forward(cfg, blocks["moe_blocks"], x, moe=True,
+                                window=window, collect=collect)
+    aux += a1
+    if collect:
+        kvs.append(kv1)
+        merged = tuple(jnp.concatenate([k[i] for k in kvs], axis=0)
+                       for i in range(2))
+        return x, aux, merged
+    return x, aux, None
+
+
+# ---------------------------------------------------------------------------
+# Registry API
+# ---------------------------------------------------------------------------
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_tokens(params["embed"], tokens)
+    h, aux, _ = forward_full(cfg, params, x, window=cfg.window)
+    h = rmsnorm(h, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    loss, _ = cross_entropy(logits, labels)
+    metrics = {"aux_loss": aux}
+    if cfg.mtp:
+        # Multi-token prediction: predict t+2 from h_t and emb(t+1).
+        hm = rmsnorm(h[:, :-1], params["mtp"]["ln"]["w"], cfg.rmsnorm_eps)
+        e_next = embed_tokens(params["embed"], tokens[:, 1:])
+        z = jnp.concatenate([hm, e_next], axis=-1)
+        z = jnp.einsum("bsd,dk->bsk", z, params["mtp"]["proj"])
+        mp = params["mtp"]["mlp"]
+        z = z + swiglu(z, mp["w_gate"], mp["w_up"], mp["w_down"])
+        mtp_logits = lm_logits(z, params["head"], cfg.vocab_size)
+        mtp_labels = jnp.where(labels[:, 1:] >= 0, labels[:, 1:], -1)
+        mtp_loss, _ = cross_entropy(mtp_logits, mtp_labels)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    return loss + aux, metrics
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, *,
+            cache_len: int, long_context: bool = False):
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    window = cfg.long_context_window if long_context else cfg.window
+    x = embed_tokens(params["embed"], tokens)
+    h, _, kv = forward_full(cfg, params, x, window=window, collect=True)
+    h = rmsnorm(h[:, -1], params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    if _uses_mla(cfg):
+        c_kv, k_rope = kv
+        c_kv = c_kv.astype(cfg.kv_dtype)
+        k_rope = k_rope.astype(cfg.kv_dtype)
+        pad = cache_len - S
+        cache = cachelib.MLACache(
+            jnp.pad(c_kv, [(0, 0), (0, 0), (0, pad), (0, 0)]),
+            jnp.pad(k_rope, [(0, 0), (0, 0), (0, pad), (0, 0)]),
+            jnp.asarray(S, jnp.int32))
+    else:
+        ks, vs = kv
+        cache = dense._finish_cache(cfg, ks, vs, cache_len, window, S)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+               long_context: bool = False, dtype=None):
+    dtype = dtype or cfg.kv_dtype
+    if _uses_mla(cfg):
+        return cachelib.MLACache.init(cfg.n_layers, batch, cache_len,
+                                      cfg.kv_lora_rank, cfg.qk_rope_dim, dtype)
+    window = cfg.long_context_window if long_context else cfg.window
+    if window:
+        return cachelib.WindowKVCache.init(cfg.n_layers, batch,
+                                           min(window, cache_len),
+                                           cfg.n_kv_heads, cfg.head_dim_, dtype)
+    return cachelib.KVCache.init(cfg.n_layers, batch, cache_len,
+                                 cfg.n_kv_heads, cfg.head_dim_, dtype)
+
+
+def _decode_stack(cfg, blocks, x, caches, pos, *, moe: bool, ring: bool):
+    """One-token pass over one stack.  Per-layer cache slices flow as scan
+    xs -> ys (carrying the full cache would double-buffer it)."""
+    if _uses_mla(cfg):
+        ckv, krope = caches
+        S = ckv.shape[2]
+        slot = jnp.minimum(pos, S - 1)
+
+        def body(h, inp):
+            pl, c_l, r_l = inp       # c_l [B, S, kr]; r_l [B, S, Dr]
+            xin = rmsnorm(h, pl["ln_attn"]["w"], cfg.rmsnorm_eps)
+            c_new, r_new = _mla_latents(cfg, pl["attn"], xin,
+                                        jnp.full((h.shape[0],), pos))
+            c_l = cachelib.onehot_write(c_l, c_new, slot)
+            r_l = cachelib.onehot_write(r_l, r_new, slot)
+            a = mla_attention_decode(cfg, pl["attn"], xin, c_l, r_l, pos)
+            h = h + a
+            xmid = rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps)
+            if moe:
+                m, _ = moe_ffn_token(cfg, pl["moe"], xmid)
+            else:
+                mp = pl["mlp"]
+                m = swiglu(xmid, mp["w_gate"], mp["w_up"], mp["w_down"])
+            h = h + m
+            return h, (c_l, r_l)
+
+        h, (ckv, krope) = jax.lax.scan(body, x, (blocks, ckv, krope))
+        return h, (ckv, krope)
+
+    kc, vc = caches
+    S = kc.shape[2]
+    slot = jnp.where(jnp.asarray(ring), pos % S, jnp.minimum(pos, S - 1))
+
+    def body(h, inp):
+        pl, k_l, v_l = inp
+        xin = rmsnorm(h, pl["ln_attn"]["w"], cfg.rmsnorm_eps)
+        k_new, v_new = dense.project_kv_token(cfg, pl["attn"], xin, pos)
+        k_l = cachelib.onehot_write(k_l, k_new, slot)
+        v_l = cachelib.onehot_write(v_l, v_new, slot)
+        a = dense.attention_decode(cfg, pl["attn"], xin, k_l, v_l, pos, ring=ring)
+        h = h + a
+        xmid = rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps)
+        if moe:
+            m, _ = moe_ffn_token(cfg, pl["moe"], xmid)
+        else:
+            mp = pl["mlp"]
+            m = swiglu(xmid, mp["w_gate"], mp["w_up"], mp["w_down"])
+        h = h + m
+        return h, (k_l, v_l)
+
+    h, (kc, vc) = jax.lax.scan(body, x, (blocks, kc, vc))
+    return h, (kc, vc)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, batch: dict):
+    token = batch["token"]
+    pos = cache.pos
+    ring = isinstance(cache, cachelib.WindowKVCache)
+    x = jnp.take(params["embed"], token, axis=0)
+    if _uses_mla(cfg):
+        arrays = (cache.c_kv, cache.k_rope)
+    else:
+        arrays = (cache.k, cache.v)
+    blocks = params["blocks"]
+    if cfg.n_dense_layers:
+        nd = cfg.n_dense_layers
+        head_arrays = tuple(a[:nd] for a in arrays)
+        tail_arrays = tuple(a[nd:] for a in arrays)
+        x, head_arrays = _decode_stack(cfg, blocks["dense_blocks"], x,
+                                       head_arrays, pos, moe=False, ring=ring)
+        x, tail_arrays = _decode_stack(cfg, blocks["moe_blocks"], x,
+                                       tail_arrays, pos, moe=True, ring=ring)
+        arrays = tuple(jnp.concatenate([h, t], axis=0)
+                       for h, t in zip(head_arrays, tail_arrays))
+    else:
+        x, arrays = _decode_stack(cfg, blocks["moe_blocks"], x, arrays, pos,
+                                  moe=True, ring=ring)
+    h = rmsnorm(x, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, params["head"], cfg.vocab_size)
+    new_cache = type(cache)(*arrays, pos + 1)
+    return logits, new_cache

@@ -1,0 +1,82 @@
+"""InternVL2 language backbone (VLM family).
+
+The InternViT vision tower is the allowed stub: `input_specs()` supplies
+precomputed patch embeddings [B, n_patches, vision_dim].  This module owns
+the MLP projector (vision_dim -> d_model) and the InternLM2-style decoder
+(llama-arch GQA), with patch embeddings interleaved BEFORE the text tokens
+in the causal stream — the standard VLM prefill layout.
+
+Everything after embedding reuses repro.models.dense; the KV cache covers
+patch positions + text positions, so decode is identical to dense decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense
+from repro.models.common import (
+    ModelConfig,
+    ParamDef,
+    cross_entropy,
+    embed_tokens,
+    lm_logits,
+    rmsnorm,
+)
+
+VISION_DIM = 1024  # InternViT-300M output width (frontend stub contract)
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = dense.param_defs(cfg)
+    defs["projector"] = {
+        "w1": ParamDef((VISION_DIM, cfg.d_model), (None, "embed_w")),
+        "b1": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "w2": ParamDef((cfg.d_model, cfg.d_model), ("embed_w", None)),
+        "b2": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+    return defs
+
+
+def project_patches(params: dict, patches: jax.Array, dtype) -> jax.Array:
+    p = params["projector"]
+    h = jnp.einsum("bpv,vd->bpd", patches.astype(dtype), p["w1"]) + p["b1"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("bpd,de->bpe", h, p["w2"]) + p["b2"]
+
+
+def _embed_multimodal(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """[patches ; tokens] -> [B, P + S_text, d]."""
+    x_txt = embed_tokens(params["embed"], batch["tokens"])
+    x_img = project_patches(params, batch["patches"], x_txt.dtype)
+    return jnp.concatenate([x_img, x_txt], axis=1)
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict):
+    """batch: {"patches": [B,P,VISION_DIM], "tokens": [B,S], "labels": [B,S]}.
+    Labels cover only the text positions; patch positions are ignored."""
+    x = _embed_multimodal(cfg, params, batch)
+    h, _ = dense.forward_full(cfg, params["blocks"], x, window=cfg.window)
+    h = rmsnorm(h, params["final_norm"]["w"], cfg.rmsnorm_eps)
+    P = batch["patches"].shape[1]
+    logits = lm_logits(h[:, P:], dense.head_matrix(cfg, params), cfg.vocab_size)
+    loss, _ = cross_entropy(logits, batch["labels"])
+    return loss, {}
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, *,
+            cache_len: int, long_context: bool = False):
+    window = cfg.long_context_window if long_context else cfg.window
+    x = _embed_multimodal(cfg, params, batch)
+    S = x.shape[1]
+    h, (ks, vs) = dense.forward_full(cfg, params["blocks"], x, window=window,
+                                     collect_kv=True)
+    h = rmsnorm(h[:, -1], params["final_norm"]["w"], cfg.rmsnorm_eps)
+    logits = lm_logits(h, dense.head_matrix(cfg, params), cfg.vocab_size)
+    cache = dense._finish_cache(cfg, ks, vs, cache_len, window, S)
+    return logits, cache
+
+
+init_cache = dense.init_cache
+decode_step = dense.decode_step

@@ -1,0 +1,148 @@
+"""In-house optimizers (no optax in this environment).
+
+API:  opt = get_optimizer(name)
+      state = opt.init(params)
+      params, state = opt.update(grads, state, params, lr)
+
+AdamW keeps f32 moments; Adafactor keeps factored second moments only
+(no first moment) — required to fit deepseek-v3-671b training state into
+256 x 16 GB (see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return params, {"m": m, "v": v, "step": step}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# ---------------------------------------------------------------------------
+
+
+def _adafactor(decay=0.8, eps=1e-30, clip=1.0) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params), "step": jnp.zeros((), jnp.int32)}
+
+    # flattened implementation: per-leaf state dicts have heterogeneous
+    # structure (factored vs unfactored), so zip over grads' treedef.
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        s_leaves = treedef.flatten_up_to(state["f"])
+        new_p, new_s = [], []
+        for g, s, p in zip(g_leaves, s_leaves, p_leaves):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + 1e-12)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf / (jnp.sqrt(v) + 1e-12)
+                ns = {"v": v}
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / clip)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+            new_s.append(ns)
+        return (jax.tree.unflatten(treedef, new_p),
+                {"f": jax.tree.unflatten(treedef, new_s), "step": step})
+
+    return Optimizer("adafactor", init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def _sgd(momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        g_leaves, treedef = jax.tree.flatten(grads)
+        m_leaves = treedef.flatten_up_to(state["m"])
+        p_leaves = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(g_leaves, m_leaves, p_leaves)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                {"m": jax.tree.unflatten(treedef, [o[1] for o in out])})
+
+    return Optimizer("sgd", init, update)
+
+
+_REGISTRY = {
+    "adamw": _adamw,
+    "adafactor": _adafactor,
+    "sgd": _sgd,
+}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}")
+    return _REGISTRY[name](**kw)

@@ -1,0 +1,6 @@
+"""Serving substrate: engine, router, request objects, samplers."""
+
+from repro.serving.engine import GenStats, InferenceEngine, measure_fn  # noqa: F401
+from repro.serving.requests import Request, Response  # noqa: F401
+from repro.serving.router import EnergyAwareRouter, RoutingPlan  # noqa: F401
+from repro.serving.sampler import Sampler  # noqa: F401

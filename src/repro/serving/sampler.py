@@ -1,0 +1,24 @@
+"""Token samplers for the decode loop."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => no truncation
+
+    def __call__(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        """logits [B, V] -> token ids [B] int32."""
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits / self.temperature
+        if self.top_k:
+            kth = jax.lax.top_k(scaled, self.top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

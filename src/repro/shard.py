@@ -1,0 +1,166 @@
+"""Logical-axis sharding: the one leaf module models and launch both import.
+
+Models annotate activations/params with *logical* axis names ("batch",
+"heads", "mlp", "expert", ...).  A rules table maps logical names to mesh
+axes.  Outside any rules context (CPU unit tests) every constraint is a
+no-op, so the model code runs unchanged on one device.
+
+The rules table is ALSO the main performance-iteration lever: §Perf
+experiments swap rules (e.g. move "kv_seq" from None to "model") without
+touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axis (str), tuple of mesh axes, or None (replicated)
+Rules = Mapping[str, object]
+
+# Baseline rules for the production mesh ("data", "model") [+ "pod"].
+# "pod" is folded into the batch axis by make_rules(multi_pod=True).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": "data",
+    "seq": None,          # activation sequence dim ("model" = Megatron-SP, set for train)
+    "kv_seq": "model",    # KV-cache sequence dim: flash-decode layout by default
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "embed": None,        # activation d_model dim
+    "embed_w": None,      # weight d_model (contraction) dim
+    "mlp": "model",       # d_ff
+    "vocab": "model",
+    "expert": "model",
+    "capacity": "data",   # MoE expert-capacity dim
+    "moe_embed": "model",  # d dim of token-major MoE intermediates (gathers
+                           # run locally per d-shard; rows stay replicated)
+    "ssm_heads": "model",
+    "state": None,
+    "lru": "model",
+    "frames": None,
+    "layers": None,
+}
+
+_rules_var: contextvars.ContextVar[Rules | None] = contextvars.ContextVar(
+    "shard_rules", default=None
+)
+_axis_sizes_var: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "shard_axis_sizes", default=None
+)
+
+
+def make_rules(*, multi_pod: bool = False, overrides: Rules | None = None) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if multi_pod:
+        rules["batch"] = ("pod", "data")
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None, axis_sizes: dict | None = None):
+    """Activate logical-axis rules.  Pass the mesh's {axis: size} so
+    constraints are legalized consistently with input shardings (see
+    legalize_spec)."""
+    token = _rules_var.set(rules)
+    token2 = _axis_sizes_var.set(axis_sizes)
+    try:
+        yield
+    finally:
+        _rules_var.reset(token)
+        _axis_sizes_var.reset(token2)
+
+
+def current_rules() -> Rules | None:
+    return _rules_var.get()
+
+
+def current_axis_sizes() -> dict | None:
+    return _axis_sizes_var.get()
+
+
+def legalize_spec(shape: tuple, spec: P, axis_sizes: dict) -> P:
+    """Make `spec` divisibility-valid for `shape` by RELOCATING any mesh
+    axis on a non-dividing dim to the largest free dim it divides.
+
+    This is the layout policy, not just a fallback:
+      * GQA kv=8 weights against a model=16 axis -> row-parallel (d_model)
+      * KV caches with few kv heads -> sequence-sharded (flash-decode)
+      * odd vocab (92553) -> shard d_model instead
+
+    Deterministic, so model-internal constraints and jit input shardings
+    resolve to the SAME layout (no hidden reshards)."""
+    entries: list = list(spec) + [None] * (len(shape) - len(spec))
+
+    def factor(entry) -> int:
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        f = 1
+        for a in axes:
+            f *= axis_sizes[a]
+        return f
+
+    for i in range(len(entries)):
+        e = entries[i]
+        if e is None:
+            continue
+        f = factor(e)
+        if f <= 1 or shape[i] % f == 0:
+            continue
+        entries[i] = None
+        candidates = sorted(
+            (j for j in range(len(entries))
+             if entries[j] is None and shape[j] % f == 0 and shape[j] >= f),
+            key=lambda j: -shape[j])
+        if candidates:
+            entries[candidates[0]] = e
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def resolve(axes: Sequence[str | None], rules: Rules | None = None) -> P:
+    """Logical axes -> PartitionSpec under the active rules.  A mesh axis
+    may appear only once per spec: first logical occurrence wins (e.g. an
+    MoE expert weight [E, d, ff] with expert->model keeps ff replicated)."""
+    if rules is None:
+        rules = current_rules()
+    if rules is None:
+        return P()
+    entries = []
+    used: set = set()
+    for ax in axes:
+        entry = None if ax is None else rules.get(ax, None)
+        if entry is not None:
+            mesh_axes = entry if isinstance(entry, tuple) else (entry,)
+            if any(a in used for a in mesh_axes):
+                entry = None
+            else:
+                used.update(mesh_axes)
+        entries.append(entry)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without rules.
+    Legalized against the ambient mesh axis sizes so it always agrees with
+    the jit input layout."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = resolve(axes, rules)
+    sizes = current_axis_sizes()
+    if sizes:
+        spec = legalize_spec(x.shape, spec, sizes)
+    if not spec:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

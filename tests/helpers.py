@@ -1,0 +1,60 @@
+"""Shared test utilities."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_api
+from repro.models.vlm import VISION_DIM
+
+
+def reduced(arch: str):
+    cfg = get_config(arch + "-reduced")
+    return cfg, get_api(cfg)
+
+
+def make_batch(cfg, B, S, *, key=None, with_labels=True):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if with_labels:
+        batch["labels"] = tokens
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_patches, VISION_DIM), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.n_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_decode_consistency(arch: str, B: int = 2, S: int = 12,
+                               atol: float = 2e-3) -> float:
+    """Teacher-forced forward over S+1 tokens must agree with
+    prefill(S) -> decode_step(token_S) at the final position."""
+    cfg, api = reduced(arch)
+    key = jax.random.PRNGKey(3)
+    params = api.init_params(cfg, key)
+    tokens_full = jax.random.randint(key, (B, S + 1), 1, cfg.vocab_size)
+    extra_len = cfg.n_patches if cfg.family == "vlm" else 0
+    cache_len = S + 4 + extra_len
+
+    batch_s = make_batch(cfg, B, S, key=key, with_labels=False)
+    batch_s["tokens"] = tokens_full[:, :S]
+    batch_s1 = dict(batch_s)
+    batch_s1["tokens"] = tokens_full
+
+    logits_p, cache = api.prefill(cfg, params, batch_s, cache_len=cache_len)
+    logits_d, _ = api.decode_step(cfg, params, cache,
+                                  {"token": tokens_full[:, S]})
+    logits_f, _ = api.prefill(cfg, params, batch_s1, cache_len=cache_len + 1)
+    err = float(jnp.max(jnp.abs(logits_d - logits_f)))
+    assert err < atol, f"{arch}: decode/teacher-forced mismatch {err}"
+    return err
+
+
+def finite(x) -> bool:
+    return bool(np.isfinite(np.asarray(x)).all())

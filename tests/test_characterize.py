@@ -1,0 +1,82 @@
+"""Characterization-campaign driver tests (paper §5.1)."""
+
+import numpy as np
+
+from repro.core import characterize as ch
+
+
+def deterministic_measure(tin, tout):
+    e = 0.5 * tin + 2.0 * tout + 1e-2 * tin * tout
+    return e, e / 100.0
+
+
+def noisy_measure_factory(sigma, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def measure(tin, tout):
+        e, r = deterministic_measure(tin, tout)
+        return e * rng.lognormal(0, sigma), r * rng.lognormal(0, sigma)
+
+    return measure
+
+
+SMALL = ch.CampaignSettings(
+    vary_input_range=(8, 64), vary_output_range=(8, 64),
+    grid_range=(8, 64), max_trials=5, seed=0)
+
+
+class TestCampaign:
+    def test_covers_paper_conditions(self):
+        trials = ch.run_campaign("m", deterministic_measure, SMALL)
+        conds = {(t.condition, t.tau_in, t.tau_out) for t in trials}
+        # vary_input: tau_out fixed at 32 (paper §5.1.1)
+        assert ("vary_input", 8, 32) in conds
+        assert ("vary_input", 64, 32) in conds
+        # vary_output: tau_in fixed at 32 (paper §5.1.2)
+        assert ("vary_output", 32, 64) in conds
+        # grid covers the full cross product (paper §6.1)
+        grid = {(a, b) for c, a, b in conds if c == "grid"}
+        assert grid == {(a, b) for a in (8, 16, 32, 64) for b in (8, 16, 32, 64)}
+
+    def test_deterministic_measure_stops_at_min_trials(self):
+        trials = ch.run_campaign("m", deterministic_measure, SMALL)
+        per_cond = {}
+        for t in trials:
+            per_cond.setdefault((t.condition, t.tau_in, t.tau_out), []).append(t)
+        assert all(len(v) == SMALL.min_trials for v in per_cond.values())
+
+    def test_noisy_measure_needs_more_trials(self):
+        # runtimes in hundreds of seconds with 40% noise blow through the
+        # 0.5 s CI tolerance -> hits the max-trials cap
+        trials = ch.run_campaign("m", noisy_measure_factory(0.4), SMALL)
+        per_cond = {}
+        for t in trials:
+            per_cond.setdefault((t.condition, t.tau_in, t.tau_out), []).append(t)
+        assert max(len(v) for v in per_cond.values()) == SMALL.max_trials
+
+    def test_randomized_order_is_seeded(self):
+        t1 = ch.run_campaign("m", deterministic_measure, SMALL)
+        t2 = ch.run_campaign("m", deterministic_measure, SMALL)
+        assert [(t.tau_in, t.tau_out) for t in t1] == \
+               [(t.tau_in, t.tau_out) for t in t2]
+
+    def test_fit_profile_recovers_coeffs(self):
+        trials = ch.run_campaign("m", deterministic_measure, SMALL)
+        prof = ch.fit_profile_from_trials("m", 50.0, trials)
+        np.testing.assert_allclose(prof.energy.coeffs, [0.5, 2.0, 1e-2],
+                                   rtol=1e-6)
+        assert prof.energy.r_squared > 0.999
+
+    def test_anova_from_trials(self):
+        trials = ch.run_campaign("m", noisy_measure_factory(0.005), SMALL)
+        res = ch.anova_from_trials(trials)
+        assert res["energy"].factor_b.f_statistic > res["energy"].factor_a.f_statistic
+        assert res["runtime"].interaction.p_value < 0.05
+
+    def test_csv_roundtrip(self, tmp_path):
+        trials = ch.run_campaign("m", deterministic_measure, SMALL)
+        path = str(tmp_path / "t.csv")
+        ch.trials_to_csv(trials, path)
+        lines = open(path).read().strip().splitlines()
+        assert len(lines) == len(trials) + 1
+        assert lines[0].startswith("model,condition")

@@ -1,0 +1,55 @@
+"""Mini dry-run: lower + compile reduced configs on a small forced-host-
+device mesh, in a subprocess (device count must be set before jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax
+    from repro import shard
+    from repro.configs import get_config, INPUT_SHAPES
+    from repro.configs.shapes import InputShape
+    from repro.launch import sharding as shardrules
+    from repro.launch.dryrun import lower_one
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    out = {}
+    for arch in ["qwen3-1.7b", "granite-moe-3b-a800m", "mamba2-130m",
+                 "recurrentgemma-9b"]:
+        cfg = get_config(arch + "-reduced").replace(microbatch=4)
+        for shape_name, seq, batch, kind in [
+            ("train", 32, 8, "train"),
+            ("prefill", 64, 4, "prefill"),
+            ("decode", 64, 8, "decode"),
+        ]:
+            shape = InputShape(shape_name, seq, batch, kind)
+            rules = shardrules.build_rules(cfg, shape, multi_pod=False)
+            compiled, _, _ = lower_one(cfg, shape, mesh, rules)
+            mem = compiled.memory_analysis()
+            out[f"{arch}/{shape_name}"] = int(mem.temp_size_in_bytes)
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def test_mini_dryrun_all_kinds():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT ")]
+    assert line, proc.stdout
+    result = json.loads(line[0][len("RESULT "):])
+    assert len(result) == 12
+    for k, v in result.items():
+        assert v >= 0, k

@@ -1,0 +1,70 @@
+"""Energy/runtime/accuracy model tests (paper Eq. 1, 6, 7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+
+
+class TestBilinearModel:
+    def test_fit_and_predict(self):
+        rng = np.random.default_rng(0)
+        tin = rng.integers(8, 2048, 200).astype(float)
+        tout = rng.integers(8, 2048, 200).astype(float)
+        y = 1.5 * tin + 3.0 * tout + 0.01 * tin * tout
+        m = em.BilinearModel.fit(tin, tout, y)
+        np.testing.assert_allclose(m.coeffs, [1.5, 3.0, 0.01], rtol=1e-6)
+        assert m(10, 20) == pytest.approx(1.5 * 10 + 3.0 * 20 + 0.01 * 200)
+
+    def test_roundtrip_serialization(self, tmp_path):
+        prof = em.LLMProfile(
+            "x", em.BilinearModel((1.0, 2.0, 3.0), r_squared=0.98),
+            em.BilinearModel((0.1, 0.2, 0.3)), em.AccuracyModel(55.0))
+        path = str(tmp_path / "p.json")
+        em.save_profiles([prof], path)
+        back = em.load_profiles(path)[0]
+        assert back.name == "x"
+        assert back.energy.coeffs == (1.0, 2.0, 3.0)
+        assert back.energy.r_squared == pytest.approx(0.98)
+        assert back.accuracy.a_k == 55.0
+
+
+class TestAccuracyModel:
+    def test_eq1_form(self):
+        a = em.AccuracyModel(50.0)
+        assert a(10, 20) == pytest.approx(50.0 * 30)
+        # monotonically increasing in both arguments
+        assert a(11, 20) > a(10, 20)
+        assert a(10, 21) > a(10, 20)
+
+
+class TestNormalization:
+    def test_hat_ranges(self):
+        profs = [
+            em.LLMProfile("a", em.BilinearModel((0.1, 0.2, 1e-4)),
+                          em.BilinearModel((1e-3, 2e-3, 1e-6)),
+                          em.AccuracyModel(50.0)),
+            em.LLMProfile("b", em.BilinearModel((0.3, 0.6, 3e-4)),
+                          em.BilinearModel((3e-3, 6e-3, 3e-6)),
+                          em.AccuracyModel(60.0)),
+        ]
+        qs = [(8, 8), (100, 200), (2048, 2048)]
+        costs = em.normalized_costs(profs, qs)
+        assert costs.energy_hat.max() == pytest.approx(1.0)
+        assert costs.accuracy_hat.max() == pytest.approx(1.0)
+        assert (costs.energy_hat >= 0).all()     # positive-coefficient models
+        assert costs.energy.shape == (3, 2)
+
+    def test_objective_sign_structure(self):
+        profs = [
+            em.LLMProfile("a", em.BilinearModel((0.1, 0.2, 1e-4)),
+                          em.BilinearModel((1e-3, 2e-3, 1e-6)),
+                          em.AccuracyModel(50.0)),
+        ]
+        costs = em.normalized_costs(profs, [(64, 64)])
+        # zeta=0: objective = -accuracy_hat <= 0
+        assert em.objective_matrix(costs, 0.0)[0, 0] <= 0
+        # zeta=1: objective = energy_hat >= 0
+        assert em.objective_matrix(costs, 1.0)[0, 0] >= 0
+        with pytest.raises(ValueError):
+            em.objective_matrix(costs, -0.1)

@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import shard
+from repro.core import scheduler, stats
+from repro.core.energy_model import (
+    AccuracyModel,
+    BilinearModel,
+    LLMProfile,
+    normalized_costs,
+)
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+pos_coeff = st.floats(min_value=1e-6, max_value=10.0, allow_nan=False)
+
+
+@st.composite
+def profiles_strategy(draw, n_min=2, n_max=4):
+    n = draw(st.integers(n_min, n_max))
+    profs = []
+    for i in range(n):
+        e = BilinearModel(tuple(draw(pos_coeff) for _ in range(3)))
+        r = BilinearModel(tuple(draw(pos_coeff) * 1e-3 for _ in range(3)))
+        a = AccuracyModel(draw(st.floats(30.0, 80.0)))
+        profs.append(LLMProfile(f"m{i}", e, r, a))
+    return profs
+
+
+@st.composite
+def queries_strategy(draw, m_min=4, m_max=24):
+    m = draw(st.integers(m_min, m_max))
+    return [(draw(st.integers(1, 4096)), draw(st.integers(1, 4096)))
+            for _ in range(m)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants (the paper's Eqs. 3-5)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(profiles_strategy(), queries_strategy(),
+       st.floats(0.0, 1.0, allow_nan=False))
+def test_schedule_is_partition(profs, queries, zeta):
+    if len(queries) < len(profs):
+        return
+    asg = scheduler.schedule(profs, queries, zeta)
+    counts = asg.counts()
+    assert counts.sum() == len(queries)           # coverage + disjoint
+    assert (counts > 0).all()                     # non-empty shares
+    assert set(asg.assignee) <= set(range(len(profs)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(profiles_strategy(), queries_strategy(m_min=8))
+def test_energy_monotone_in_zeta(profs, queries):
+    # monotonicity is a property of the unconstrained scalarization (the
+    # Eq. 3 repair can perturb it by one query at extreme instances)
+    zs = [0.0, 0.25, 0.5, 0.75, 1.0]
+    es = [scheduler.schedule(profs, queries, z, enforce_nonempty=False)
+          .total_energy_j for z in zs]
+    for a, b in zip(es, es[1:]):
+        assert b <= a + 1e-6 * max(1.0, abs(a))
+
+
+@settings(max_examples=25, deadline=None)
+@given(profiles_strategy(), queries_strategy(m_min=8),
+       st.floats(0.0, 1.0, allow_nan=False))
+def test_schedule_no_worse_than_baselines(profs, queries, zeta):
+    opt = scheduler.schedule(profs, queries, zeta).objective
+    rr = scheduler.schedule_round_robin(profs, queries, zeta=zeta).objective
+    rnd = scheduler.schedule_random(profs, queries, zeta=zeta).objective
+    assert opt <= rr + 1e-9
+    assert opt <= rnd + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(profiles_strategy(), queries_strategy())
+def test_normalization_bounds(profs, queries):
+    costs = normalized_costs(profs, queries)
+    assert costs.energy_hat.max() <= 1.0 + 1e-12
+    assert costs.accuracy_hat.max() <= 1.0 + 1e-12
+    assert (costs.energy_hat >= 0).all()          # positive coefficients
+    assert (costs.accuracy_hat >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# OLS: recovery of planted coefficients
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.tuples(pos_coeff, pos_coeff,
+                 st.floats(1e-8, 1e-2)), st.integers(0, 10_000))
+def test_ols_recovers_planted(coeffs, seed):
+    rng = np.random.default_rng(seed)
+    tin = rng.integers(8, 2048, 100).astype(float)
+    tout = rng.integers(8, 2048, 100).astype(float)
+    y = coeffs[0] * tin + coeffs[1] * tout + coeffs[2] * tin * tout
+    m = BilinearModel.fit(tin, tout, y)
+    np.testing.assert_allclose(m.coeffs, coeffs, rtol=1e-5, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# sharding legalization invariants
+# ---------------------------------------------------------------------------
+
+_AXES = {"data": 16, "model": 16}
+spec_entry = st.sampled_from([None, "data", "model", ("data", "model")])
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 8192), min_size=1, max_size=5),
+       st.lists(spec_entry, min_size=0, max_size=5))
+def test_legalize_spec_always_valid(shape, entries):
+    from jax.sharding import PartitionSpec as P
+    entries = entries[: len(shape)]
+    # drop duplicate axis usage to form a plausible input spec
+    used = set()
+    clean = []
+    for e in entries:
+        axes = e if isinstance(e, tuple) else (e,) if e else ()
+        if any(a in used for a in axes):
+            clean.append(None)
+        else:
+            used.update(axes)
+            clean.append(e)
+    spec = P(*clean)
+    out = shard.legalize_spec(tuple(shape), spec, _AXES)
+    # 1) validity: every sharded dim divisible by its factor
+    out_entries = list(out) + [None] * (len(shape) - len(out))
+    seen = set()
+    for dim, e in zip(shape, out_entries):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        f = 1
+        for a in axes:
+            assert a not in seen        # 2) no duplicate mesh axes
+            seen.add(a)
+            f *= _AXES[a]
+        assert dim % f == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30))
+def test_f_sf_is_probability(dfn, dfd):
+    for f in (0.1, 1.0, 2.5, 10.0):
+        p = stats.f_sf(f, dfn, dfd)
+        assert 0.0 <= p <= 1.0

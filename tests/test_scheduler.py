@@ -1,0 +1,146 @@
+"""Scheduler tests: optimality, constraints, baselines (paper §4/§6.3)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import scheduler
+from repro.core.energy_model import (
+    AccuracyModel,
+    BilinearModel,
+    LLMProfile,
+    normalized_costs,
+    objective_matrix,
+)
+
+
+def make_profiles():
+    small = LLMProfile(
+        "small",
+        BilinearModel((0.1, 0.4, 1e-4)),
+        BilinearModel((1e-3, 4e-3, 1e-6)),
+        AccuracyModel(50.0))
+    mid = LLMProfile(
+        "mid",
+        BilinearModel((0.25, 1.0, 2.5e-4)),
+        BilinearModel((2.5e-3, 1e-2, 2.5e-6)),
+        AccuracyModel(58.0))
+    big = LLMProfile(
+        "big",
+        BilinearModel((0.5, 2.0, 5e-4)),
+        BilinearModel((5e-3, 2e-2, 5e-6)),
+        AccuracyModel(65.0))
+    return [small, mid, big]
+
+
+def make_queries(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(int(a), int(b)) for a, b in
+            zip(rng.integers(8, 1024, n), rng.integers(8, 1024, n))]
+
+
+class TestSchedule:
+    def test_partition_properties(self):
+        profs, qs = make_profiles(), make_queries()
+        asg = scheduler.schedule(profs, qs, 0.5)
+        counts = asg.counts()
+        assert counts.sum() == len(qs)            # coverage (Eq. 4)
+        assert (counts > 0).all()                 # non-empty shares (Eq. 3)
+
+    def test_matches_bruteforce_small(self):
+        profs = make_profiles()
+        qs = make_queries(6, seed=1)
+        costs = normalized_costs(profs, qs)
+        for zeta in (0.0, 0.3, 0.7, 1.0):
+            C = objective_matrix(costs, zeta)
+            best, best_asg = np.inf, None
+            for combo in itertools.product(range(3), repeat=len(qs)):
+                if len(set(combo)) < 3:
+                    continue  # must satisfy non-empty constraint
+                val = C[np.arange(len(qs)), list(combo)].sum()
+                if val < best:
+                    best, best_asg = val, combo
+            asg = scheduler.schedule(profs, qs, zeta)
+            assert asg.objective == pytest.approx(best, rel=1e-9), zeta
+
+    def test_zeta_extremes(self):
+        profs, qs = make_profiles(), make_queries()
+        # zeta=1: pure energy minimization -> most queries on 'small'
+        e = scheduler.schedule(profs, qs, 1.0)
+        assert e.counts()[0] >= len(qs) - 2
+        # zeta=0: pure accuracy -> most queries on 'big'
+        a = scheduler.schedule(profs, qs, 0.0)
+        assert a.counts()[2] >= len(qs) - 2
+        assert e.total_energy_j < a.total_energy_j
+
+    def test_energy_monotone_in_zeta(self):
+        profs, qs = make_profiles(), make_queries(100, seed=3)
+        energies = [scheduler.schedule(profs, qs, z).total_energy_j
+                    for z in np.linspace(0, 1, 11)]
+        assert all(e2 <= e1 + 1e-9 for e1, e2 in zip(energies, energies[1:]))
+
+    def test_invalid_zeta(self):
+        profs, qs = make_profiles(), make_queries(5)
+        with pytest.raises(ValueError):
+            scheduler.schedule(profs, qs, 1.5)
+
+
+class TestCapacitated:
+    def test_respects_gamma(self):
+        profs, qs = make_profiles(), make_queries(100, seed=4)
+        gamma = (0.05, 0.2, 0.75)     # the paper's case-study partition
+        asg = scheduler.schedule_capacitated(profs, qs, 0.5, gamma)
+        counts = asg.counts()
+        caps = np.array([5, 20, 75])
+        assert (counts <= caps).all()
+        assert counts.sum() == 100
+
+    def test_matches_bruteforce_small(self):
+        profs = make_profiles()
+        qs = make_queries(6, seed=5)
+        gamma = (0.34, 0.33, 0.33)    # caps 3/2/2 for m=6 -> ceil allocation
+        costs = normalized_costs(profs, qs)
+        caps = scheduler._capacities_from_gamma(gamma, len(qs))
+        C = objective_matrix(costs, 0.5)
+        best = np.inf
+        for combo in itertools.product(range(3), repeat=len(qs)):
+            c = np.bincount(combo, minlength=3)
+            if (c > caps).any():
+                continue
+            best = min(best, C[np.arange(len(qs)), list(combo)].sum())
+        asg = scheduler.schedule_capacitated(profs, qs, 0.5, gamma)
+        assert asg.objective == pytest.approx(best, rel=1e-9)
+
+    def test_gamma_must_sum_to_one(self):
+        profs, qs = make_profiles(), make_queries(10)
+        with pytest.raises(ValueError):
+            scheduler.schedule_capacitated(profs, qs, 0.5, (0.5, 0.2, 0.2))
+
+
+class TestBaselines:
+    def test_round_robin_counts(self):
+        profs, qs = make_profiles(), make_queries(10)
+        asg = scheduler.schedule_round_robin(profs, qs)
+        assert asg.counts().tolist() == [4, 3, 3]
+
+    def test_random_deterministic_by_seed(self):
+        profs, qs = make_profiles(), make_queries(30)
+        a = scheduler.schedule_random(profs, qs, seed=7)
+        b = scheduler.schedule_random(profs, qs, seed=7)
+        assert (a.assignee == b.assignee).all()
+
+    def test_scheduler_beats_baselines_on_objective(self):
+        profs, qs = make_profiles(), make_queries(200, seed=8)
+        for zeta in (0.2, 0.5, 0.8):
+            opt = scheduler.schedule(profs, qs, zeta).objective
+            for base in (scheduler.schedule_round_robin(profs, qs, zeta=zeta),
+                         scheduler.schedule_random(profs, qs, zeta=zeta),
+                         scheduler.schedule_single_model(profs, qs, 1, zeta=zeta)):
+                assert opt <= base.objective + 1e-9
+
+    def test_zeta_sweep_shapes(self):
+        profs, qs = make_profiles(), make_queries(50)
+        sweep = scheduler.zeta_sweep(profs, qs, [0.0, 0.5, 1.0])
+        assert len(sweep) == 3
+        assert sweep[0].total_energy_j >= sweep[-1].total_energy_j

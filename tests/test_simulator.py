@@ -1,0 +1,96 @@
+"""Analytic energy/runtime simulator tests — the structural claims the
+paper's measurements exhibit (Figures 1 & 2)."""
+
+import pytest
+
+from repro.configs import PAPER_ZOO, get_config
+from repro.energy import AnalyticLLMSimulator, TPU_NODE, min_accelerators
+from repro.energy.costs import kv_bytes_per_token, pass_costs
+
+
+class TestSimulator:
+    def test_monotone_in_tokens(self):
+        sim = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], noise_sigma=0.0)
+        e1, r1 = sim.measure(64, 64)
+        e2, r2 = sim.measure(128, 64)
+        e3, r3 = sim.measure(64, 128)
+        assert e2 > e1 and r2 > r1
+        assert e3 > e1 and r3 > r1
+
+    def test_output_tokens_cost_more_than_input(self):
+        """No KV cache: each output token re-runs the prefix, so tau_out
+        dominates (the paper's central ANOVA finding)."""
+        sim = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], kv_cache=False,
+                                   noise_sigma=0.0)
+        _, r_in = sim.measure(512, 32)
+        _, r_out = sim.measure(32, 512)
+        assert r_out > 2.0 * r_in
+
+    def test_kv_cache_saves_energy(self):
+        on = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], kv_cache=True,
+                                  noise_sigma=0.0)
+        off = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], kv_cache=False,
+                                   noise_sigma=0.0)
+        e_on, r_on = on.measure(128, 256)
+        e_off, r_off = off.measure(128, 256)
+        assert e_on < e_off and r_on < r_off
+
+    def test_smoe_beats_dense_large(self):
+        """Paper §5.2/5.3: Mixtral's energy/token beats the dense behemoths."""
+        mix = AnalyticLLMSimulator(PAPER_ZOO["mixtral-8x7b"], kv_cache=False,
+                                   noise_sigma=0.0)
+        l70 = AnalyticLLMSimulator(PAPER_ZOO["llama2-70b"], kv_cache=False,
+                                   noise_sigma=0.0)
+        e_mix, _ = mix.measure(1024, 256)
+        e_l70, _ = l70.measure(1024, 256)
+        assert e_mix < e_l70
+
+    def test_bigger_models_cost_more(self):
+        e7 = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], noise_sigma=0.0)
+        e70 = AnalyticLLMSimulator(PAPER_ZOO["llama2-70b"], noise_sigma=0.0)
+        assert e70.measure(256, 64)[0] > e7.measure(256, 64)[0]
+
+    def test_noise_is_seeded(self):
+        a = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], seed=3)
+        b = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], seed=3)
+        assert a.measure(64, 64) == b.measure(64, 64)
+
+    def test_tpu_node_option(self):
+        sim = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], node=TPU_NODE,
+                                   noise_sigma=0.0)
+        e, r = sim.measure(64, 64)
+        assert e > 0 and r > 0
+
+
+class TestPassCosts:
+    def test_ssm_has_no_cache_growth(self):
+        cfg = get_config("mamba2-130m")
+        assert kv_bytes_per_token(cfg) == 0.0
+        # decode cost flat in context position
+        c1 = pass_costs(cfg, 1, 1024, 32)
+        c2 = pass_costs(cfg, 1, 65536, 32)
+        assert c1.hbm_bytes == pytest.approx(c2.hbm_bytes)
+
+    def test_mla_cache_much_smaller_than_gqa(self):
+        v3 = get_config("deepseek-v3-671b")
+        d67 = get_config("deepseek-67b")
+        # per-token-per-layer latent (576*2 bytes) vs 8 kv heads * 128 * 2 * 2
+        assert kv_bytes_per_token(v3) / v3.n_layers < \
+            kv_bytes_per_token(d67) / d67.n_layers
+
+    def test_window_bounds_decode_reads(self):
+        cfg = get_config("mistral-7b")  # window 4096
+        near = pass_costs(cfg, 1, 4096, 32)
+        far = pass_costs(cfg, 1, 262144, 32)
+        assert far.hbm_bytes == pytest.approx(near.hbm_bytes)
+
+    def test_moe_decode_touches_fewer_weights(self):
+        cfg = get_config("mixtral-8x7b")
+        dense_cfg = get_config("llama2-70b")
+        moe = pass_costs(cfg, 1, 128, 1)       # single-token decode
+        dense = pass_costs(dense_cfg, 1, 128, 1)
+        assert moe.hbm_bytes < dense.hbm_bytes
+
+    def test_min_accelerators(self):
+        assert min_accelerators(10e9, TPU_NODE.accel) == 1
+        assert min_accelerators(100e9, TPU_NODE.accel) > 5

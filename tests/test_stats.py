@@ -1,0 +1,114 @@
+"""Unit tests for the statistics layer (OLS / ANOVA / F-dist / CI rule)."""
+
+import numpy as np
+import pytest
+
+from repro.core import stats
+
+
+class TestSpecialFunctions:
+    def test_f_sf_known_values(self):
+        # cross-checked against scipy.stats.f.sf offline
+        assert stats.f_sf(1.0, 1, 1) == pytest.approx(0.5, abs=1e-9)
+        assert stats.f_sf(2.70, 3, 100) == pytest.approx(0.04972, abs=2e-4)
+        assert stats.f_sf(4.0, 2, 50) == pytest.approx(0.02439, abs=2e-4)
+
+    def test_f_sf_extremes(self):
+        assert stats.f_sf(0.0, 3, 10) == 1.0
+        assert stats.f_sf(float("inf"), 3, 10) == 0.0
+        assert 0.0 <= stats.f_sf(1e6, 5, 200) < 1e-12
+
+    def test_betainc_bounds(self):
+        assert stats.betainc_reg(2.0, 3.0, 0.0) == 0.0
+        assert stats.betainc_reg(2.0, 3.0, 1.0) == 1.0
+        # I_x(1,1) = x (uniform)
+        for x in (0.1, 0.5, 0.9):
+            assert stats.betainc_reg(1.0, 1.0, x) == pytest.approx(x, abs=1e-10)
+
+    def test_t_sf_symmetry(self):
+        p = stats.t_sf(2.0, 10)
+        assert stats.t_sf(-2.0, 10) == pytest.approx(1.0 - p, abs=1e-12)
+
+    def test_t_critical_table(self):
+        assert stats.t_critical_975(1) == pytest.approx(12.706)
+        assert stats.t_critical_975(30) == pytest.approx(2.042)
+        assert stats.t_critical_975(1000) == pytest.approx(1.96)
+
+
+class TestOLS:
+    def test_recovers_planted_coefficients(self):
+        rng = np.random.default_rng(0)
+        tin = rng.integers(8, 2048, 400).astype(float)
+        tout = rng.integers(8, 2048, 400).astype(float)
+        y = 0.5 * tin + 2.0 * tout + 0.003 * tin * tout
+        X = stats.bilinear_design(tin, tout)
+        res = stats.ols(X, y)
+        np.testing.assert_allclose(res.params, [0.5, 2.0, 0.003], rtol=1e-8)
+        assert res.r_squared > 0.999999
+
+    def test_noise_keeps_high_r2(self):
+        rng = np.random.default_rng(1)
+        tin = rng.integers(8, 2048, 400).astype(float)
+        tout = rng.integers(8, 2048, 400).astype(float)
+        signal = 0.5 * tin + 2.0 * tout + 0.003 * tin * tout
+        y = signal + rng.normal(0, 0.01 * signal.std(), 400)
+        res = stats.ols(stats.bilinear_design(tin, tout), y)
+        assert res.r_squared > 0.99
+        assert res.f_pvalue < 1e-20
+
+    def test_rank_deficient_raises(self):
+        X = np.ones((10, 2))
+        with pytest.raises(ValueError):
+            stats.ols(X, np.arange(10.0))
+
+    def test_needs_more_rows_than_cols(self):
+        with pytest.raises(ValueError):
+            stats.ols(np.eye(3), np.ones(3))
+
+
+class TestANOVA:
+    def test_two_way_with_interaction(self):
+        rng = np.random.default_rng(2)
+        A, B, Y = [], [], []
+        for a in (8, 16, 32, 64):
+            for b in (8, 16, 32, 64):
+                for _ in range(3):
+                    A.append(a)
+                    B.append(b)
+                    Y.append(1.0 * a + 10.0 * b + 0.05 * a * b + rng.normal())
+        res = stats.anova_two_way(A, B, Y)
+        # output factor dominates, all three significant (paper Table 2 shape)
+        assert res.factor_b.f_statistic > res.factor_a.f_statistic
+        assert res.interaction.p_value < 1e-6
+        assert res.factor_a.p_value < 1e-6
+
+    def test_no_interaction_detected(self):
+        rng = np.random.default_rng(3)
+        A, B, Y = [], [], []
+        for a in (1, 2, 3):
+            for b in (1, 2, 3):
+                for _ in range(5):
+                    A.append(a)
+                    B.append(b)
+                    Y.append(2.0 * a + 3.0 * b + rng.normal(0, 0.1))
+        res = stats.anova_two_way(A, B, Y)
+        assert res.interaction.p_value > 0.01
+
+    def test_needs_replicates(self):
+        with pytest.raises(ValueError):
+            stats.anova_two_way([1, 1, 2, 2], [1, 2, 1, 2], [1.0, 2.0, 3.0, 4.0])
+
+
+class TestStoppingRule:
+    def test_stops_on_tight_ci(self):
+        assert stats.should_stop_trials([10.0, 10.01, 10.02, 9.99])
+
+    def test_continues_on_wide_ci(self):
+        assert not stats.should_stop_trials([1.0, 20.0, 5.0])
+
+    def test_max_trials_cap(self):
+        wild = list(np.random.default_rng(0).normal(0, 100, 25))
+        assert stats.should_stop_trials(wild, max_trials=25)
+
+    def test_single_sample_never_stops(self):
+        assert not stats.should_stop_trials([3.0])
