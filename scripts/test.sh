@@ -1,0 +1,21 @@
+#!/usr/bin/env sh
+# Test tiers (run from anywhere; cd's to the repo root).
+#
+#   scripts/test.sh          tier-1 verify: the full suite, fail-fast
+#                            (the ROADMAP command, run before every PR)
+#   scripts/test.sh fast     fast tier: skips @pytest.mark.slow
+#                            (compile dry-runs, end-to-end pipelines);
+#                            finishes in well under a minute
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tier="${1:-tier1}"
+[ $# -gt 0 ] && shift
+
+case "$tier" in
+  fast)  exec python -m pytest -x -q -m "not slow" "$@" ;;
+  tier1) exec python -m pytest -x -q "$@" ;;
+  *)     echo "usage: scripts/test.sh [tier1|fast] [pytest args...]" >&2
+         exit 2 ;;
+esac

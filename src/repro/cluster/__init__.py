@@ -1,0 +1,62 @@
+"""Online cluster-serving simulator: the offline→online bridge.
+
+The paper derives workload-based energy models and uses them for *offline*
+energy-optimal scheduling over a known workload.  This package serves the
+same workloads as *streaming traffic* against a heterogeneous fleet and
+quantifies the offline→online optimality gap.
+
+Module map (the event model, and how the pieces plug together):
+
+    trace.py    — TracedRequest / ArrivalTrace + generators (Poisson,
+                  bursty Gamma, diurnal thinning, replay of the offline
+                  Alpaca-like case-study workload).  A trace is the only
+                  stochastic input; everything downstream is deterministic.
+    node.py     — ClusterNode: one model replica on one hardware Node.
+                  Continuous batching at phase granularity (batched prefill,
+                  decode segments to the next completion boundary, joiner
+                  prefills in between).  Per-phase time/energy delegates to
+                  repro.energy.simulator, so an uncontended node conserves
+                  energy against the per-request AnalyticLLMSimulator.
+    policies.py — online routers: round_robin, random, least_loaded,
+                  greedy_energy (profile-predicted argmin), zeta_online
+                  (Eq. 2 with causal running normalizers), and
+                  offline_oracle (replays core.scheduler.schedule() over
+                  the full trace — the lower bound on the Eq. 2 objective).
+                  New policies subclass RoutingPolicy and implement
+                  select(req, nodes, now); attach() gives them the fleet
+                  and (for oracle-grade information models) the trace.
+    sim.py      — the discrete-event loop.  Two event kinds: arrivals and
+                  node phase completions, processed in (time, seq) order so
+                  ties are deterministic.  compare_policies() reruns a trace
+                  over fresh fleets for an apples-to-apples policy table.
+    metrics.py  — ClusterReport: busy vs idle energy split, J/token,
+                  latency p50/p95/p99, slowdown-SLO attainment, per-node
+                  utilization, and the realized Eq. 2 objective used to
+                  measure the gap to the offline oracle.
+
+Entry points: benchmarks/fig4_online_gap.py (arrival-rate × ζ sweep) and
+examples/cluster_sim.py (a narrated single run).
+"""
+
+from repro.cluster.metrics import ClusterReport, NodeStats, RequestRecord  # noqa: F401
+from repro.cluster.node import ClusterNode  # noqa: F401
+from repro.cluster.policies import (  # noqa: F401
+    DEFAULT_POLICIES,
+    GreedyEnergyPolicy,
+    LeastLoadedPolicy,
+    OfflineOraclePolicy,
+    RandomPolicy,
+    RoundRobinPolicy,
+    RoutingPolicy,
+    ZetaOnlinePolicy,
+)
+from repro.cluster.sim import compare_policies, fresh_nodes, simulate_cluster  # noqa: F401
+from repro.cluster.trace import (  # noqa: F401
+    ArrivalTrace,
+    TracedRequest,
+    bursty_trace,
+    diurnal_trace,
+    poisson_trace,
+    replay_trace,
+    timestamped_trace,
+)

@@ -1,0 +1,149 @@
+"""Aggregate metrics for a cluster run.
+
+Energy accounting is split into *busy* energy (accelerator dynamic+idle
+during phases plus the host serving draw — exactly what the per-request
+AnalyticLLMSimulator would report) and *idle* energy (node idle power over
+the gaps), so the conservation invariant against the offline simulator can
+be stated on busy energy alone while fleet-level J/token still includes
+the cost of keeping under-utilized replicas powered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    request_id: int
+    node_id: int
+    model: str
+    tau_in: int
+    tau_out: int
+    arrival_s: float
+    start_s: float
+    finish_s: float
+    energy_j: float             # attributed busy-energy share
+    isolated_runtime_s: float   # uncontended batch-1 service time
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.start_s - self.arrival_s
+
+    @property
+    def slowdown(self) -> float:
+        if self.isolated_runtime_s <= 0:
+            return 1.0
+        return self.latency_s / self.isolated_runtime_s
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeStats:
+    node_id: int
+    model: str
+    n_served: int
+    busy_s: float
+    busy_energy_j: float
+    idle_energy_j: float
+    utilization: float          # busy_s / makespan
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterReport:
+    policy: str
+    zeta: float
+    records: tuple[RequestRecord, ...]
+    node_stats: tuple[NodeStats, ...]
+    makespan_s: float
+    objective: float            # Eq. 2 value of the realized assignment
+    predicted_energy_j: float   # Σ e_K(q) under the fitted profiles
+
+    # --- totals -----------------------------------------------------------
+    @property
+    def total_busy_energy_j(self) -> float:
+        return sum(s.busy_energy_j for s in self.node_stats)
+
+    @property
+    def total_idle_energy_j(self) -> float:
+        return sum(s.idle_energy_j for s in self.node_stats)
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.total_busy_energy_j + self.total_idle_energy_j
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.tau_in + r.tau_out for r in self.records)
+
+    @property
+    def j_per_token(self) -> float:
+        tok = self.total_tokens
+        return self.total_energy_j / tok if tok else 0.0
+
+    # --- latency ----------------------------------------------------------
+    def latency_percentile(self, q: float) -> float:
+        lat = [r.latency_s for r in self.records]
+        return float(np.percentile(lat, q)) if lat else 0.0
+
+    @property
+    def latency_p50(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self.latency_percentile(95)
+
+    @property
+    def latency_p99(self) -> float:
+        return self.latency_percentile(99)
+
+    @property
+    def mean_latency_s(self) -> float:
+        lat = [r.latency_s for r in self.records]
+        return float(np.mean(lat)) if lat else 0.0
+
+    def slo_attainment(self, *, slo_s: float | None = None,
+                       slowdown: float = 3.0) -> float:
+        """Fraction of requests meeting the SLO: an absolute deadline if
+        slo_s is given, else latency ≤ slowdown × isolated runtime."""
+        if not self.records:
+            return 1.0
+        if slo_s is not None:
+            ok = sum(r.latency_s <= slo_s for r in self.records)
+        else:
+            ok = sum(r.slowdown <= slowdown for r in self.records)
+        return ok / len(self.records)
+
+    # --- display ----------------------------------------------------------
+    def summary(self) -> str:
+        return (f"{self.policy:>15s}: E={self.total_energy_j:12.0f}J "
+                f"(busy={self.total_busy_energy_j:.0f} idle={self.total_idle_energy_j:.0f}) "
+                f"pred={self.predicted_energy_j:.0f}J obj={self.objective:+.3f} "
+                f"J/tok={self.j_per_token:7.2f} "
+                f"p50={self.latency_p50:6.2f}s p95={self.latency_p95:6.2f}s "
+                f"p99={self.latency_p99:6.2f}s "
+                f"slo={self.slo_attainment():5.1%} "
+                f"util={[round(s.utilization, 2) for s in self.node_stats]}")
+
+
+def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
+    out = []
+    for n in nodes:
+        idle_s = max(0.0, makespan_s - n.busy_s)
+        out.append(NodeStats(
+            node_id=n.node_id,
+            model=n.model_name,
+            n_served=n.n_served,
+            busy_s=n.busy_s,
+            busy_energy_j=n.busy_energy_j,
+            idle_energy_j=idle_s * n.idle_power_w,
+            utilization=(n.busy_s / makespan_s) if makespan_s > 0 else 0.0,
+        ))
+    return tuple(out)

@@ -1,0 +1,185 @@
+"""Per-node serving state machine with continuous batching.
+
+A ClusterNode hosts one model replica on one hardware Node and serves the
+requests a routing policy sends it.  Service is phase-granular:
+
+  * prefill phase — up to max_batch waiting requests are admitted together
+    and their (padded) prompts processed in one batched pass;
+  * decode segment — the active batch decodes until the *next completion
+    boundary* (the smallest remaining τout among members), after which
+    finished requests leave and new waiting requests may join via a joiner
+    prefill.  This is iteration-level continuous batching coarsened to
+    completion boundaries, which keeps the event count O(requests) instead
+    of O(tokens).
+
+Time and energy per phase delegate to repro.energy.simulator
+(AnalyticLLMSimulator.prefill_cost / decode_cost) on the node's hardware
+(repro.energy.hardware.Node), so an uncontended node reproduces the
+per-request simulator's PhaseBreakdown exactly — the energy-conservation
+invariant tested in tests/test_cluster.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from repro.core.energy_model import LLMProfile
+from repro.energy.hardware import Node, SWING_NODE
+from repro.energy.simulator import AnalyticLLMSimulator
+from repro.models.common import ModelConfig
+
+from repro.cluster.trace import TracedRequest
+
+
+@dataclasses.dataclass
+class _InFlight:
+    req: TracedRequest
+    start_s: float              # first service (prefill start)
+    generated: int = 0          # decode tokens produced so far
+    energy_j: float = 0.0       # attributed share of phase energy
+
+    @property
+    def remaining(self) -> int:
+        return self.req.tau_out - self.generated
+
+    @property
+    def context(self) -> int:
+        return self.req.tau_in + self.generated
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    req: TracedRequest
+    start_s: float
+    finish_s: float
+    energy_j: float             # attributed accelerator+host joules
+    isolated_runtime_s: float   # batch-1 uncontended service time (slowdown SLO)
+
+
+class ClusterNode:
+    """One model replica on one hardware node, with a waiting queue and a
+    continuously-batched active set.  Driven by repro.cluster.sim."""
+
+    def __init__(
+        self,
+        node_id: int,
+        model_cfg: ModelConfig,
+        profile: LLMProfile,
+        hardware: Node = SWING_NODE,
+        *,
+        max_batch: int = 8,
+        kv_cache: bool = True,
+        decode_chunk: int = 256,
+    ):
+        self.node_id = node_id
+        self.model_cfg = model_cfg
+        self.profile = profile
+        self.max_batch = max_batch
+        self.sim = AnalyticLLMSimulator(
+            model_cfg, hardware, batch=1, kv_cache=kv_cache,
+            noise_sigma=0.0, decode_chunk=decode_chunk)
+        self.hardware = self.sim.node  # n_accel resolved to fit the weights
+
+        self.waiting: deque[TracedRequest] = deque()
+        self.active: list[_InFlight] = []
+        self._phase_end_s: float | None = None
+        self._phase_members: list[_InFlight] = []
+        self._phase_steps: int = 0
+
+        # aggregate accounting
+        self.busy_s = 0.0
+        self.busy_energy_j = 0.0
+        self.n_served = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def model_name(self) -> str:
+        return self.profile.name
+
+    @property
+    def busy(self) -> bool:
+        return self._phase_end_s is not None
+
+    def load(self) -> int:
+        """Queue depth + in-flight count (the least-loaded policy signal)."""
+        return len(self.waiting) + len(self.active)
+
+    @property
+    def idle_power_w(self) -> float:
+        a, h = self.hardware.accel, self.hardware.host
+        return a.idle_w * self.hardware.n_accel + h.idle_w
+
+    # ------------------------------------------------------------------
+    def enqueue(self, req: TracedRequest, now: float) -> float | None:
+        """Accept a routed request.  Returns the end time of a newly started
+        phase if the node was idle, else None (the request waits)."""
+        self.waiting.append(req)
+        if not self.busy:
+            return self._start_phase(now)
+        return None
+
+    def _charge(self, members: list[_InFlight], t: float, e_accel: float) -> None:
+        e_total = e_accel + self.sim.host_power_w * t
+        self.busy_s += t
+        self.busy_energy_j += e_total
+        share = e_total / len(members)
+        for m in members:
+            m.energy_j += share
+
+    def _start_phase(self, now: float) -> float | None:
+        """Pick the next phase; returns its end time (None if going idle)."""
+        slots = self.max_batch - len(self.active)
+        if slots > 0 and self.waiting:
+            # (joiner) prefill for as many waiting requests as fit
+            joiners = [self.waiting.popleft()
+                       for _ in range(min(slots, len(self.waiting)))]
+            members = [_InFlight(r, start_s=now) for r in joiners]
+            t, e = self.sim.prefill_cost(max(r.tau_in for r in joiners),
+                                         batch=len(joiners))
+            self._charge(members, t, e)
+            self.active.extend(members)
+            self._phase_members = members
+            self._phase_steps = 0
+            self._phase_end_s = now + t
+            return self._phase_end_s
+        if self.active:
+            # decode to the next completion boundary (padded batch: every
+            # step attends up to the longest member context)
+            n_steps = min(m.remaining for m in self.active)
+            base = max(m.context for m in self.active)
+            t, e = self.sim.decode_cost(base, n_steps, batch=len(self.active))
+            self._charge(self.active, t, e)
+            self._phase_members = list(self.active)
+            self._phase_steps = n_steps
+            self._phase_end_s = now + t
+            return self._phase_end_s
+        self._phase_end_s = None
+        return None
+
+    def on_phase_end(self, now: float) -> tuple[list[Completion], float | None]:
+        """Advance past the finished phase.  Returns (completions, next
+        phase end time or None if the node went idle)."""
+        assert self._phase_end_s is not None
+        done: list[Completion] = []
+        for m in self._phase_members:
+            m.generated += self._phase_steps
+        # τout == 0 requests complete straight after their prefill, so this
+        # check runs after every phase, not only decode segments
+        finished = [m for m in self.active if m.remaining <= 0]
+        if finished:
+            self.active = [m for m in self.active if m.remaining > 0]
+            for m in finished:
+                self.n_served += 1
+                done.append(Completion(
+                    req=m.req,
+                    start_s=m.start_s,
+                    finish_s=now,
+                    energy_j=m.energy_j,
+                    isolated_runtime_s=self.sim.simulate(
+                        m.req.tau_in, m.req.tau_out).runtime_s,
+                ))
+        self._phase_members = []
+        self._phase_steps = 0
+        self._phase_end_s = None
+        return done, self._start_phase(now)

@@ -1,0 +1,194 @@
+"""Pluggable online routing policies.
+
+A policy sees each request exactly once, at its arrival instant, and must
+pick a node before the next arrival — the online counterpart of the
+paper's offline partition.  The common interface:
+
+    policy.attach(nodes, trace, zeta)   # once, before the event loop
+    policy.select(req, nodes, now) -> node_id
+
+`attach` may precompute whatever the policy's information model allows:
+the load-based policies use nothing; the energy-aware policies use the
+fitted LLMProfiles (the paper's offline-knowledge assumption for τout,
+citing Zheng et al. for online estimation); the offline oracle uses the
+*entire* trace and replays core.scheduler.schedule() — the paper's exact
+optimum, serving as the lower bound every online policy is measured
+against (the offline→online gap).
+
+ZetaOnlinePolicy implements the paper's "dynamically normalize ... by the
+largest known value" rule *causally*: its normalizers grow as requests
+stream in, so early routing decisions use stale maxima — a genuine source
+of online regret that vanishes as the trace warms up.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.energy_model import LLMProfile, normalized_costs, objective_matrix
+from repro.core.scheduler import schedule
+
+from repro.cluster.trace import ArrivalTrace, TracedRequest
+
+
+def unique_profiles(nodes: Sequence) -> list[LLMProfile]:
+    """Distinct hosted models in node order (replicas collapse)."""
+    seen: dict[str, LLMProfile] = {}
+    for n in nodes:
+        seen.setdefault(n.profile.name, n.profile)
+    return list(seen.values())
+
+
+class RoutingPolicy:
+    name = "base"
+
+    def attach(self, nodes: Sequence, trace: ArrivalTrace, zeta: float) -> None:
+        pass
+
+    def select(self, req: TracedRequest, nodes: Sequence, now: float) -> int:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _least_loaded(candidates: Sequence) -> int:
+        best = min(candidates, key=lambda n: (n.load(), n.node_id))
+        return best.node_id
+
+    @staticmethod
+    def _nodes_hosting(nodes: Sequence, model_name: str) -> list:
+        hosts = [n for n in nodes if n.profile.name == model_name]
+        return hosts or list(nodes)
+
+
+class RoundRobinPolicy(RoutingPolicy):
+    name = "round_robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def attach(self, nodes, trace, zeta):
+        self._i = 0
+
+    def select(self, req, nodes, now):
+        nid = nodes[self._i % len(nodes)].node_id
+        self._i += 1
+        return nid
+
+
+class RandomPolicy(RoutingPolicy):
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+
+    def attach(self, nodes, trace, zeta):
+        self._rng = np.random.default_rng(self.seed)
+
+    def select(self, req, nodes, now):
+        return nodes[int(self._rng.integers(len(nodes)))].node_id
+
+
+class LeastLoadedPolicy(RoutingPolicy):
+    """Join-the-shortest-queue over waiting + in-flight counts."""
+
+    name = "least_loaded"
+
+    def select(self, req, nodes, now):
+        return self._least_loaded(nodes)
+
+
+class GreedyEnergyPolicy(RoutingPolicy):
+    """Per-request argmin of predicted energy e_K(τin, τout); ties and
+    replicas break toward the least-loaded host."""
+
+    name = "greedy_energy"
+
+    def select(self, req, nodes, now):
+        preds = [float(n.profile.energy(req.tau_in, req.tau_out))
+                 for n in nodes]
+        best = min(preds)
+        hosts = [n for n, p in zip(nodes, preds) if p <= best * (1 + 1e-12)]
+        return self._least_loaded(hosts)
+
+
+class ZetaOnlinePolicy(RoutingPolicy):
+    """Causal Eq. 2: ζ·ê − (1−ζ)·â with *running* normalizers.
+
+    The paper normalizes by the largest energy/accuracy over the whole
+    workload before optimizing; online, only requests seen so far are
+    known, so the maxima grow as traffic streams in."""
+
+    name = "zeta_online"
+
+    def __init__(self, zeta: float | None = None):
+        self.zeta_override = zeta
+        self.zeta = 0.5
+        self._e_max = 0.0
+        self._a_max = 0.0
+
+    def attach(self, nodes, trace, zeta):
+        self.zeta = self.zeta_override if self.zeta_override is not None else zeta
+        self._e_max = 0.0
+        self._a_max = 0.0
+
+    def select(self, req, nodes, now):
+        e = np.array([float(n.profile.energy(req.tau_in, req.tau_out))
+                      for n in nodes])
+        a = np.array([float(n.profile.accuracy(req.tau_in, req.tau_out))
+                      for n in nodes])
+        self._e_max = max(self._e_max, float(e.max()))
+        self._a_max = max(self._a_max, float(a.max()))
+        obj = self.zeta * e / self._e_max - (1.0 - self.zeta) * a / self._a_max
+        order = np.argsort(obj, kind="stable")
+        best = [nodes[i] for i in order if obj[i] <= obj[order[0]] + 1e-12]
+        return self._least_loaded(best)
+
+
+class OfflineOraclePolicy(RoutingPolicy):
+    """Replays the paper's offline optimum (core.scheduler.schedule with
+    coverage/disjointness only) over the full trace — the upper bound on
+    what any online policy can achieve on the Eq. 2 objective."""
+
+    name = "offline_oracle"
+
+    def __init__(self):
+        self._model_of: dict[int, str] = {}
+
+    def attach(self, nodes, trace, zeta):
+        profiles = unique_profiles(nodes)
+        asg = schedule(profiles, trace.queries(), zeta, enforce_nonempty=False)
+        self._model_of = {
+            r.request_id: asg.model_names[int(k)]
+            for r, k in zip(trace.requests, asg.assignee)}
+
+    def select(self, req, nodes, now):
+        hosts = self._nodes_hosting(nodes, self._model_of[req.request_id])
+        return self._least_loaded(hosts)
+
+
+DEFAULT_POLICIES = (
+    RoundRobinPolicy,
+    RandomPolicy,
+    LeastLoadedPolicy,
+    GreedyEnergyPolicy,
+    ZetaOnlinePolicy,
+)
+
+
+def objective_of_assignment(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[tuple[int, int]],
+    model_names: Sequence[str],
+    zeta: float,
+) -> float:
+    """Eq. 2 value of an arbitrary (online) assignment, on the same
+    normalization the offline scheduler uses — the yardstick for the
+    offline→online gap."""
+    costs = normalized_costs(profiles, queries)
+    C = objective_matrix(costs, zeta)
+    col = {name: j for j, name in enumerate(costs.model_names)}
+    idx = np.array([col[m] for m in model_names], dtype=int)
+    return float(C[np.arange(len(queries)), idx].sum())

@@ -1,0 +1,127 @@
+"""The discrete-event loop: streaming arrivals over a heterogeneous fleet.
+
+Two event kinds drive the simulation — request arrivals (from the trace)
+and node phase completions (from the continuous-batching state machines).
+Events are processed in (time, sequence) order; the sequence counter makes
+simultaneous events deterministic, so a fixed trace + policy always yields
+a bit-identical ClusterReport.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Sequence
+
+from repro.cluster.metrics import ClusterReport, RequestRecord, per_node_stats
+from repro.cluster.node import ClusterNode
+from repro.cluster.policies import (
+    RoutingPolicy,
+    objective_of_assignment,
+    unique_profiles,
+)
+from repro.cluster.trace import ArrivalTrace
+
+_ARRIVAL, _PHASE_END = 0, 1
+
+
+def simulate_cluster(
+    trace: ArrivalTrace,
+    nodes: Sequence[ClusterNode],
+    policy: RoutingPolicy,
+    *,
+    zeta: float = 0.5,
+) -> ClusterReport:
+    """Serve the whole trace; returns the aggregate ClusterReport."""
+    if not nodes:
+        raise ValueError("need at least one node")
+    by_id = {n.node_id: n for n in nodes}
+    if len(by_id) != len(nodes):
+        raise ValueError("node_ids must be unique")
+    policy.attach(nodes, trace, zeta)
+
+    events: list[tuple[float, int, int, object]] = []
+    seq = 0
+    for req in trace:
+        heapq.heappush(events, (req.arrival_s, seq, _ARRIVAL, req))
+        seq += 1
+
+    records: list[RequestRecord] = []
+    makespan = trace.duration_s
+
+    def push_phase(node: ClusterNode, end_s: float | None) -> None:
+        nonlocal seq
+        if end_s is not None:
+            heapq.heappush(events, (end_s, seq, _PHASE_END, node.node_id))
+            seq += 1
+
+    while events:
+        now, _, kind, payload = heapq.heappop(events)
+        if kind == _ARRIVAL:
+            req = payload
+            nid = policy.select(req, nodes, now)
+            if nid not in by_id:
+                raise ValueError(f"{policy.name} routed to unknown node {nid}")
+            push_phase(by_id[nid], by_id[nid].enqueue(req, now))
+        else:
+            node = by_id[payload]
+            completions, next_end = node.on_phase_end(now)
+            for c in completions:
+                makespan = max(makespan, c.finish_s)
+                records.append(RequestRecord(
+                    request_id=c.req.request_id,
+                    node_id=node.node_id,
+                    model=node.model_name,
+                    tau_in=c.req.tau_in,
+                    tau_out=c.req.tau_out,
+                    arrival_s=c.req.arrival_s,
+                    start_s=c.start_s,
+                    finish_s=c.finish_s,
+                    energy_j=c.energy_j,
+                    isolated_runtime_s=c.isolated_runtime_s,
+                ))
+            push_phase(node, next_end)
+
+    if len(records) != len(trace):
+        raise RuntimeError(
+            f"served {len(records)}/{len(trace)} requests — event loop bug")
+    records.sort(key=lambda r: r.request_id)
+
+    profiles = unique_profiles(nodes)
+    queries = trace.queries()
+    assigned = [r.model for r in records]
+    objective = (objective_of_assignment(profiles, queries, assigned, zeta)
+                 if records else 0.0)
+    prof_of = {p.name: p for p in profiles}
+    predicted = sum(float(prof_of[r.model].energy(r.tau_in, r.tau_out))
+                    for r in records)
+
+    return ClusterReport(
+        policy=policy.name,
+        zeta=zeta,
+        records=tuple(records),
+        node_stats=per_node_stats(nodes, makespan),
+        makespan_s=makespan,
+        objective=objective,
+        predicted_energy_j=predicted,
+    )
+
+
+def fresh_nodes(builders: Sequence) -> list[ClusterNode]:
+    """Call a list of zero-arg node factories — each policy comparison needs
+    pristine node state, so callers pass builders rather than nodes."""
+    return [b() for b in builders]
+
+
+def compare_policies(
+    trace: ArrivalTrace,
+    node_builders: Sequence,
+    policies: Sequence[RoutingPolicy],
+    *,
+    zeta: float = 0.5,
+) -> dict[str, ClusterReport]:
+    """Run every policy on identical fresh clusters over the same trace."""
+    out: dict[str, ClusterReport] = {}
+    for pol in policies:
+        nodes = fresh_nodes(node_builders)
+        out[pol.name] = simulate_cluster(trace, nodes, pol, zeta=zeta)
+    return out

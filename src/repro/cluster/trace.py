@@ -1,0 +1,125 @@
+"""Arrival traces: streaming request workloads for the cluster simulator.
+
+A trace is an immutable, time-sorted sequence of TracedRequests.  Shapes
+(τin, τout) come from the same Alpaca-like distribution the offline case
+study uses (repro.data.workloads); timestamps come from the arrival
+processes in repro.data.workloads.arrival_times (Poisson, bursty/Gamma,
+diurnal thinning) or are replayed from an explicit (t, query) list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.data.workloads import (
+    Query,
+    WorkloadSpec,
+    arrival_times,
+    timestamped_workload,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedRequest:
+    """One streaming request: the offline Query plus an arrival time."""
+
+    request_id: int
+    arrival_s: float
+    tau_in: int
+    tau_out: int
+
+    @property
+    def query(self) -> Query:
+        return (self.tau_in, self.tau_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    name: str
+    requests: tuple[TracedRequest, ...]
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def __iter__(self):
+        return iter(self.requests)
+
+    def queries(self) -> list[Query]:
+        """The offline view of the trace (feeds core.scheduler)."""
+        return [r.query for r in self.requests]
+
+    @property
+    def duration_s(self) -> float:
+        return self.requests[-1].arrival_s if self.requests else 0.0
+
+    @property
+    def mean_rate_qps(self) -> float:
+        d = self.duration_s
+        return len(self.requests) / d if d > 0 else float("inf")
+
+
+def _build(name: str, times, queries: Sequence[Query]) -> ArrivalTrace:
+    reqs = tuple(
+        TracedRequest(i, float(t), int(q[0]), int(q[1]))
+        for i, (t, q) in enumerate(sorted(zip(times, queries))))
+    return ArrivalTrace(name=name, requests=reqs)
+
+
+def _shaped_trace(name: str, pattern: str, n: int, rate_qps: float,
+                  spec: WorkloadSpec | None, seed: int,
+                  **arrival_kw) -> ArrivalTrace:
+    """Delegates to data.workloads.timestamped_workload so the shape/arrival
+    seed pairing lives in exactly one place.  A caller-supplied spec keeps
+    its own seed; the `seed` argument applies only when no spec is given."""
+    if spec is None:
+        spec = WorkloadSpec(n_queries=n, seed=seed)
+    else:
+        spec = dataclasses.replace(spec, n_queries=n)
+    items = timestamped_workload(spec, rate_qps=rate_qps, pattern=pattern,
+                                 **arrival_kw)
+    return timestamped_trace(items, name=name)
+
+
+def poisson_trace(n: int, rate_qps: float, *,
+                  spec: WorkloadSpec | None = None,
+                  seed: int = 0) -> ArrivalTrace:
+    """Memoryless arrivals at rate_qps over Alpaca-like shapes."""
+    return _shaped_trace(f"poisson@{rate_qps:g}", "poisson", n, rate_qps,
+                         spec, seed)
+
+
+def bursty_trace(n: int, rate_qps: float, *, burstiness: float = 4.0,
+                 spec: WorkloadSpec | None = None,
+                 seed: int = 0) -> ArrivalTrace:
+    """Gamma interarrivals with squared CV = burstiness (same mean rate)."""
+    return _shaped_trace(f"bursty@{rate_qps:g}", "bursty", n, rate_qps,
+                         spec, seed, burstiness=burstiness)
+
+
+def diurnal_trace(n: int, rate_qps: float, *, amplitude: float = 0.8,
+                  period_s: float = 600.0,
+                  spec: WorkloadSpec | None = None,
+                  seed: int = 0) -> ArrivalTrace:
+    """Sinusoidally-modulated Poisson (thinning), mean rate = rate_qps."""
+    return _shaped_trace(f"diurnal@{rate_qps:g}", "diurnal", n, rate_qps,
+                         spec, seed, diurnal_amplitude=amplitude,
+                         diurnal_period_s=period_s)
+
+
+def replay_trace(queries: Sequence[Query], rate_qps: float, *,
+                 pattern: str = "poisson", seed: int = 0,
+                 name: str = "replay") -> ArrivalTrace:
+    """Replay an explicit offline workload (e.g. the 500-query case study)
+    under a synthetic arrival process — the offline→online bridge."""
+    times = arrival_times(len(queries), rate_qps, pattern=pattern, seed=seed)
+    return _build(name, times, queries)
+
+
+def timestamped_trace(items: Sequence[tuple[float, Query]], *,
+                      name: str = "timestamped") -> ArrivalTrace:
+    """Wrap pre-timestamped (arrival_s, query) pairs (e.g. from
+    repro.data.workloads.timestamped_workload) into a trace."""
+    times = [t for t, _ in items]
+    queries = [q for _, q in items]
+    return _build(name, times, queries)

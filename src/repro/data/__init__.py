@@ -3,6 +3,8 @@
 from repro.data.workloads import (  # noqa: F401
     WorkloadSpec,
     alpaca_like_workload,
+    arrival_times,
     grid_workload,
+    timestamped_workload,
     token_batches,
 )

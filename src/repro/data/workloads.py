@@ -44,6 +44,69 @@ def alpaca_like_workload(spec: WorkloadSpec = WorkloadSpec()) -> list[Query]:
     return [(int(a), int(b)) for a, b in zip(tin, tout)]
 
 
+def arrival_times(
+    n: int,
+    rate_qps: float,
+    *,
+    pattern: str = "poisson",
+    burstiness: float = 4.0,
+    diurnal_amplitude: float = 0.8,
+    diurnal_period_s: float = 600.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Timestamps (seconds, ascending, starting near 0) for n requests.
+
+    pattern="poisson"  — exponential interarrivals at rate_qps.
+    pattern="bursty"   — Gamma interarrivals with squared CV = burstiness
+                         (shape 1/burstiness), same mean rate; models the
+                         clustered arrivals of real serving traffic.
+    pattern="diurnal"  — nonhomogeneous Poisson via thinning with
+                         rate(t) = rate_qps·(1 + A·sin(2πt/period)); the
+                         mean rate over a full period is rate_qps.
+    """
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be > 0, got {rate_qps}")
+    rng = np.random.default_rng(seed)
+    if pattern == "poisson":
+        gaps = rng.exponential(1.0 / rate_qps, n)
+        return np.cumsum(gaps)
+    if pattern == "bursty":
+        shape = 1.0 / burstiness
+        gaps = rng.gamma(shape, burstiness / rate_qps, n)
+        return np.cumsum(gaps)
+    if pattern == "diurnal":
+        a = min(max(diurnal_amplitude, 0.0), 1.0)
+        peak = rate_qps * (1.0 + a)
+        out = np.empty(n, dtype=np.float64)
+        t, i = 0.0, 0
+        while i < n:
+            t += rng.exponential(1.0 / peak)
+            lam = rate_qps * (1.0 + a * np.sin(2.0 * np.pi * t / diurnal_period_s))
+            if rng.random() * peak < lam:
+                out[i] = t
+                i += 1
+        return out
+    raise ValueError(f"unknown arrival pattern: {pattern!r}")
+
+
+def timestamped_workload(
+    spec: WorkloadSpec = WorkloadSpec(),
+    *,
+    rate_qps: float = 1.0,
+    pattern: str = "poisson",
+    seed: int | None = None,
+    **arrival_kw,
+) -> list[tuple[float, Query]]:
+    """Alpaca-like queries with streaming arrival timestamps:
+    [(arrival_s, (τin, τout)), ...] sorted by time — the online-serving
+    counterpart of `alpaca_like_workload` (consumed by repro.cluster)."""
+    seed = spec.seed if seed is None else seed
+    queries = alpaca_like_workload(dataclasses.replace(spec, seed=seed))
+    times = arrival_times(len(queries), rate_qps, pattern=pattern,
+                          seed=seed + 1, **arrival_kw)
+    return [(float(t), q) for t, q in zip(times, queries)]
+
+
 def grid_workload(lo: int = 8, hi: int = 2048) -> list[Query]:
     """Power-of-two grid, the paper's §6.1 ANOVA campaign."""
     levels = []

@@ -83,39 +83,53 @@ class AnalyticLLMSimulator:
              + a.j_per_byte_hbm * pc.hbm_bytes)
         return t, e
 
-    def simulate(self, tau_in: int, tau_out: int) -> PhaseBreakdown:
-        cfg, B = self.cfg, self.batch
-        # prefill over the prompt
-        pc = costs_lib.pass_costs(cfg, tau_in, tau_in, B)
-        t_pre, e_pre = self._pass_time_energy(pc)
+    # --- phase-level costs (the cluster simulator delegates to these) ----
 
+    @property
+    def host_power_w(self) -> float:
+        """Host-side draw while serving (paper's EPYC uProf term)."""
+        h = self.node.host
+        return h.idle_w / 4.0 + h.active_w_per_core * h.serving_cores
+
+    def prefill_cost(self, tau_in: int, batch: int | None = None
+                     ) -> tuple[float, float]:
+        """(seconds, accelerator joules) of one prefill pass over the prompt."""
+        B = self.batch if batch is None else batch
+        pc = costs_lib.pass_costs(self.cfg, tau_in, tau_in, B)
+        return self._pass_time_energy(pc)
+
+    def decode_cost(self, ctx0: float, n_steps: int,
+                    batch: int | None = None) -> tuple[float, float]:
+        """(seconds, accelerator joules) of `n_steps` decode steps starting
+        at absolute context length `ctx0` (= τin + tokens already generated).
+
+        Integrated in self.decode_chunk chunks with midpoint context — calling
+        this once with (tau_in, tau_out) reproduces simulate()'s decode phase
+        exactly, which is what makes the cluster simulator's per-request
+        energy conserve against the per-request simulator."""
+        B = self.batch if batch is None else batch
+        cfg = self.cfg
         t_dec = 0.0
         e_dec = 0.0
-        if self.kv_cache:
-            # one single-token pass per output token, growing context
-            step = self.decode_chunk
-            for t0 in range(0, tau_out, step):
-                n_steps = min(step, tau_out - t0)
-                ctx = tau_in + t0 + n_steps / 2.0
-                pc = costs_lib.pass_costs(cfg, 1, ctx, B)
-                t1, e1 = self._pass_time_energy(pc)
-                t_dec += t1 * n_steps
-                e_dec += e1 * n_steps
-        else:
-            # paper mode: re-run the full prefix for every generated token
-            step = self.decode_chunk
-            for t0 in range(0, tau_out, step):
-                n_steps = min(step, tau_out - t0)
-                L = tau_in + t0 + n_steps / 2.0
+        step = self.decode_chunk
+        for t0 in range(0, n_steps, step):
+            n = min(step, n_steps - t0)
+            L = ctx0 + t0 + n / 2.0
+            if self.kv_cache:
+                # one single-token pass per output token, growing context
+                pc = costs_lib.pass_costs(cfg, 1, L, B)
+            else:
+                # paper mode: re-run the full prefix for every generated token
                 pc = costs_lib.pass_costs(cfg, L, L, B)
-                t1, e1 = self._pass_time_energy(pc)
-                t_dec += t1 * n_steps
-                e_dec += e1 * n_steps
+            t1, e1 = self._pass_time_energy(pc)
+            t_dec += t1 * n
+            e_dec += e1 * n
+        return t_dec, e_dec
 
-        # host-side energy over the whole request (paper's EPYC uProf term)
-        h = self.node.host
-        host_w = h.idle_w / 4.0 + h.active_w_per_core * h.serving_cores
-        e_host = host_w * (t_pre + t_dec)
+    def simulate(self, tau_in: int, tau_out: int) -> PhaseBreakdown:
+        t_pre, e_pre = self.prefill_cost(tau_in)
+        t_dec, e_dec = self.decode_cost(tau_in, tau_out)
+        e_host = self.host_power_w * (t_pre + t_dec)
         return PhaseBreakdown(t_pre, t_dec, e_pre, e_dec, e_host)
 
     def measure(self, tau_in: int, tau_out: int) -> tuple[float, float]:

@@ -6,19 +6,26 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; older jax only accepts
+    # (shape, axes) and treats every axis as Auto already.
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading pod=2 axis
     (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires >= prod(shape) host devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def mesh_chips(mesh) -> int:

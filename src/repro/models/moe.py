@@ -42,7 +42,20 @@ from repro.models.common import (
 # ---------------------------------------------------------------------------
 
 
-def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+def expert_capacity(n_tokens: int, cfg: ModelConfig, *,
+                    dropless: bool = False) -> int:
+    """Per-expert slot count.
+
+    Training uses the usual capacity-factor formula (tokens beyond it are
+    dropped).  Inference must be *dropless*: capacity depends on the token
+    count T, so a dropped pair in one batch shape but not another makes
+    prefill/decode disagree with the teacher-forced pass (the granite-moe
+    consistency bug).  top_k returns K distinct experts per token, so each
+    expert receives at most T pairs — capacity T guarantees no drops at an
+    E/(K·capacity_factor)× buffer cost, bounded by cfg.moe_token_chunk.
+    """
+    if dropless:
+        return max(8, int(math.ceil(n_tokens / 8)) * 8)
     c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
     return max(8, int(math.ceil(c / 8)) * 8)
 
@@ -138,14 +151,18 @@ def _combine_bwd(res, g):
 _combine.defvjp(_combine_fwd, _combine_bwd)
 
 
-def moe_ffn(cfg: ModelConfig, pl: dict, x: jax.Array):
+def moe_ffn(cfg: ModelConfig, pl: dict, x: jax.Array, *,
+            dropless: bool = False):
     """x [B, S, d] -> (y [B, S, d], aux_loss scalar).
 
     Sort-based capacity dispatch where BOTH directions (and both VJPs) are
     gathers over d-sharded operands; the [E, C, d] buffer resharding to the
     expert layout is the explicit expert-parallel all-to-all.  Token counts
     beyond cfg.moe_token_chunk are processed in chunks (lax.scan) so the
-    [T*K, d] pair intermediates stay bounded at 32k-prefill scale."""
+    [T*K, d] pair intermediates stay bounded at 32k-prefill scale.
+
+    dropless=True (the inference paths) sizes the buffer so no pair is ever
+    dropped — required for prefill/decode == teacher-forced consistency."""
     B, S, d = x.shape
     T = B * S
     chunk = cfg.moe_token_chunk
@@ -154,15 +171,16 @@ def moe_ffn(cfg: ModelConfig, pl: dict, x: jax.Array):
         xc = x.reshape(n, chunk, 1, d)
 
         def body(carry, xg):
-            out_g, aux_g = _moe_ffn_inner(cfg, pl, xg)
+            out_g, aux_g = _moe_ffn_inner(cfg, pl, xg, dropless=dropless)
             return carry + aux_g, out_g
 
         aux, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xc)
         return outs.reshape(B, S, d), aux / n
-    return _moe_ffn_inner(cfg, pl, x)
+    return _moe_ffn_inner(cfg, pl, x, dropless=dropless)
 
 
-def _moe_ffn_inner(cfg: ModelConfig, pl: dict, x: jax.Array):
+def _moe_ffn_inner(cfg: ModelConfig, pl: dict, x: jax.Array, *,
+                   dropless: bool = False):
     B, S, d = x.shape
     T = B * S
     E, K = cfg.n_experts, cfg.top_k
@@ -173,7 +191,7 @@ def _moe_ffn_inner(cfg: ModelConfig, pl: dict, x: jax.Array):
     gates, eidx = jax.lax.top_k(probs, K)                      # [T, K]
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
-    C = expert_capacity(T, cfg)
+    C = expert_capacity(T, cfg, dropless=dropless)
     pair_e = eidx.reshape(T * K)
     order = jnp.argsort(pair_e, stable=True)
     inv_order = jnp.argsort(order, stable=True)
@@ -226,7 +244,7 @@ def _moe_ffn_inner(cfg: ModelConfig, pl: dict, x: jax.Array):
 
 def moe_ffn_token(cfg: ModelConfig, pl: dict, x: jax.Array):
     """Decode-path MoE for [B, d] single tokens (wraps the batched path)."""
-    y, aux = moe_ffn(cfg, pl, x[:, None, :])
+    y, aux = moe_ffn(cfg, pl, x[:, None, :], dropless=True)
     return y[:, 0, :], aux
 
 
@@ -384,7 +402,8 @@ def _attn_full(cfg, pl, xin, window):
     return y, (k, v)
 
 
-def _stack_forward(cfg, blocks, x, *, moe: bool, window: int, collect: bool):
+def _stack_forward(cfg, blocks, x, *, moe: bool, window: int, collect: bool,
+                   dropless: bool = False):
     def body(carry, pl):
         h, aux = carry
         h = shard.constrain(h, "batch", "seq", None)
@@ -393,7 +412,7 @@ def _stack_forward(cfg, blocks, x, *, moe: bool, window: int, collect: bool):
         h = h + a
         xmid = rmsnorm(h, pl["ln_mlp"]["w"], cfg.rmsnorm_eps)
         if moe:
-            m, a_loss = moe_ffn(cfg, pl["moe"], xmid)
+            m, a_loss = moe_ffn(cfg, pl["moe"], xmid, dropless=dropless)
             aux = aux + a_loss
         else:
             mp = pl["mlp"]
@@ -407,7 +426,8 @@ def _stack_forward(cfg, blocks, x, *, moe: bool, window: int, collect: bool):
 
 
 def forward_full(cfg: ModelConfig, params: dict, x: jax.Array, *,
-                 window: int = 0, collect: bool = False):
+                 window: int = 0, collect: bool = False,
+                 dropless: bool = False):
     """Returns (hidden, aux_loss, caches) where caches stacks dense+moe
     layers in order."""
     blocks = params["blocks"]
@@ -420,7 +440,8 @@ def forward_full(cfg: ModelConfig, params: dict, x: jax.Array, *,
         if collect:
             kvs.append(kv0)
     x, a1, kv1 = _stack_forward(cfg, blocks["moe_blocks"], x, moe=True,
-                                window=window, collect=collect)
+                                window=window, collect=collect,
+                                dropless=dropless)
     aux += a1
     if collect:
         kvs.append(kv1)
@@ -465,7 +486,8 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict, *,
     S = tokens.shape[1]
     window = cfg.long_context_window if long_context else cfg.window
     x = embed_tokens(params["embed"], tokens)
-    h, _, kv = forward_full(cfg, params, x, window=window, collect=True)
+    h, _, kv = forward_full(cfg, params, x, window=window, collect=True,
+                            dropless=True)
     h = rmsnorm(h[:, -1], params["final_norm"]["w"], cfg.rmsnorm_eps)
     logits = lm_logits(h, params["head"], cfg.vocab_size)
     if _uses_mla(cfg):

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config
@@ -45,6 +46,7 @@ def test_latest_step_discovery(tmp_path):
     assert ckpt.latest_step(tmp_path) == 200
 
 
+@pytest.mark.slow
 def test_train_resume_bitwise(tmp_path):
     """save at step k, restore, continue — identical to uninterrupted run."""
     cfg = get_config("qwen3-1.7b-reduced")

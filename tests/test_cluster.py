@@ -1,0 +1,267 @@
+"""Cluster simulator invariants: trace generation, determinism, energy
+conservation against the per-request simulator, continuous batching, and
+the offline-oracle bound."""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterNode,
+    GreedyEnergyPolicy,
+    LeastLoadedPolicy,
+    OfflineOraclePolicy,
+    RandomPolicy,
+    RoundRobinPolicy,
+    ZetaOnlinePolicy,
+    bursty_trace,
+    compare_policies,
+    diurnal_trace,
+    poisson_trace,
+    replay_trace,
+    simulate_cluster,
+    timestamped_trace,
+)
+from repro.configs import PAPER_ZOO, TABLE1
+from repro.core.energy_model import fit_profile
+from repro.data.workloads import WorkloadSpec, arrival_times, timestamped_workload
+from repro.energy import AnalyticLLMSimulator, SWING_NODE, TPU_NODE
+from repro.serving import OnlineRouter, Request
+
+
+def make_profile(name, node=SWING_NODE):
+    cfg = PAPER_ZOO[name]
+    sim = AnalyticLLMSimulator(cfg, node, batch=1, kv_cache=True,
+                               noise_sigma=0.0)
+    pts = [(8, 8), (64, 64), (256, 128), (1024, 256), (32, 512),
+           (512, 512), (128, 32), (2048, 64)]
+    pbs = [sim.simulate(a, b) for a, b in pts]
+    return fit_profile(name, TABLE1[name]["a_k"],
+                       [p[0] for p in pts], [p[1] for p in pts],
+                       [pb.energy_j for pb in pbs],
+                       [pb.runtime_s for pb in pbs])
+
+
+FLEET = ("llama2-7b", "llama2-13b", "llama2-70b")
+PROFILES = {name: make_profile(name) for name in FLEET}
+
+
+def builders(max_batch=8):
+    return [
+        (lambda i=i, name=name: ClusterNode(
+            i, PAPER_ZOO[name], PROFILES[name], SWING_NODE,
+            max_batch=max_batch))
+        for i, name in enumerate(FLEET)
+    ]
+
+
+def all_policies():
+    return [RoundRobinPolicy(), RandomPolicy(seed=0), LeastLoadedPolicy(),
+            GreedyEnergyPolicy(), ZetaOnlinePolicy(), OfflineOraclePolicy()]
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+class TestTraces:
+    def test_sorted_and_ids_sequential(self):
+        for trace in (poisson_trace(50, 2.0, seed=1),
+                      bursty_trace(50, 2.0, seed=1),
+                      diurnal_trace(50, 2.0, seed=1)):
+            times = [r.arrival_s for r in trace]
+            assert times == sorted(times)
+            assert [r.request_id for r in trace] == list(range(50))
+            assert all(r.tau_in >= 1 and r.tau_out >= 1 for r in trace)
+
+    def test_mean_rate_approx(self):
+        trace = poisson_trace(2000, 5.0, seed=3)
+        assert trace.mean_rate_qps == pytest.approx(5.0, rel=0.15)
+
+    def test_bursty_has_higher_interarrival_cv(self):
+        def cv2(trace):
+            gaps = np.diff([0.0] + [r.arrival_s for r in trace])
+            return np.var(gaps) / np.mean(gaps) ** 2
+
+        p = poisson_trace(2000, 2.0, seed=5)
+        b = bursty_trace(2000, 2.0, burstiness=6.0, seed=5)
+        assert cv2(b) > 2.0 * cv2(p)
+
+    def test_replay_preserves_queries(self):
+        queries = [(16, 32), (64, 8), (100, 200)]
+        trace = replay_trace(queries, 1.0, seed=0)
+        assert sorted(trace.queries()) == sorted(queries)
+
+    def test_arrival_patterns_reject_unknown(self):
+        with pytest.raises(ValueError):
+            arrival_times(10, 1.0, pattern="weekly")
+        with pytest.raises(ValueError):
+            arrival_times(10, 0.0)
+
+    def test_spec_seed_is_honored(self):
+        a = poisson_trace(30, 2.0, spec=WorkloadSpec(seed=42))
+        b = poisson_trace(30, 2.0, spec=WorkloadSpec(seed=43))
+        c = poisson_trace(30, 2.0, spec=WorkloadSpec(seed=42))
+        assert a.queries() != b.queries()
+        assert a.queries() == c.queries()
+
+    def test_timestamped_workload_roundtrip(self):
+        items = timestamped_workload(WorkloadSpec(n_queries=30), rate_qps=2.0)
+        trace = timestamped_trace(items)
+        assert len(trace) == 30
+        assert trace.queries() == [q for _, q in sorted(items)]
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+
+
+class TestClusterSim:
+    def test_deterministic_under_fixed_seed(self):
+        trace = poisson_trace(60, 3.0, seed=7)
+
+        def run():
+            return simulate_cluster(trace, [b() for b in builders()],
+                                    ZetaOnlinePolicy(), zeta=0.5)
+
+        a, b = run(), run()
+        assert a.total_energy_j == b.total_energy_j
+        assert a.makespan_s == b.makespan_s
+        assert [r.finish_s for r in a.records] == [r.finish_s for r in b.records]
+        assert [r.node_id for r in a.records] == [r.node_id for r in b.records]
+
+    def test_energy_conservation_uncontended(self):
+        """With arrivals spaced far beyond any service time, every request
+        is served alone (batch 1, one prefill + one decode segment) and the
+        cluster's busy energy must equal the per-request simulator's."""
+        queries = [(64, 64), (256, 128), (32, 512), (1024, 256)]
+        items = [(1e5 * (i + 1), q) for i, q in enumerate(queries)]
+        trace = timestamped_trace(items)
+        node = ClusterNode(0, PAPER_ZOO["llama2-7b"], PROFILES["llama2-7b"],
+                           SWING_NODE, max_batch=8)
+        report = simulate_cluster(trace, [node], RoundRobinPolicy(), zeta=0.5)
+
+        ref = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], SWING_NODE,
+                                   batch=1, kv_cache=True, noise_sigma=0.0)
+        total_ref = 0.0
+        for rec in report.records:
+            pb = ref.simulate(rec.tau_in, rec.tau_out)
+            assert rec.energy_j == pytest.approx(pb.energy_j, rel=1e-9)
+            assert rec.latency_s == pytest.approx(pb.runtime_s, rel=1e-9)
+            total_ref += pb.energy_j
+        assert report.total_busy_energy_j == pytest.approx(total_ref, rel=1e-9)
+
+    def test_all_requests_served_and_counts_add_up(self):
+        trace = bursty_trace(80, 5.0, seed=2)
+        reports = compare_policies(trace, builders(), all_policies(), zeta=0.5)
+        for rep in reports.values():
+            assert len(rep.records) == len(trace)
+            assert sum(s.n_served for s in rep.node_stats) == len(trace)
+            assert {r.request_id for r in rep.records} == set(range(len(trace)))
+            assert all(r.finish_s >= r.start_s >= r.arrival_s
+                       for r in rep.records)
+            assert rep.makespan_s >= max(r.finish_s for r in rep.records) - 1e-9
+
+    def test_oracle_bounds_every_online_policy(self):
+        """The tentpole property: offline_oracle is never worse on the
+        Eq. 2 objective, at any zeta, under any arrival process."""
+        for zeta in (0.3, 0.7, 1.0):
+            trace = poisson_trace(60, 4.0, seed=int(zeta * 10))
+            reports = compare_policies(trace, builders(), all_policies(),
+                                       zeta=zeta)
+            oracle = reports["offline_oracle"]
+            for name, rep in reports.items():
+                assert oracle.objective <= rep.objective + 1e-9, (zeta, name)
+
+    def test_contention_forms_batches(self):
+        """A simultaneous burst on one node must serve in batches: strictly
+        faster end-to-end than the sum of isolated service times."""
+        queries = [(128, 128)] * 6
+        trace = timestamped_trace([(0.0, q) for q in queries])
+        node = ClusterNode(0, PAPER_ZOO["llama2-7b"], PROFILES["llama2-7b"],
+                           SWING_NODE, max_batch=8)
+        report = simulate_cluster(trace, [node], RoundRobinPolicy())
+        iso = report.records[0].isolated_runtime_s
+        assert report.makespan_s < 6 * iso * 0.9
+        # all six share one prefill + one decode segment
+        assert len({r.finish_s for r in report.records}) == 1
+
+    def test_max_batch_respected(self):
+        queries = [(64, 64)] * 10
+        trace = timestamped_trace([(0.0, q) for q in queries])
+        node = ClusterNode(0, PAPER_ZOO["llama2-7b"], PROFILES["llama2-7b"],
+                           SWING_NODE, max_batch=4)
+        report = simulate_cluster(trace, [node], RoundRobinPolicy())
+        # identical requests at max_batch=4 finish in ceil(10/4)=3 waves
+        assert len({round(r.finish_s, 9) for r in report.records}) == 3
+
+    def test_heterogeneous_hardware(self):
+        """A TPU node and an A100 node report different energy for the
+        same work — the heterogeneity the router exploits."""
+        q = [(256, 128)]
+        a = simulate_cluster(
+            timestamped_trace([(0.0, q[0])]),
+            [ClusterNode(0, PAPER_ZOO["llama2-7b"], PROFILES["llama2-7b"],
+                         SWING_NODE)], RoundRobinPolicy())
+        b = simulate_cluster(
+            timestamped_trace([(0.0, q[0])]),
+            [ClusterNode(0, PAPER_ZOO["llama2-7b"], PROFILES["llama2-7b"],
+                         TPU_NODE)], RoundRobinPolicy())
+        assert a.total_busy_energy_j != pytest.approx(b.total_busy_energy_j)
+
+    def test_empty_trace(self):
+        from repro.cluster import ArrivalTrace
+        rep = simulate_cluster(
+            ArrivalTrace("empty", ()),
+            [ClusterNode(0, PAPER_ZOO["llama2-7b"], PROFILES["llama2-7b"])],
+            RoundRobinPolicy())
+        assert len(rep.records) == 0
+        assert rep.total_energy_j == 0.0
+        assert rep.objective == 0.0
+
+    def test_report_metrics_sane(self):
+        trace = poisson_trace(40, 3.0, seed=9)
+        rep = simulate_cluster(trace, [b() for b in builders()],
+                               LeastLoadedPolicy(), zeta=0.5)
+        assert rep.latency_p50 <= rep.latency_p95 <= rep.latency_p99
+        assert 0.0 <= rep.slo_attainment() <= 1.0
+        assert rep.j_per_token > 0
+        assert all(0.0 <= s.utilization <= 1.0 + 1e-9 for s in rep.node_stats)
+        assert rep.total_energy_j == pytest.approx(
+            rep.total_busy_energy_j + rep.total_idle_energy_j)
+
+
+# ---------------------------------------------------------------------------
+# serving-path online adapter
+# ---------------------------------------------------------------------------
+
+
+class TestOnlineRouter:
+    def _requests(self, n=12, seed=0):
+        rng = np.random.default_rng(seed)
+        return [Request(i, np.arange(int(rng.integers(8, 256)),
+                                     dtype=np.int32),
+                        int(rng.integers(8, 256))) for i in range(n)]
+
+    def test_routes_and_tracks_load(self):
+        profiles = [PROFILES[n] for n in FLEET]
+        router = OnlineRouter(profiles, policy=LeastLoadedPolicy())
+        reqs = self._requests()
+        for r in reqs:
+            name = router.route_one(r)
+            assert r.model == name
+        assert sum(v.outstanding for v in router.views) == len(reqs)
+        for r in reqs:
+            router.complete(r)
+        assert sum(v.outstanding for v in router.views) == 0
+
+    def test_zeta_online_prefers_small_model_at_high_zeta(self):
+        profiles = [PROFILES[n] for n in FLEET]
+        router = OnlineRouter(profiles, policy=ZetaOnlinePolicy(zeta=1.0))
+        names = {router.route_one(r) for r in self._requests(20, seed=3)}
+        assert names == {"llama2-7b"}
+
+    def test_oracle_rejected(self):
+        with pytest.raises(ValueError):
+            OnlineRouter([PROFILES["llama2-7b"]], policy=OfflineOraclePolicy())

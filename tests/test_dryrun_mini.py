@@ -8,6 +8,10 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+pytestmark = pytest.mark.slow  # lowers+compiles 12 programs in a subprocess
+
 REPO = Path(__file__).resolve().parent.parent
 
 SCRIPT = textwrap.dedent("""

@@ -12,8 +12,18 @@ from helpers import finite, make_batch, prefill_decode_consistency, reduced
 
 FAMILY_OF = {a: get_config(a).family for a in ASSIGNED_ARCHS}
 
+# the scan-heavy archs dominate fast-tier wall clock; transformer-core
+# coverage stays via cheaper representatives (granite=moe, mamba2=ssm,
+# qwen/llama=dense) — the vlm/encdec/hybrid variants run in full tier-1
+_HEAVY = {"recurrentgemma-9b", "deepseek-v3-671b", "seamless-m4t-large-v2",
+          "internvl2-2b"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+    for a in ASSIGNED_ARCHS
+]
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_train_step(arch):
     """Reduced variant: one forward/train step, output shapes, no NaNs
     (the per-arch smoke test required by the brief)."""
@@ -27,7 +37,7 @@ def test_smoke_train_step(arch):
         assert finite(v)
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_prefill_decode_shapes(arch):
     cfg, api = reduced(arch)
     B, S = 2, 16
@@ -44,7 +54,7 @@ def test_smoke_prefill_decode_shapes(arch):
     assert int(cache2.pos) == int(cache.pos) + 1
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_prefill_decode_consistency(arch):
     """Serving path == teacher-forced path (the engine's core invariant)."""
     err = prefill_decode_consistency(arch)
@@ -118,6 +128,7 @@ def test_paper_zoo_param_counts():
         assert abs(n - billions) / billions < 0.10, f"{name}: {n:.2f}B"
 
 
+@pytest.mark.slow
 def test_mla_absorb_matches_expand():
     cfg, api = reduced("deepseek-v3-671b")
     cfg_e = cfg.replace(mla_absorb=False)
@@ -150,6 +161,7 @@ def test_hybrid_pattern_counts():
     assert 2 * units + tail + attn == cfg.n_layers
 
 
+@pytest.mark.slow
 def test_fp8_kv_cache_decode_close_to_bf16():
     """cache_dtype=float8_e4m3fn (beyond-paper serving opt): decode logits
     stay close to the full-precision-cache decode."""

@@ -20,6 +20,7 @@ def engine_pair():
     return cfg, cached, uncached
 
 
+@pytest.mark.slow  # real token-by-token generation loops on the engine
 class TestEngine:
     def test_generates_requested_tokens(self, engine_pair):
         cfg, eng, _ = engine_pair

@@ -2,8 +2,11 @@
 execution) -> fit -> route -> serve, on reduced models."""
 
 import numpy as np
+import pytest
 
 from repro.launch.serve import characterize_fleet, serve
+
+pytestmark = pytest.mark.slow  # real-execution pipelines, minutes of compile
 
 
 def test_end_to_end_serve_pipeline():
