@@ -14,7 +14,7 @@ bound is congestion — the latency columns show online load-aware policies
 beating it at high arrival rates, which is exactly the gap this subsystem
 exists to measure.
 
-    PYTHONPATH=src python benchmarks/fig4_online_gap.py
+    PYTHONPATH=src:. python benchmarks/fig4_online_gap.py
 """
 
 from __future__ import annotations

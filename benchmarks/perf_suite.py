@@ -1,0 +1,532 @@
+"""Perf trajectory suite for the analytic hot paths — feeds BENCH_core.json.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src:. python benchmarks/perf_suite.py             # full run:
+        times every hot path and writes BENCH_core.json
+    PYTHONPATH=src:. python benchmarks/perf_suite.py --quick     # CI gate:
+        correctness checks only (closed-form vs chunked reference, chains
+        solver vs _MinCostFlow, batch vs scalar equivalence); no timing
+        assertions, no JSON.  This is what `scripts/test.sh perf` runs.
+
+    --out PATH            where to write the JSON (default <repo>/BENCH_core.json)
+    --sizes A,B,C         workload sizes to sweep (default 1000,10000,100000)
+    --headline-m M        the capacitated-scheduler headline size (default 50000)
+    --ref-direct-max M    largest m at which the _MinCostFlow oracle is run
+                          directly (default 10000; it is O(m²k) so the
+                          headline reference time is extrapolated from a
+                          power-law fit of the directly measured points,
+                          with bit-identical objective checks at every
+                          direct point and an exact LP-optimality
+                          certificate at the headline size)
+
+What is measured:
+
+  * `AnalyticLLMSimulator.decode_cost` (exact closed form) vs the legacy
+    chunked loop at τout = 4096 — against chunk=1 (the exact per-step
+    reference it must match to ≤1e-9 rel) and chunk=256 (the old
+    midpoint approximation, whose error is also recorded);
+  * `pass_costs_batch` vs a scalar `pass_costs` loop;
+  * `measure_batch` vs sequential `measure` over characterization grids;
+  * `core.scheduler.schedule` (vectorized argmin) throughput;
+  * `core.scheduler.schedule_capacitated`: chains vs flow oracle;
+  * the cluster discrete-event sim with memoized phase costs.
+
+Exit status is nonzero iff any correctness gate fails; timing numbers are
+recorded, never asserted (no flaky wall-clock assertions in CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/perf_suite.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import timed  # noqa: E402
+
+from repro.configs import PAPER_ZOO, get_config  # noqa: E402
+from repro.core import scheduler  # noqa: E402
+from repro.core import characterize as characterize_lib  # noqa: E402
+from repro.core.energy_model import (  # noqa: E402
+    AccuracyModel,
+    BilinearModel,
+    LLMProfile,
+    normalized_costs,
+    objective_matrix,
+)
+from repro.data.workloads import WorkloadSpec, alpaca_like_workload  # noqa: E402
+from repro.energy import costs as costs_lib  # noqa: E402
+from repro.energy.simulator import AnalyticLLMSimulator  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+GATE_CONFIGS = {
+    "llama2-7b": lambda: PAPER_ZOO["llama2-7b"],
+    "mixtral-8x7b": lambda: PAPER_ZOO["mixtral-8x7b"],
+    "mistral-7b": lambda: get_config("mistral-7b"),
+    "mamba2-130m": lambda: get_config("mamba2-130m"),
+    "recurrentgemma-9b": lambda: get_config("recurrentgemma-9b"),
+    "deepseek-v3-671b": lambda: get_config("deepseek-v3-671b"),
+}
+
+
+def synthetic_fleet(k: int, seed: int) -> list[LLMProfile]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(k):
+        e = BilinearModel(tuple(rng.uniform(0.05, 1.0, 3)))
+        r = BilinearModel(tuple(rng.uniform(1e-4, 1e-2, 3)))
+        out.append(LLMProfile(f"m{i}", e, r,
+                              AccuracyModel(float(rng.uniform(30.0, 80.0)))))
+    return out
+
+
+def workload(m: int, seed: int = 0) -> list[tuple[int, int]]:
+    return alpaca_like_workload(WorkloadSpec(n_queries=m, seed=seed))
+
+
+def random_gamma(k: int, rng) -> tuple[float, ...]:
+    g = rng.dirichlet(np.ones(k) * rng.uniform(0.5, 3.0))
+    return tuple((g / g.sum()).tolist())
+
+
+# ---------------------------------------------------------------------------
+# Correctness gates (shared by --quick and the full run)
+# ---------------------------------------------------------------------------
+
+
+def gate_decode_closed_form(failures: list[str]) -> dict:
+    """Closed form must match the chunk=1 per-step reference ≤ 1e-9 rel
+    across every family and both KV modes, including window/MoE-breakpoint
+    crossings and tiny phases."""
+    worst = 0.0
+    ranges = [(1, 1), (1, 3), (8, 100), (32, 512), (3000, 2000), (100, 4096)]
+    for name, mk in GATE_CONFIGS.items():
+        cfg = mk()
+        for kv in (True, False):
+            sim = AnalyticLLMSimulator(cfg, batch=4, kv_cache=kv,
+                                       noise_sigma=0.0)
+            for ctx0, n in ranges:
+                t1, e1 = sim.decode_cost(ctx0, n)
+                t2, e2 = sim.decode_cost_chunked(ctx0, n, chunk=1)
+                rel = max(abs(t1 - t2) / max(abs(t2), 1e-300),
+                          abs(e1 - e2) / max(abs(e2), 1e-300))
+                worst = max(worst, rel)
+                if rel > 1e-9:
+                    failures.append(
+                        f"decode closed-form mismatch: {name} kv={kv} "
+                        f"ctx0={ctx0} n={n} rel={rel:.3e}")
+    return {"worst_rel_err": worst, "tolerance": 1e-9}
+
+
+def gate_pass_costs_batch(failures: list[str]) -> dict:
+    """pass_costs_batch must agree with scalar pass_costs elementwise."""
+    rng = np.random.default_rng(7)
+    worst = 0.0
+    for name, mk in GATE_CONFIGS.items():
+        cfg = mk()
+        nt = rng.integers(1, 4096, 64).astype(float)
+        ctx = nt + rng.integers(0, 4096, 64)
+        bt = rng.integers(1, 64, 64).astype(float)
+        for decode in (False, True):
+            pcb = costs_lib.pass_costs_batch(cfg, nt, ctx, bt, decode=decode)
+            for i in range(len(nt)):
+                pc = costs_lib.pass_costs(cfg, nt[i], ctx[i], bt[i],
+                                          decode=decode)
+                rel = max(abs(pc.flops - pcb.flops[i]) / max(pc.flops, 1e-300),
+                          abs(pc.hbm_bytes - pcb.hbm_bytes[i])
+                          / max(pc.hbm_bytes, 1e-300))
+                worst = max(worst, rel)
+                if rel > 1e-12:
+                    failures.append(
+                        f"pass_costs_batch mismatch: {name} decode={decode} "
+                        f"i={i} rel={rel:.3e}")
+    return {"worst_rel_err": worst, "tolerance": 1e-12}
+
+
+def gate_measure_batch(failures: list[str]) -> dict:
+    """measure_batch must be noise-stream-identical to sequential measure."""
+    cfg = PAPER_ZOO["llama2-7b"]
+    pts = [(8, 8), (64, 32), (8, 8), (128, 16), (512, 256), (64, 32)]
+    s1 = AnalyticLLMSimulator(cfg, seed=9)
+    s2 = AnalyticLLMSimulator(cfg, seed=9)
+    seq = [s1.measure(a, b) for a, b in pts]
+    e, r = s2.measure_batch([p[0] for p in pts], [p[1] for p in pts])
+    ok = all(sv[0] == e[i] and sv[1] == r[i] for i, sv in enumerate(seq))
+    if not ok:
+        failures.append("measure_batch diverges from sequential measure")
+    return {"stream_identical": ok}
+
+
+def gate_capacitated_solver(failures: list[str], *, n_instances: int = 8,
+                            m_max: int = 400) -> dict:
+    """chains solver vs _MinCostFlow: objectives must be bit-identical."""
+    n_exact = 0
+    for t in range(n_instances):
+        rng = np.random.default_rng(5000 + t)
+        m = int(rng.integers(10, m_max))
+        k = int(rng.integers(2, 7))
+        qs = [(int(a), int(b)) for a, b in
+              zip(rng.integers(1, 4096, m), rng.integers(1, 4096, m))]
+        profs = synthetic_fleet(k, seed=t)
+        gamma = random_gamma(k, rng)
+        zeta = float(rng.uniform(0, 1))
+        a = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                           method="chains")
+        b = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                           method="flow")
+        if a.objective == b.objective:
+            n_exact += 1
+        elif abs(a.objective - b.objective) > 1e-12 * max(1.0,
+                                                          abs(b.objective)):
+            # 1e-12 rel, not == : permuted exact optima over duplicate
+            # queries can differ in the last ulp of the pairwise sum
+            failures.append(
+                f"capacitated solver mismatch: instance {t} m={m} k={k} "
+                f"chains={a.objective!r} flow={b.objective!r}")
+        costs = normalized_costs(profs, qs)
+        C = objective_matrix(costs, zeta)
+        caps = scheduler._capacities_from_gamma(gamma, m)
+        if not scheduler.capacitated_optimality_certificate(C, a.assignee, caps):
+            failures.append(f"optimality certificate failed: instance {t}")
+    return {"instances": n_instances, "bit_identical": n_exact}
+
+
+def run_gates(quick: bool) -> tuple[dict, list[str]]:
+    failures: list[str] = []
+    out = {
+        "decode_closed_form": gate_decode_closed_form(failures),
+        "pass_costs_batch": gate_pass_costs_batch(failures),
+        "measure_batch": gate_measure_batch(failures),
+        "capacitated_solver": gate_capacitated_solver(
+            failures, n_instances=8 if quick else 12),
+    }
+    return out, failures
+
+
+# ---------------------------------------------------------------------------
+# Timings (full run only)
+# ---------------------------------------------------------------------------
+
+
+def bench_decode() -> dict:
+    """Headline (a): decode_cost closed form at τout = 4096 vs the loop."""
+    cfg = PAPER_ZOO["llama2-7b"]
+    out = {}
+    for kv in (False, True):
+        sim = AnalyticLLMSimulator(cfg, batch=32, kv_cache=kv, noise_sigma=0.0)
+        us_closed, res_c = timed(
+            lambda: sim._decode_closed_form(32, 4096, 32), repeats=20)
+        us_exact, res_e = timed(
+            lambda: sim.decode_cost_chunked(32, 4096, chunk=1), repeats=2)
+        us_256, res_256 = timed(
+            lambda: sim.decode_cost_chunked(32, 4096, chunk=256), repeats=10)
+        rel_exact = max(abs(res_c[0] - res_e[0]) / res_e[0],
+                        abs(res_c[1] - res_e[1]) / res_e[1])
+        rel_256 = max(abs(res_256[0] - res_e[0]) / res_e[0],
+                      abs(res_256[1] - res_e[1]) / res_e[1])
+        out[f"kv_{'on' if kv else 'off'}"] = {
+            "closed_form_us": us_closed,
+            "exact_loop_us": us_exact,
+            "chunk256_loop_us": us_256,
+            "speedup_vs_exact_loop": us_exact / us_closed,
+            "speedup_vs_chunk256": us_256 / us_closed,
+            "rel_err_vs_exact_loop": rel_exact,
+            "chunk256_rel_err_vs_exact": rel_256,
+        }
+    return out
+
+
+def bench_pass_costs_batch(sizes: list[int]) -> dict:
+    cfg = PAPER_ZOO["llama2-7b"]
+    out = {}
+    for m in sizes:
+        rng = np.random.default_rng(m)
+        nt = rng.integers(1, 2048, m).astype(float)
+        ctx = nt.copy()
+        us_batch, pcb = timed(
+            lambda: costs_lib.pass_costs_batch(cfg, nt, ctx, 32.0,
+                                               decode=False), repeats=5)
+        n_scalar = min(m, 2000)  # scalar loop timed on a slice, scaled up
+        us_scalar_slice, _ = timed(
+            lambda: [costs_lib.pass_costs(cfg, nt[i], ctx[i], 32.0,
+                                          decode=False)
+                     for i in range(n_scalar)], repeats=2)
+        us_scalar = us_scalar_slice * (m / n_scalar)
+        out[str(m)] = {
+            "batch_us": us_batch,
+            "scalar_loop_us": us_scalar,
+            "speedup": us_scalar / us_batch,
+        }
+    return out
+
+
+def bench_measure_batch(sizes: list[int]) -> dict:
+    cfg = PAPER_ZOO["llama2-7b"]
+    out = {}
+    for m in sizes:
+        qs = workload(m, seed=m)
+        tin = np.array([q[0] for q in qs])
+        tout = np.array([q[1] for q in qs])
+        sim_b = AnalyticLLMSimulator(cfg, kv_cache=True, seed=0)
+        t0 = time.perf_counter()
+        sim_b.measure_batch(tin, tout)
+        t_batch = time.perf_counter() - t0
+        n_seq = min(m, 1000)
+        sim_s = AnalyticLLMSimulator(cfg, kv_cache=True, seed=0)
+        t0 = time.perf_counter()
+        for i in range(n_seq):
+            sim_s.measure(int(tin[i]), int(tout[i]))
+        t_seq = (time.perf_counter() - t0) * (m / n_seq)
+        out[str(m)] = {
+            "batch_s": t_batch,
+            "sequential_s_scaled": t_seq,
+            "speedup": t_seq / t_batch,
+            "unique_pairs": int(len(np.unique(np.stack([tin, tout], 1),
+                                              axis=0))),
+        }
+    return out
+
+
+def bench_campaign() -> dict:
+    """Whole-grid batched characterization campaign vs the scalar driver."""
+    cfg = PAPER_ZOO["llama2-7b"]
+    settings = characterize_lib.CampaignSettings(max_trials=5)
+    sim_b = AnalyticLLMSimulator(cfg, kv_cache=False, seed=0)
+    t0 = time.perf_counter()
+    trials_b = characterize_lib.run_campaign(
+        "llama2-7b", None, settings, measure_batch=sim_b.measure_batch)
+    t_batch = time.perf_counter() - t0
+    sim_s = AnalyticLLMSimulator(cfg, kv_cache=False, seed=0)
+    t0 = time.perf_counter()
+    trials_s = characterize_lib.run_campaign("llama2-7b", sim_s.measure,
+                                             settings)
+    t_seq = time.perf_counter() - t0
+    return {
+        "batched_s": t_batch,
+        "sequential_s": t_seq,
+        "speedup": t_seq / t_batch,
+        "trials_batched": len(trials_b),
+        "trials_sequential": len(trials_s),
+    }
+
+
+def bench_schedule(sizes: list[int]) -> dict:
+    out = {}
+    profs = synthetic_fleet(5, seed=1)
+    for m in sizes:
+        qs = workload(m, seed=m)
+        us, asg = timed(lambda: scheduler.schedule(profs, qs, 0.5), repeats=3)
+        out[str(m)] = {"schedule_us": us,
+                       "queries_per_s": m / (us * 1e-6),
+                       "objective": asg.objective}
+    return out
+
+
+def bench_schedule_capacitated(sizes: list[int], headline_m: int,
+                               ref_direct_max: int,
+                               failures: list[str]) -> dict:
+    """Headline (b): chains solver vs the _MinCostFlow oracle.
+
+    The oracle is O(m²k), so it is run directly up to `ref_direct_max`
+    (objectives checked bit-identical at every direct point) and its
+    headline-size runtime is extrapolated from a power-law fit; the chains
+    result at the headline size carries the exact optimality certificate
+    instead of an oracle re-solve."""
+    k = 5
+    profs = synthetic_fleet(k, seed=1)
+    rng = np.random.default_rng(42)
+    gamma = random_gamma(k, rng)
+    zeta = 0.5
+
+    direct_ms = sorted({m for m in (500, 1000, 2000, 5000, ref_direct_max)
+                        if m <= ref_direct_max})
+    if len(direct_ms) < 2:  # the power-law fit needs >= 2 direct points
+        direct_ms = sorted({max(2, ref_direct_max // 4), ref_direct_max})
+    if len(direct_ms) < 2:
+        raise SystemExit("--ref-direct-max too small to fit the oracle "
+                         "runtime (need >= 2 distinct direct sizes)")
+    points = {}
+    for m in direct_ms:
+        qs = workload(m, seed=m)
+        t0 = time.perf_counter()
+        a = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                           method="chains")
+        t_chain = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        b = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                           method="flow")
+        t_flow = time.perf_counter() - t0
+        identical = a.objective == b.objective
+        if not identical and abs(a.objective - b.objective) > 1e-12 * max(
+                1.0, abs(b.objective)):
+            failures.append(
+                f"capacitated objective mismatch at m={m}: "
+                f"chains={a.objective!r} flow={b.objective!r}")
+        points[str(m)] = {
+            "chains_s": t_chain,
+            "flow_s": t_flow,
+            "speedup": t_flow / t_chain,
+            "objective_bit_identical": identical,
+        }
+
+    # power-law fit of the oracle runtime (known ~quadratic in m)
+    ms = np.array([int(m) for m in points], dtype=float)
+    ts = np.array([points[m]["flow_s"] for m in points])
+    slope, intercept = np.polyfit(np.log(ms), np.log(ts), 1)
+    flow_headline_s = float(np.exp(intercept + slope * np.log(headline_m)))
+
+    qs = workload(headline_m, seed=headline_m)
+    t0 = time.perf_counter()
+    a = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                       method="chains")
+    t_chain_headline = time.perf_counter() - t0
+    costs = normalized_costs(profs, qs)
+    C = objective_matrix(costs, zeta)
+    caps = scheduler._capacities_from_gamma(gamma, len(qs))
+    cert = scheduler.capacitated_optimality_certificate(C, a.assignee, caps)
+    if not cert:
+        failures.append(f"optimality certificate failed at m={headline_m}")
+
+    extra_sizes = {}
+    for m in sizes:
+        if str(m) in points or m == headline_m:
+            continue
+        qs_m = workload(m, seed=m)
+        t0 = time.perf_counter()
+        scheduler.schedule_capacitated(profs, qs_m, zeta, gamma,
+                                       method="chains")
+        extra_sizes[str(m)] = {"chains_s": time.perf_counter() - t0}
+
+    return {
+        "k": k,
+        "direct_comparison": points,
+        "flow_runtime_fit": {"log_slope": float(slope),
+                             "log_intercept": float(intercept)},
+        "headline": {
+            "m": headline_m,
+            "chains_s": t_chain_headline,
+            "flow_s_extrapolated": flow_headline_s,
+            "speedup_vs_flow_extrapolated": flow_headline_s / t_chain_headline,
+            "optimality_certificate": cert,
+            "objective": a.objective,
+        },
+        "chains_scaling": extra_sizes,
+    }
+
+
+def bench_cluster(sizes: list[int]) -> dict:
+    from repro.cluster import (ClusterNode, ZetaOnlinePolicy, poisson_trace,
+                               simulate_cluster)
+    from repro.configs import TABLE1
+    from repro.core.energy_model import fit_profile
+    from repro.energy import SWING_NODE
+
+    fleet = ("llama2-7b", "llama2-13b", "llama2-70b")
+    profiles = {}
+    for name in fleet:
+        sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                                   kv_cache=True, noise_sigma=0.0)
+        pts = [(8, 8), (64, 64), (256, 128), (1024, 256), (32, 512),
+               (512, 512), (128, 32), (2048, 64)]
+        pbs = [sim.simulate(a, b) for a, b in pts]
+        profiles[name] = fit_profile(
+            name, TABLE1[name]["a_k"],
+            [p[0] for p in pts], [p[1] for p in pts],
+            [pb.energy_j for pb in pbs], [pb.runtime_s for pb in pbs])
+
+    out = {}
+    for n in sizes:
+        if n > 20000:   # event loop is O(n log n); keep the suite bounded
+            continue
+        trace = poisson_trace(n, 8.0, seed=3)
+        nodes = [ClusterNode(i, PAPER_ZOO[name], profiles[name], SWING_NODE,
+                             max_batch=8) for i, name in enumerate(fleet)]
+        t0 = time.perf_counter()
+        rep = simulate_cluster(trace, nodes, ZetaOnlinePolicy(), zeta=0.5)
+        dt = time.perf_counter() - t0
+        out[str(n)] = {"wall_s": dt, "requests_per_s": n / dt,
+                       "slo": rep.slo_attainment()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="correctness gates only (the scripts/test.sh perf tier)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_core.json"))
+    ap.add_argument("--sizes", default="1000,10000,100000")
+    ap.add_argument("--headline-m", type=int, default=50_000)
+    ap.add_argument("--ref-direct-max", type=int, default=10_000)
+    args = ap.parse_args(argv)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+
+    t_start = time.time()
+    gates, failures = run_gates(args.quick)
+    for name, res in gates.items():
+        print(f"gate.{name},0,{res}")
+
+    if not args.quick:
+        bench = {
+            "decode_cost_tau4096": bench_decode(),
+            "pass_costs_batch": bench_pass_costs_batch(sizes),
+            "measure_batch": bench_measure_batch(sizes),
+            "campaign_grid": bench_campaign(),
+            "schedule": bench_schedule(sizes),
+            "schedule_capacitated": bench_schedule_capacitated(
+                sizes, args.headline_m, args.ref_direct_max, failures),
+            "cluster_sim": bench_cluster(sizes),
+        }
+        dec = bench["decode_cost_tau4096"]["kv_off"]
+        cap = bench["schedule_capacitated"]["headline"]
+        doc = {
+            "suite": "core",
+            "created_unix": time.time(),
+            "wall_s": time.time() - t_start,
+            "headline": {
+                "decode_cost_tau4096_speedup_vs_exact_loop":
+                    dec["speedup_vs_exact_loop"],
+                "decode_cost_tau4096_rel_err": dec["rel_err_vs_exact_loop"],
+                f"schedule_capacitated_m{args.headline_m}_k5_speedup":
+                    cap["speedup_vs_flow_extrapolated"],
+                f"schedule_capacitated_m{args.headline_m}_chains_s":
+                    cap["chains_s"],
+                f"schedule_capacitated_m{args.headline_m}_flow_s_extrapolated":
+                    cap["flow_s_extrapolated"],
+                "objectives_bit_identical_at_direct_points": all(
+                    p["objective_bit_identical"] for p in
+                    bench["schedule_capacitated"]["direct_comparison"].values()),
+                "optimality_certificate_at_headline":
+                    cap["optimality_certificate"],
+            },
+            "gates": gates,
+            "bench": bench,
+            "env": {"python": sys.version.split()[0],
+                    "numpy": np.__version__},
+        }
+        Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"perf_suite.wrote,{(time.time() - t_start) * 1e6:.0f},{args.out}")
+        for key, val in doc["headline"].items():
+            print(f"headline.{key},0,{val}")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL,0,{f}", file=sys.stderr)
+        return 1
+    print(f"perf_suite.ok,{(time.time() - t_start) * 1e6:.0f},"
+          f"{'quick' if args.quick else 'full'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 """Serve streaming Alpaca-like traffic on a heterogeneous cluster and
 print the offline→online gap — a narrated single run of repro.cluster.
 
-    PYTHONPATH=src python examples/cluster_sim.py
+    PYTHONPATH=src:. python examples/cluster_sim.py
 """
 
 from benchmarks.fig4_online_gap import fit_fleet, make_policies, node_builders

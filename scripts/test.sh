@@ -6,6 +6,11 @@
 #   scripts/test.sh fast     fast tier: skips @pytest.mark.slow
 #                            (compile dry-runs, end-to-end pipelines);
 #                            finishes in well under a minute
+#   scripts/test.sh perf     perf tier: benchmarks/perf_suite.py --quick —
+#                            correctness gates for the vectorized hot paths
+#                            (closed-form decode vs chunked reference, fast
+#                            capacitated solver vs min-cost-flow oracle);
+#                            fails on disagreement, never on wall-clock
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -16,6 +21,9 @@ tier="${1:-tier1}"
 case "$tier" in
   fast)  exec python -m pytest -x -q -m "not slow" "$@" ;;
   tier1) exec python -m pytest -x -q "$@" ;;
+  perf)  export PYTHONPATH=".:$PYTHONPATH"
+         exec python benchmarks/perf_suite.py --quick "$@" ;;
   *)     echo "usage: scripts/test.sh [tier1|fast] [pytest args...]" >&2
+         echo "       scripts/test.sh perf [perf_suite args...]" >&2
          exit 2 ;;
 esac

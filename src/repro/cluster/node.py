@@ -17,6 +17,13 @@ Time and energy per phase delegate to repro.energy.simulator
 (repro.energy.hardware.Node), so an uncontended node reproduces the
 per-request simulator's PhaseBreakdown exactly — the energy-conservation
 invariant tested in tests/test_cluster.py.
+
+decode_cost is the exact closed-form integral (additive across segment
+splits, so completion-boundary segmentation conserves energy by
+construction) and both phase costs are memoized inside the simulator per
+(context, steps, batch) — workloads with repeated query shapes never
+re-integrate a decode segment, which is what keeps million-request
+cluster sweeps tractable.
 """
 
 from __future__ import annotations
@@ -70,7 +77,8 @@ class ClusterNode:
         *,
         max_batch: int = 8,
         kv_cache: bool = True,
-        decode_chunk: int = 256,
+        decode_chunk: int = 256,   # legacy reference-loop chunk (decode_cost
+                                   # itself is closed-form and chunk-free)
     ):
         self.node_id = node_id
         self.model_cfg = model_cfg
@@ -145,7 +153,9 @@ class ClusterNode:
             return self._phase_end_s
         if self.active:
             # decode to the next completion boundary (padded batch: every
-            # step attends up to the longest member context)
+            # step attends up to the longest member context); closed-form
+            # and memoized on (base, n_steps, batch), so bursts of
+            # identical requests price each segment shape exactly once
             n_steps = min(m.remaining for m in self.active)
             base = max(m.context for m in self.active)
             t, e = self.sim.decode_cost(base, n_steps, batch=len(self.active))

@@ -23,6 +23,8 @@ from repro.core import stats
 from repro.core.energy_model import LLMProfile, fit_profile
 
 MeasureFn = Callable[[int, int], tuple[float, float]]  # -> (energy_j, runtime_s)
+# arrays of (tau_in, tau_out) -> (energy_j[], runtime_s[])
+MeasureBatchFn = Callable[[np.ndarray, np.ndarray], tuple[np.ndarray, np.ndarray]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,13 +74,29 @@ def _conditions(settings: CampaignSettings) -> list[tuple[str, int, int]]:
 
 def run_campaign(
     model_name: str,
-    measure: MeasureFn,
+    measure: MeasureFn | None,
     settings: CampaignSettings = CampaignSettings(),
+    *,
+    measure_batch: MeasureBatchFn | None = None,
 ) -> list[Trial]:
-    """Run the full §5.1 campaign for one model; returns all trials."""
+    """Run the full §5.1 campaign for one model; returns all trials.
+
+    With `measure` (scalar backend) trials run one (τin, τout, trial) at a
+    time.  With `measure_batch` (e.g. `AnalyticLLMSimulator.measure_batch`)
+    the campaign runs round-based: every still-active condition gets its
+    next trial from ONE vectorized call per round, and the §5.1.3 stopping
+    rule is checked for the whole grid at once
+    (`stats.should_stop_trials_batch`) — the same adaptive-trial semantics,
+    orders of magnitude fewer backend calls."""
     rng = random.Random(settings.seed)
     conds = _conditions(settings)
     rng.shuffle(conds)  # §5.1.3 randomized order
+
+    if measure_batch is not None:
+        return _run_campaign_batched(model_name, measure_batch, conds, settings)
+    if measure is None:
+        raise ValueError("need a measure or measure_batch backend")
+
     trials: list[Trial] = []
     for condition, tin, tout in conds:
         runtimes: list[float] = []
@@ -102,6 +120,50 @@ def run_campaign(
                 max_trials=settings.max_trials,
             ):
                 break
+    return trials
+
+
+def _run_campaign_batched(
+    model_name: str,
+    measure_batch: MeasureBatchFn,
+    conds: list[tuple[str, int, int]],
+    settings: CampaignSettings,
+) -> list[Trial]:
+    """Round-based campaign: one `measure_batch` call per trial round.
+
+    Every active condition has the same trial count within a round, so the
+    stopping rule vectorizes over the whole (conditions, trials) matrix."""
+    trials: list[Trial] = []
+    active = list(range(len(conds)))
+    runtime_hist: list[list[float]] = [[] for _ in conds]
+    round_no = 0
+    while active:
+        tin = np.array([conds[c][1] for c in active], dtype=np.int64)
+        tout = np.array([conds[c][2] for c in active], dtype=np.int64)
+        energy, runtime = measure_batch(tin, tout)
+        for c, e, r in zip(active, energy, runtime):
+            condition, ti, to = conds[c]
+            trials.append(
+                Trial(
+                    model=model_name,
+                    condition=condition,
+                    tau_in=ti,
+                    tau_out=to,
+                    trial_index=round_no,
+                    energy_j=float(e),
+                    runtime_s=float(r),
+                )
+            )
+            runtime_hist[c].append(float(r))
+        round_no += 1
+        if round_no >= settings.min_trials:
+            mat = np.array([runtime_hist[c] for c in active], dtype=np.float64)
+            stop = stats.should_stop_trials_batch(
+                mat,
+                tolerance_s=settings.ci_tolerance_s,
+                max_trials=settings.max_trials,
+            )
+            active = [c for c, s in zip(active, stop) if not s]
     return trials
 
 

@@ -313,6 +313,32 @@ def ci_halfwidth_95(samples: Sequence[float]) -> float:
     return t_critical_975(n - 1) * s / math.sqrt(n)
 
 
+def ci_halfwidth_95_batch(samples: np.ndarray) -> np.ndarray:
+    """Row-wise `ci_halfwidth_95` over a (conditions, trials) matrix —
+    the vectorized form the batched characterization campaign uses to
+    check the §5.1.3 stopping rule for a whole grid per call."""
+    x = np.asarray(samples, dtype=np.float64)
+    if x.ndim != 2:
+        raise ValueError(f"need a (conditions, trials) matrix, got {x.shape}")
+    n = x.shape[1]
+    if n < 2:
+        return np.full(x.shape[0], np.inf)
+    s = x.std(axis=1, ddof=1)
+    return t_critical_975(n - 1) * s / math.sqrt(n)
+
+
+def should_stop_trials_batch(
+    runtimes: np.ndarray, *, tolerance_s: float = 0.5, max_trials: int = 25
+) -> np.ndarray:
+    """Vectorized §5.1.3 stopping rule over a (conditions, trials) matrix
+    (every row has the same trial count, as in round-based batched
+    campaigns).  Returns a boolean mask of conditions that may stop."""
+    x = np.asarray(runtimes, dtype=np.float64)
+    if x.shape[1] >= max_trials:
+        return np.ones(x.shape[0], dtype=bool)
+    return ci_halfwidth_95_batch(x) <= tolerance_s
+
+
 def should_stop_trials(
     runtimes: Sequence[float], *, tolerance_s: float = 0.5, max_trials: int = 25
 ) -> bool:

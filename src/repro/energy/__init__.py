@@ -1,6 +1,13 @@
 """Energy substrate: hardware specs, meters, and the analytic simulator."""
 
-from repro.energy.costs import PassCosts, kv_bytes_per_token, pass_costs  # noqa: F401
+from repro.energy.costs import (  # noqa: F401
+    PassCosts,
+    PassCostsBatch,
+    decode_step_polys,
+    kv_bytes_per_token,
+    pass_costs,
+    pass_costs_batch,
+)
 from repro.energy.hardware import (  # noqa: F401
     A100_40GB,
     EPYC_7742,

@@ -54,13 +54,13 @@ def step_hbm_bytes(cfg: ModelConfig, shape: InputShape) -> float:
     B, S = shape.global_batch, shape.seq_len
     api = get_api(cfg)
     if shape.kind == "train":
-        fwd = pass_costs(cfg, S, S, B).hbm_bytes
+        fwd = pass_costs(cfg, S, S, B, decode=False).hbm_bytes
         opt = api.count_params(cfg) * _OPT_BYTES_PER_PARAM[cfg.optimizer]
         # fwd + bwd (~2x fwd traffic) + remat recompute (~1x) + optimizer
         return fwd * 4.0 + opt
     if shape.kind == "prefill":
-        return pass_costs(cfg, S, S, B).hbm_bytes
-    return pass_costs(cfg, 1, S, B).hbm_bytes
+        return pass_costs(cfg, S, S, B, decode=False).hbm_bytes
+    return pass_costs(cfg, 1, S, B, decode=True).hbm_bytes
 
 
 # ---------------------------------------------------------------------------

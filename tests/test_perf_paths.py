@@ -1,0 +1,318 @@
+"""Vectorized-engine invariants (the PR-2 hot paths).
+
+The closed-form decode integral must equal the per-step reference loop,
+the fast capacitated solver must equal the min-cost-flow oracle, and every
+batch entry point must agree with its scalar counterpart — these are the
+exactness contracts BENCH_core.json's speedups are conditional on."""
+
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_ZOO, get_config
+from repro.core import characterize as ch
+from repro.core import scheduler, stats
+from repro.core.energy_model import (
+    AccuracyModel,
+    BilinearModel,
+    LLMProfile,
+    normalized_costs,
+    objective_matrix,
+)
+from repro.energy import costs as costs_lib
+from repro.energy.simulator import AnalyticLLMSimulator
+
+FAMILY_CONFIGS = {
+    "dense": PAPER_ZOO["llama2-7b"],
+    "moe": PAPER_ZOO["mixtral-8x7b"],
+    "windowed": get_config("mistral-7b"),
+    "ssm": get_config("mamba2-130m"),
+    "hybrid": get_config("recurrentgemma-9b"),
+    "mla": get_config("deepseek-v3-671b"),
+}
+
+
+def make_fleet(k, seed):
+    rng = np.random.default_rng(seed)
+    profs = []
+    for i in range(k):
+        e = BilinearModel(tuple(rng.uniform(0.05, 1.0, 3)))
+        r = BilinearModel(tuple(rng.uniform(1e-4, 1e-2, 3)))
+        profs.append(LLMProfile(f"m{i}", e, r,
+                                AccuracyModel(float(rng.uniform(30, 80)))))
+    return profs
+
+
+def random_instance(seed, m_max=200, k_max=6):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(5, m_max + 1))
+    k = int(rng.integers(2, k_max + 1))
+    queries = [(int(a), int(b)) for a, b in
+               zip(rng.integers(1, 4096, m), rng.integers(1, 4096, m))]
+    profs = make_fleet(k, seed)
+    g = rng.dirichlet(np.ones(k) * rng.uniform(0.5, 3.0))
+    gamma = tuple((g / g.sum()).tolist())
+    zeta = float(rng.uniform(0, 1))
+    return profs, queries, zeta, gamma
+
+
+# ---------------------------------------------------------------------------
+# Closed-form decode integration
+# ---------------------------------------------------------------------------
+
+
+class TestClosedFormDecode:
+    # ranges cross the interesting breakpoints: tiny phases, the
+    # mistral/recurrentgemma window clamps, and the MoE expert-saturation
+    # point in re-prefix mode
+    RANGES = [(1, 1), (1, 3), (2, 7), (8, 100), (32, 512),
+              (3000, 3000), (4000, 300)]
+
+    @pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+    @pytest.mark.parametrize("kv", [True, False])
+    def test_matches_per_step_reference(self, family, kv):
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS[family], batch=4,
+                                   kv_cache=kv, noise_sigma=0.0)
+        for ctx0, n in self.RANGES:
+            t1, e1 = sim.decode_cost(ctx0, n)
+            t2, e2 = sim.decode_cost_chunked(ctx0, n, chunk=1)
+            assert t1 == pytest.approx(t2, rel=1e-9), (family, kv, ctx0, n)
+            assert e1 == pytest.approx(e2, rel=1e-9), (family, kv, ctx0, n)
+
+    def test_additive_over_segment_splits(self):
+        """Exactness makes the integral additive — the property the cluster
+        simulator's completion-boundary segmentation relies on."""
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["windowed"], batch=2,
+                                   kv_cache=True, noise_sigma=0.0)
+        t_a, e_a = sim.decode_cost(100, 700)
+        t_b, e_b = sim.decode_cost(800, 300)
+        t_c, e_c = sim.decode_cost(100, 1000)
+        assert t_a + t_b == pytest.approx(t_c, rel=1e-12)
+        assert e_a + e_b == pytest.approx(e_c, rel=1e-12)
+
+    def test_memoized(self):
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["dense"], batch=2,
+                                   kv_cache=True, noise_sigma=0.0)
+        first = sim.decode_cost(64, 256)
+        assert (64, 256, 2) in sim._decode_memo
+        assert sim.decode_cost(64, 256) == first
+
+    def test_huge_phase_is_cheap_and_finite(self):
+        """Closed form is O(#segments), independent of τout."""
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["dense"], batch=1,
+                                   kv_cache=True, noise_sigma=0.0)
+        t, e = sim.decode_cost(1, 1_000_000)
+        assert np.isfinite(t) and np.isfinite(e) and t > 0 and e > 0
+
+
+class TestDecodeFlag:
+    def test_short_prefill_not_charged_cache_read(self):
+        """The old `new_tokens <= 2` heuristic charged τin ≤ 2 prefills a
+        full-cache read; the explicit flag must not."""
+        cfg = FAMILY_CONFIGS["dense"]
+        pre = costs_lib.pass_costs(cfg, 1, 1024, 8, decode=False)
+        dec = costs_lib.pass_costs(cfg, 1, 1024, 8, decode=True)
+        assert pre.hbm_bytes < dec.hbm_bytes
+        assert pre.flops == dec.flops
+
+    def test_legacy_heuristic_preserved_for_direct_callers(self):
+        cfg = FAMILY_CONFIGS["dense"]
+        assert (costs_lib.pass_costs(cfg, 1, 512, 4)
+                == costs_lib.pass_costs(cfg, 1, 512, 4, decode=True))
+        assert (costs_lib.pass_costs(cfg, 100, 512, 4)
+                == costs_lib.pass_costs(cfg, 100, 512, 4, decode=False))
+
+    def test_prefill_cost_threads_flag(self):
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["dense"], batch=8,
+                                   kv_cache=True, noise_sigma=0.0)
+        t, e = sim.prefill_cost(2)   # τin = 2: heuristic would misclassify
+        pc = costs_lib.pass_costs(sim.cfg, 2, 2, 8, decode=False)
+        assert (t, e) == sim._pass_time_energy(pc)
+
+
+# ---------------------------------------------------------------------------
+# Batch entry points == scalar counterparts
+# ---------------------------------------------------------------------------
+
+
+class TestBatchEquivalence:
+    @pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+    @pytest.mark.parametrize("decode", [False, True])
+    def test_pass_costs_batch_matches_scalar(self, family, decode):
+        cfg = FAMILY_CONFIGS[family]
+        rng = np.random.default_rng(3)
+        nt = rng.integers(1, 4096, 32).astype(float)
+        ctx = nt + rng.integers(0, 4096, 32)
+        bt = rng.integers(1, 64, 32).astype(float)
+        pcb = costs_lib.pass_costs_batch(cfg, nt, ctx, bt, decode=decode)
+        for i in range(len(nt)):
+            pc = costs_lib.pass_costs(cfg, nt[i], ctx[i], bt[i], decode=decode)
+            assert pcb.flops[i] == pytest.approx(pc.flops, rel=1e-12)
+            assert pcb.hbm_bytes[i] == pytest.approx(pc.hbm_bytes, rel=1e-12)
+
+    def test_prefill_cost_batch_matches_scalar(self):
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["moe"], batch=4,
+                                   kv_cache=True, noise_sigma=0.0)
+        tin = np.array([8, 64, 512, 2048])
+        tb, eb = sim.prefill_cost_batch(tin)
+        for i, ti in enumerate(tin):
+            t, e = sim.prefill_cost(int(ti))
+            assert tb[i] == pytest.approx(t, rel=1e-12)
+            assert eb[i] == pytest.approx(e, rel=1e-12)
+
+    def test_measure_batch_stream_identical_to_sequential(self):
+        cfg = FAMILY_CONFIGS["dense"]
+        pts = [(8, 8), (64, 32), (8, 8), (128, 16), (512, 256), (64, 32)]
+        s_seq = AnalyticLLMSimulator(cfg, seed=9)
+        s_bat = AnalyticLLMSimulator(cfg, seed=9)
+        seq = [s_seq.measure(a, b) for a, b in pts]
+        e, r = s_bat.measure_batch([p[0] for p in pts], [p[1] for p in pts])
+        for i, (se, sr) in enumerate(seq):
+            assert e[i] == se and r[i] == sr
+
+
+# ---------------------------------------------------------------------------
+# Fast capacitated solver == min-cost-flow oracle
+# ---------------------------------------------------------------------------
+
+
+class TestCapacitatedChains:
+    def test_matches_flow_oracle_on_50_random_instances(self):
+        for t in range(50):
+            profs, queries, zeta, gamma = random_instance(9000 + t)
+            a = scheduler.schedule_capacitated(profs, queries, zeta, gamma,
+                                               method="chains")
+            b = scheduler.schedule_capacitated(profs, queries, zeta, gamma,
+                                               method="flow")
+            # 1e-12 rel (not ==): duplicate queries admit multiple exact
+            # optima whose identical summands sit at permuted positions,
+            # so numpy's pairwise sum may differ in the last ulp
+            assert abs(a.objective - b.objective) <= 1e-12 * max(
+                1.0, abs(b.objective)), (t, len(queries))
+            caps = scheduler._capacities_from_gamma(gamma, len(queries))
+            assert (a.counts() <= caps).all()
+            assert a.counts().sum() == len(queries)
+
+    def test_default_method_is_chains(self):
+        profs, queries, zeta, gamma = random_instance(123)
+        d = scheduler.schedule_capacitated(profs, queries, zeta, gamma)
+        c = scheduler.schedule_capacitated(profs, queries, zeta, gamma,
+                                           method="chains")
+        assert d.objective == c.objective
+        assert (d.assignee == c.assignee).all()
+
+    def test_unknown_method_rejected(self):
+        profs, queries, zeta, gamma = random_instance(5)
+        with pytest.raises(ValueError):
+            scheduler.schedule_capacitated(profs, queries, zeta, gamma,
+                                           method="auction")
+
+    def test_certificate_accepts_optimal_rejects_perturbed(self):
+        profs, queries, zeta, gamma = random_instance(77, m_max=120)
+        m = len(queries)
+        costs = normalized_costs(profs, queries)
+        C = objective_matrix(costs, zeta)
+        caps = scheduler._capacities_from_gamma(gamma, m)
+        asg = scheduler.schedule_capacitated(profs, queries, zeta, gamma)
+        a = asg.assignee.copy()
+        assert scheduler.capacitated_optimality_certificate(C, a, caps)
+        # find a swap that strictly increases cost -> residual negative cycle
+        for p in range(m):
+            for q in range(m):
+                u, v = a[p], a[q]
+                if u == v:
+                    continue
+                delta = (C[p, v] + C[q, u]) - (C[p, u] + C[q, v])
+                if delta > 1e-6:
+                    bad = a.copy()
+                    bad[p], bad[q] = v, u
+                    assert not scheduler.capacitated_optimality_certificate(
+                        C, bad, caps)
+                    return
+        pytest.skip("no strictly-worsening swap in this instance")
+
+
+class TestEvaluatePassthrough:
+    def test_schedule_computes_objective_matrix_once(self, monkeypatch):
+        calls = {"n": 0}
+        real = scheduler.objective_matrix
+
+        def counting(costs, zeta):
+            calls["n"] += 1
+            return real(costs, zeta)
+
+        monkeypatch.setattr(scheduler, "objective_matrix", counting)
+        profs, queries, zeta, gamma = random_instance(11)
+        scheduler.schedule(profs, queries, zeta)
+        assert calls["n"] == 1
+        calls["n"] = 0
+        scheduler.schedule_capacitated(profs, queries, zeta, gamma)
+        assert calls["n"] == 1
+
+    def test_precomputed_C_gives_identical_assignment(self):
+        profs, queries, zeta, _ = random_instance(13)
+        costs = normalized_costs(profs, queries)
+        C = objective_matrix(costs, zeta)
+        asg = scheduler.schedule(profs, queries, zeta, costs=costs)
+        ref = scheduler._evaluate(costs, asg.assignee, zeta)
+        via_c = scheduler._evaluate(costs, asg.assignee, zeta, C=C)
+        assert ref.objective == via_c.objective
+        assert ref.total_energy_j == via_c.total_energy_j
+
+
+# ---------------------------------------------------------------------------
+# Batched characterization campaign
+# ---------------------------------------------------------------------------
+
+
+SMALL = ch.CampaignSettings(
+    vary_input_range=(8, 64), vary_output_range=(8, 64),
+    grid_range=(8, 64), max_trials=5, seed=0)
+
+
+def _deterministic(tin, tout):
+    e = 0.5 * tin + 2.0 * tout + 1e-2 * tin * tout
+    return e, e / 100.0
+
+
+class TestBatchedCampaign:
+    def test_matches_sequential_for_deterministic_backend(self):
+        seq = ch.run_campaign("m", _deterministic, SMALL)
+        bat = ch.run_campaign("m", None, SMALL, measure_batch=_deterministic)
+
+        def key(trials):
+            return sorted((t.condition, t.tau_in, t.tau_out, t.trial_index,
+                           t.energy_j, t.runtime_s) for t in trials)
+
+        assert key(seq) == key(bat)
+
+    def test_noisy_batched_hits_max_trials(self):
+        rng = np.random.default_rng(0)
+
+        def noisy_batch(tin, tout):
+            e, r = _deterministic(np.asarray(tin, float),
+                                  np.asarray(tout, float))
+            n = rng.lognormal(0, 0.4, size=(2, len(e)))
+            return e * n[0], r * n[1]
+
+        trials = ch.run_campaign("m", None, SMALL, measure_batch=noisy_batch)
+        per_cond = {}
+        for t in trials:
+            per_cond.setdefault((t.condition, t.tau_in, t.tau_out),
+                                []).append(t)
+        assert max(len(v) for v in per_cond.values()) == SMALL.max_trials
+
+    def test_needs_some_backend(self):
+        with pytest.raises(ValueError):
+            ch.run_campaign("m", None, SMALL)
+
+    def test_stats_batch_consistent_with_scalar(self):
+        rng = np.random.default_rng(4)
+        mat = rng.normal(10.0, 2.0, size=(7, 6))
+        hw = stats.ci_halfwidth_95_batch(mat)
+        for i in range(mat.shape[0]):
+            assert hw[i] == pytest.approx(stats.ci_halfwidth_95(mat[i]))
+        stop = stats.should_stop_trials_batch(mat, tolerance_s=2.0,
+                                              max_trials=25)
+        for i in range(mat.shape[0]):
+            assert stop[i] == stats.should_stop_trials(
+                list(mat[i]), tolerance_s=2.0, max_trials=25)

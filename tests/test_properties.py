@@ -93,6 +93,60 @@ def test_normalization_bounds(profs, queries):
 
 
 # ---------------------------------------------------------------------------
+# vectorized engine: closed-form decode == chunked reference;
+# fast capacitated solver == min-cost-flow oracle
+# ---------------------------------------------------------------------------
+
+
+def _family_configs():
+    from repro.configs import PAPER_ZOO, get_config
+    return {
+        "dense": PAPER_ZOO["llama2-7b"],
+        "moe": PAPER_ZOO["mixtral-8x7b"],
+        "windowed": get_config("mistral-7b"),
+        "ssm": get_config("mamba2-130m"),
+        "hybrid": get_config("recurrentgemma-9b"),
+        "mla": get_config("deepseek-v3-671b"),
+    }
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(["dense", "moe", "windowed", "ssm", "hybrid", "mla"]),
+       st.booleans(), st.integers(1, 5000), st.integers(1, 600),
+       st.integers(1, 16))
+def test_closed_form_decode_equals_chunked_reference(family, kv, ctx0,
+                                                     n_steps, batch):
+    from repro.energy.simulator import AnalyticLLMSimulator
+    sim = AnalyticLLMSimulator(_family_configs()[family], batch=batch,
+                               kv_cache=kv, noise_sigma=0.0)
+    t1, e1 = sim.decode_cost(ctx0, n_steps)
+    t2, e2 = sim.decode_cost_chunked(ctx0, n_steps, chunk=1)
+    assert abs(t1 - t2) <= 1e-9 * abs(t2)
+    assert abs(e1 - e2) <= 1e-9 * abs(e2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(profiles_strategy(n_min=2, n_max=6), queries_strategy(m_min=6, m_max=60),
+       st.floats(0.0, 1.0, allow_nan=False),
+       st.lists(st.floats(0.05, 1.0), min_size=6, max_size=6),
+       )
+def test_fast_capacitated_solver_matches_flow_oracle(profs, queries, zeta,
+                                                     raw_gamma):
+    k = len(profs)
+    g = np.asarray(raw_gamma[:k])
+    gamma = tuple((g / g.sum()).tolist())
+    a = scheduler.schedule_capacitated(profs, queries, zeta, gamma,
+                                       method="chains")
+    b = scheduler.schedule_capacitated(profs, queries, zeta, gamma,
+                                       method="flow")
+    # 1e-12 rel (not ==): duplicate queries admit permuted exact optima
+    # whose pairwise sums may differ in the last ulp
+    assert abs(a.objective - b.objective) <= 1e-12 * max(1.0, abs(b.objective))
+    caps = scheduler._capacities_from_gamma(gamma, len(queries))
+    assert (a.counts() <= caps).all()
+
+
+# ---------------------------------------------------------------------------
 # OLS: recovery of planted coefficients
 # ---------------------------------------------------------------------------
 
