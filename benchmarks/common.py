@@ -1,5 +1,5 @@
-"""Shared benchmark utilities: timing + the CSV contract
-(`name,us_per_call,derived`)."""
+"""Shared benchmark utilities: timing, the CSV contract
+(`name,us_per_call,derived`), and the synthetic scheduler fleet."""
 
 from __future__ import annotations
 
@@ -26,4 +26,22 @@ def pow2_range(lo: int, hi: int) -> list[int]:
     while v <= hi:
         out.append(v)
         v *= 2
+    return out
+
+
+def synthetic_fleet(k: int, seed: int):
+    """k random LLMProfiles — the one fleet every scheduler benchmark and
+    perf gate shares, so their numbers stay comparable."""
+    import numpy as np
+
+    from repro.core.energy_model import (AccuracyModel, BilinearModel,
+                                         LLMProfile)
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(k):
+        e = BilinearModel(tuple(rng.uniform(0.05, 1.0, 3)))
+        r = BilinearModel(tuple(rng.uniform(1e-4, 1e-2, 3)))
+        out.append(LLMProfile(f"m{i}", e, r,
+                              AccuracyModel(float(rng.uniform(30.0, 80.0)))))
     return out

@@ -6,8 +6,10 @@ Usage (from the repo root):
         times every hot path and writes BENCH_core.json
     PYTHONPATH=src:. python benchmarks/perf_suite.py --quick     # CI gate:
         correctness checks only (closed-form vs chunked reference, chains
-        solver vs _MinCostFlow, batch vs scalar equivalence); no timing
-        assertions, no JSON.  This is what `scripts/test.sh perf` runs.
+        solver vs _MinCostFlow, batch vs scalar equivalence, warm-start
+        reschedule vs cold solve, jit cost kernel vs the numpy closed
+        form); no timing assertions, no JSON.  This is what
+        `scripts/test.sh perf` runs.
 
     --out PATH            where to write the JSON (default <repo>/BENCH_core.json)
     --sizes A,B,C         workload sizes to sweep (default 1000,10000,100000)
@@ -30,10 +32,20 @@ What is measured:
   * `measure_batch` vs sequential `measure` over characterization grids;
   * `core.scheduler.schedule` (vectorized argmin) throughput;
   * `core.scheduler.schedule_capacitated`: chains vs flow oracle;
+  * `core.sweep.IncrementalScheduler.reschedule`: warm-start small-delta
+    repair vs a cold chains re-solve at the headline size;
+  * `core.sweep.pareto_frontier`: the warm ζ grid vs cold zeta_sweep, and
+    the exact-breakpoint frontier;
+  * `kernels.cost_batch.simulate_batch`: the jitted batch cost kernel
+    (throughput + ≤1e-9 agreement with the numpy closed form);
   * the cluster discrete-event sim with memoized phase costs.
 
 Exit status is nonzero iff any correctness gate fails; timing numbers are
 recorded, never asserted (no flaky wall-clock assertions in CI).
+
+BENCH_core.json keeps the latest full snapshot, plus a `history` list with
+one compact entry per run (commit hash, wall_s, headline numbers) so the
+perf trajectory across PRs stays on record.
 """
 
 from __future__ import annotations
@@ -49,18 +61,16 @@ import numpy as np
 if __package__ in (None, ""):  # `python benchmarks/perf_suite.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.common import timed  # noqa: E402
+from benchmarks.common import synthetic_fleet, timed  # noqa: E402
 
 from repro.configs import PAPER_ZOO, get_config  # noqa: E402
 from repro.core import scheduler  # noqa: E402
 from repro.core import characterize as characterize_lib  # noqa: E402
 from repro.core.energy_model import (  # noqa: E402
-    AccuracyModel,
-    BilinearModel,
-    LLMProfile,
     normalized_costs,
     objective_matrix,
 )
+from repro.core.sweep import IncrementalScheduler, pareto_frontier  # noqa: E402
 from repro.data.workloads import WorkloadSpec, alpaca_like_workload  # noqa: E402
 from repro.energy import costs as costs_lib  # noqa: E402
 from repro.energy.simulator import AnalyticLLMSimulator  # noqa: E402
@@ -75,17 +85,6 @@ GATE_CONFIGS = {
     "recurrentgemma-9b": lambda: get_config("recurrentgemma-9b"),
     "deepseek-v3-671b": lambda: get_config("deepseek-v3-671b"),
 }
-
-
-def synthetic_fleet(k: int, seed: int) -> list[LLMProfile]:
-    rng = np.random.default_rng(seed)
-    out = []
-    for i in range(k):
-        e = BilinearModel(tuple(rng.uniform(0.05, 1.0, 3)))
-        r = BilinearModel(tuple(rng.uniform(1e-4, 1e-2, 3)))
-        out.append(LLMProfile(f"m{i}", e, r,
-                              AccuracyModel(float(rng.uniform(30.0, 80.0)))))
-    return out
 
 
 def workload(m: int, seed: int = 0) -> list[tuple[int, int]]:
@@ -199,6 +198,80 @@ def gate_capacitated_solver(failures: list[str], *, n_instances: int = 8,
     return {"instances": n_instances, "bit_identical": n_exact}
 
 
+def gate_warm_start(failures: list[str], *, n_instances: int = 12) -> dict:
+    """IncrementalScheduler.reschedule after a randomized delta (adds,
+    removals, capacity shifts, ζ moves) must match a cold
+    schedule_capacitated solve on the identical workload: objective within
+    the chains-vs-flow 1e-12-relative equivalence class and the exact
+    LP-optimality certificate (asserted via check=True)."""
+    n_bit = 0
+    for t in range(n_instances):
+        rng = np.random.default_rng(8100 + t)
+        m = int(rng.integers(10, 300))
+        k = int(rng.integers(2, 7))
+        qs = [(int(a), int(b)) for a, b in
+              zip(rng.integers(1, 4096, m), rng.integers(1, 4096, m))]
+        profs = synthetic_fleet(k, seed=t)
+        gamma = random_gamma(k, rng)
+        zeta = float(rng.uniform(0, 1))
+        inc = IncrementalScheduler(profs, qs, zeta, gamma, check=True)
+        n_add = int(rng.integers(0, 8))
+        n_rem = int(rng.integers(0, min(8, m - 1)))
+        added = [(int(a), int(b)) for a, b in
+                 zip(rng.integers(1, 4096, n_add),
+                     rng.integers(1, 4096, n_add))]
+        removed = list(rng.choice(inc.active_ids, size=n_rem, replace=False))
+        z2 = float(np.clip(zeta + rng.uniform(-0.2, 0.2), 0, 1))
+        try:
+            asg = inc.reschedule(added=added, removed=removed, zeta=z2)
+        except RuntimeError as e:
+            failures.append(f"warm-start reschedule failed: instance {t}: {e}")
+            continue
+        cold = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                              z2, gamma)
+        if asg.objective == cold.objective:
+            n_bit += 1
+        elif abs(asg.objective - cold.objective) > 1e-12 * max(
+                1.0, abs(cold.objective)):
+            failures.append(
+                f"warm-start objective mismatch: instance {t} "
+                f"warm={asg.objective!r} cold={cold.objective!r}")
+    return {"instances": n_instances, "bit_identical": n_bit}
+
+
+def gate_jit_cost_kernel(failures: list[str]) -> dict:
+    """kernels.cost_batch.simulate_batch must match the numpy closed form
+    (AnalyticLLMSimulator.simulate) ≤ 1e-9 rel, both KV modes, including
+    window/MoE breakpoint crossings, τout ∈ {0, 1} edges."""
+    try:
+        from repro.kernels import cost_batch
+    except Exception as e:  # noqa: BLE001 — missing jax must not fail CI
+        return {"skipped": f"{type(e).__name__}: {e}"}
+    rng = np.random.default_rng(31)
+    tin = np.concatenate([rng.integers(1, 4096, 24),
+                          [1, 2, 3000, 4095, 4096, 5000]])
+    tout = np.concatenate([rng.integers(1, 4096, 24), [1, 2, 3, 4, 0, 512]])
+    worst = 0.0
+    for name in ("llama2-7b", "mixtral-8x7b", "mistral-7b"):
+        cfg = GATE_CONFIGS[name]()
+        for kv in (True, False):
+            sim = AnalyticLLMSimulator(cfg, batch=4, kv_cache=kv,
+                                       noise_sigma=0.0)
+            e_j, r_j = cost_batch.simulate_batch(sim, tin, tout)
+            for i in range(len(tin)):
+                pb = sim.simulate(int(tin[i]), int(tout[i]))
+                rel = max(abs(e_j[i] - pb.energy_j) / max(abs(pb.energy_j),
+                                                          1e-300),
+                          abs(r_j[i] - pb.runtime_s) / max(abs(pb.runtime_s),
+                                                           1e-300))
+                worst = max(worst, rel)
+                if rel > 1e-9:
+                    failures.append(
+                        f"jit cost kernel mismatch: {name} kv={kv} "
+                        f"tin={tin[i]} tout={tout[i]} rel={rel:.3e}")
+    return {"worst_rel_err": worst, "tolerance": 1e-9}
+
+
 def run_gates(quick: bool) -> tuple[dict, list[str]]:
     failures: list[str] = []
     out = {
@@ -207,6 +280,9 @@ def run_gates(quick: bool) -> tuple[dict, list[str]]:
         "measure_batch": gate_measure_batch(failures),
         "capacitated_solver": gate_capacitated_solver(
             failures, n_instances=8 if quick else 12),
+        "warm_start": gate_warm_start(
+            failures, n_instances=12 if quick else 25),
+        "jit_cost_kernel": gate_jit_cost_kernel(failures),
     }
     return out, failures
 
@@ -422,6 +498,125 @@ def bench_schedule_capacitated(sizes: list[int], headline_m: int,
     }
 
 
+def bench_warm_start(headline_m: int, failures: list[str],
+                     *, delta: int = 64) -> dict:
+    """Headline (c): warm-start small-delta reschedule vs cold chains
+    re-solve at the headline size.  The delta draws from the same workload
+    distribution, so the normalization maxima stay put and the repair does
+    O(delta) chain moves — the small-delta regime the ≥10× target names.
+    A ζ-step re-plan (the sweep's inner move) is timed too."""
+    k = 5
+    profs = synthetic_fleet(k, seed=1)
+    gamma = tuple((np.ones(k) / k).tolist())
+    qs = workload(headline_m, seed=headline_m)
+    inc = IncrementalScheduler(profs, qs, 0.5, gamma)
+    added = workload(delta, seed=headline_m + 1)
+    rng = np.random.default_rng(3)
+    removed = list(rng.choice(inc.active_ids, size=delta, replace=False))
+
+    t0 = time.perf_counter()
+    warm = inc.reschedule(added=added, removed=removed)
+    t_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cold = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                          0.5, gamma)
+    t_cold = time.perf_counter() - t0
+    delta_match = abs(warm.objective - cold.objective) <= 1e-12 * max(
+        1.0, abs(cold.objective))
+    if not delta_match:
+        failures.append(
+            f"warm-start headline objective mismatch at m={headline_m}: "
+            f"warm={warm.objective!r} cold={cold.objective!r}")
+
+    t0 = time.perf_counter()
+    zstep = inc.reschedule(zeta=0.55)
+    t_zeta = time.perf_counter() - t0
+    cold_z = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                            0.55, gamma)
+    zeta_match = abs(zstep.objective - cold_z.objective) <= 1e-12 * max(
+        1.0, abs(cold_z.objective))
+    if not zeta_match:
+        failures.append(f"warm-start ζ-step mismatch at m={headline_m}")
+    return {
+        "m": headline_m,
+        "delta": delta,
+        "warm_reschedule_s": t_warm,
+        "cold_chains_s": t_cold,
+        "speedup": t_cold / t_warm,
+        "zeta_step_warm_s": t_zeta,
+        "objective_matches_cold": delta_match and zeta_match,
+    }
+
+
+def bench_pareto(sizes: list[int], failures: list[str]) -> dict:
+    """Streaming ζ sweep: warm grid vs cold zeta_sweep, and the exact
+    breakpoint frontier's cost."""
+    k = 5
+    profs = synthetic_fleet(k, seed=1)
+    gamma = tuple((np.ones(k) / k).tolist())
+    zetas = np.linspace(0.0, 1.0, 21)
+    out = {}
+    for m in sizes:
+        if m > 20000:   # cold sweep at 21 ζ would dominate the suite
+            continue
+        qs = workload(m, seed=m)
+        t0 = time.perf_counter()
+        warm = pareto_frontier(profs, qs, zetas, gamma=gamma)
+        t_warm = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cold = scheduler.zeta_sweep(profs, qs, zetas, gamma=gamma)
+        t_cold = time.perf_counter() - t0
+        match = all(abs(a.objective - b.objective)
+                    <= 1e-12 * max(1.0, abs(b.objective))
+                    for a, b in zip(warm.assignments, cold))
+        if not match:
+            failures.append(f"pareto grid objective mismatch at m={m}")
+        t0 = time.perf_counter()
+        fr = pareto_frontier(profs, qs, breakpoints=True)
+        t_bp = time.perf_counter() - t0
+        out[str(m)] = {
+            "grid21_warm_s": t_warm,
+            "grid21_cold_s": t_cold,
+            "grid21_speedup": t_cold / t_warm,
+            "grid21_objectives_match": match,
+            "breakpoints": len(fr.breakpoints),
+            "breakpoint_frontier_s": t_bp,
+        }
+    return out
+
+
+def bench_jit_cost_kernel(sizes: list[int]) -> dict:
+    """Jitted batch cost kernel throughput: m-query (and m×k) energy/
+    runtime surfaces in one on-device call vs the numpy closed-form loop."""
+    try:
+        from repro.kernels import cost_batch
+    except Exception as e:  # noqa: BLE001
+        return {"skipped": f"{type(e).__name__}: {e}"}
+    cfg = PAPER_ZOO["llama2-7b"]
+    sim = AnalyticLLMSimulator(cfg, batch=4, kv_cache=True, noise_sigma=0.0)
+    out = {}
+    for m in sizes:
+        rng = np.random.default_rng(m)
+        tin = rng.integers(1, 4096, m)
+        tout = rng.integers(1, 4096, m)
+        us_jit, (e_j, r_j) = timed(
+            lambda: cost_batch.simulate_batch(sim, tin, tout), repeats=3)
+        n_ref = min(m, 2000)      # python loop timed on a slice, scaled up;
+        sim._prefill_memo.clear()  # memo-cold, so the loop pays full price
+        sim._decode_memo.clear()
+        t0 = time.perf_counter()
+        for i in range(n_ref):
+            sim.simulate(int(tin[i]), int(tout[i]))
+        us_ref = (time.perf_counter() - t0) * 1e6 * (m / n_ref)
+        out[str(m)] = {
+            "jit_us": us_jit,
+            "numpy_loop_us_scaled": us_ref,
+            "speedup": us_ref / us_jit,
+            "queries_per_s": m / (us_jit * 1e-6),
+        }
+    return out
+
+
 def bench_cluster(sizes: list[int]) -> dict:
     from repro.cluster import (ClusterNode, ZetaOnlinePolicy, poisson_trace,
                                simulate_cluster)
@@ -460,6 +655,36 @@ def bench_cluster(sizes: list[int]) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def _git_commit() -> str:
+    import subprocess
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _load_history(path: Path) -> list:
+    """Prior runs' compact entries — the perf trajectory across PRs."""
+    if not path.exists():
+        return []
+    try:
+        prev = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return []
+    history = list(prev.get("history", []))
+    if not history and "headline" in prev:
+        # first run after the history feature landed: preserve the last
+        # pre-history snapshot as the opening entry
+        history.append({"commit": "pre-history",
+                        "created_unix": prev.get("created_unix"),
+                        "wall_s": prev.get("wall_s"),
+                        "headline": prev["headline"]})
+    return history
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -485,10 +710,18 @@ def main(argv: list[str] | None = None) -> int:
             "schedule": bench_schedule(sizes),
             "schedule_capacitated": bench_schedule_capacitated(
                 sizes, args.headline_m, args.ref_direct_max, failures),
+            "warm_start_reschedule": bench_warm_start(
+                args.headline_m, failures),
+            "pareto_sweep": bench_pareto(sizes, failures),
+            "jit_cost_kernel": bench_jit_cost_kernel(sizes),
             "cluster_sim": bench_cluster(sizes),
         }
         dec = bench["decode_cost_tau4096"]["kv_off"]
         cap = bench["schedule_capacitated"]["headline"]
+        ws = bench["warm_start_reschedule"]
+        jit = bench["jit_cost_kernel"]
+        jit_top = (None if "skipped" in jit
+                   else jit[max(jit, key=lambda s: int(s))])
         doc = {
             "suite": "core",
             "created_unix": time.time(),
@@ -508,12 +741,29 @@ def main(argv: list[str] | None = None) -> int:
                     bench["schedule_capacitated"]["direct_comparison"].values()),
                 "optimality_certificate_at_headline":
                     cap["optimality_certificate"],
+                f"warm_start_reschedule_m{args.headline_m}_delta{ws['delta']}"
+                "_speedup": ws["speedup"],
+                f"warm_start_reschedule_m{args.headline_m}_warm_s":
+                    ws["warm_reschedule_s"],
+                "warm_start_objective_matches_cold":
+                    ws["objective_matches_cold"],
+                "jit_cost_kernel_worst_rel_err":
+                    gates["jit_cost_kernel"].get("worst_rel_err"),
+                "jit_cost_kernel_queries_per_s":
+                    None if jit_top is None else jit_top["queries_per_s"],
             },
             "gates": gates,
             "bench": bench,
             "env": {"python": sys.version.split()[0],
                     "numpy": np.__version__},
         }
+        out_path = Path(args.out)
+        doc["history"] = _load_history(out_path) + [{
+            "commit": _git_commit(),
+            "created_unix": doc["created_unix"],
+            "wall_s": doc["wall_s"],
+            "headline": doc["headline"],
+        }]
         Path(args.out).write_text(json.dumps(doc, indent=2) + "\n")
         print(f"perf_suite.wrote,{(time.time() - t_start) * 1e6:.0f},{args.out}")
         for key, val in doc["headline"].items():

@@ -11,6 +11,7 @@ from benchmarks import (
     fig1_input_tokens,
     fig2_output_tokens,
     fig3_zeta_sweep,
+    fig_pareto,
     roofline_bench,
     table1_models,
     table2_anova,
@@ -24,6 +25,7 @@ SUITES = [
     ("table2", table2_anova),
     ("table3", table3_ols),
     ("fig3", fig3_zeta_sweep),
+    ("fig_pareto", fig_pareto),
     ("roofline", roofline_bench),
 ]
 

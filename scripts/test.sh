@@ -9,7 +9,9 @@
 #   scripts/test.sh perf     perf tier: benchmarks/perf_suite.py --quick —
 #                            correctness gates for the vectorized hot paths
 #                            (closed-form decode vs chunked reference, fast
-#                            capacitated solver vs min-cost-flow oracle);
+#                            capacitated solver vs min-cost-flow oracle,
+#                            warm-start reschedule vs cold solve, jitted
+#                            batch cost kernel vs the numpy closed form);
 #                            fails on disagreement, never on wall-clock
 set -e
 cd "$(dirname "$0")/.."

@@ -19,9 +19,12 @@ Module map (the event model, and how the pieces plug together):
                   energy against the per-request AnalyticLLMSimulator.
     policies.py — online routers: round_robin, random, least_loaded,
                   greedy_energy (profile-predicted argmin), zeta_online
-                  (Eq. 2 with causal running normalizers), and
-                  offline_oracle (replays core.scheduler.schedule() over
-                  the full trace — the lower bound on the Eq. 2 objective).
+                  (Eq. 2 with causal running normalizers), zeta_replan
+                  (the γ-capacitated partition maintained online over a
+                  sliding window via core.sweep.IncrementalScheduler's
+                  warm-start reschedule), and offline_oracle (replays
+                  core.scheduler.schedule() over the full trace — the
+                  lower bound on the Eq. 2 objective).
                   New policies subclass RoutingPolicy and implement
                   select(req, nodes, now); attach() gives them the fleet
                   and (for oracle-grade information models) the trace.
@@ -49,6 +52,7 @@ from repro.cluster.policies import (  # noqa: F401
     RoundRobinPolicy,
     RoutingPolicy,
     ZetaOnlinePolicy,
+    ZetaReplanPolicy,
 )
 from repro.cluster.sim import compare_policies, fresh_nodes, simulate_cluster  # noqa: F401
 from repro.cluster.trace import (  # noqa: F401

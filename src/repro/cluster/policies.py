@@ -23,12 +23,14 @@ of online regret that vanishes as the trace warms up.
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.energy_model import LLMProfile, normalized_costs, objective_matrix
 from repro.core.scheduler import schedule
+from repro.core.sweep import IncrementalScheduler
 
 from repro.cluster.trace import ArrivalTrace, TracedRequest
 
@@ -134,17 +136,114 @@ class ZetaOnlinePolicy(RoutingPolicy):
         self._e_max = 0.0
         self._a_max = 0.0
 
-    def select(self, req, nodes, now):
+    def _observe(self, req, nodes):
+        """Fold a request into the running normalizers (every arrival must
+        pass through here, whatever routing rule ends up deciding it)."""
         e = np.array([float(n.profile.energy(req.tau_in, req.tau_out))
                       for n in nodes])
         a = np.array([float(n.profile.accuracy(req.tau_in, req.tau_out))
                       for n in nodes])
         self._e_max = max(self._e_max, float(e.max()))
         self._a_max = max(self._a_max, float(a.max()))
+        return e, a
+
+    def select(self, req, nodes, now):
+        e, a = self._observe(req, nodes)
         obj = self.zeta * e / self._e_max - (1.0 - self.zeta) * a / self._a_max
         order = np.argsort(obj, kind="stable")
         best = [nodes[i] for i in order if obj[i] <= obj[order[0]] + 1e-12]
         return self._least_loaded(best)
+
+
+class ZetaReplanPolicy(ZetaOnlinePolicy):
+    """Periodic warm-start re-planner: zeta_online upgraded with the
+    γ-capacitated offline partition, maintained incrementally online.
+
+    Keeps a sliding window of the last `window` observed queries inside a
+    ``core.sweep.IncrementalScheduler`` and, every `replan_every`
+    arrivals, applies the delta (arriving queries in, expired window
+    entries out) via ``reschedule`` — an O(delta) warm-start repair of the
+    exact capacitated Eq. 2 optimum, not a cold re-solve.  An arrival that
+    was part of the latest re-plan is routed to the model its slot got in
+    the refreshed partition; arrivals between re-plans (replan_every > 1)
+    and the pre-warmup prefix fall back to the causal zeta_online rule.
+
+    `gamma` defaults to the fleet's replica shares, so the plan enforces
+    the data-center partition of the paper's §6.3 case study causally —
+    something the pointwise-argmin policies cannot express."""
+
+    name = "zeta_replan"
+
+    def __init__(self, zeta: float | None = None, *,
+                 gamma: Sequence[float] | None = None,
+                 window: int = 512, replan_every: int = 1,
+                 min_queries: int = 4):
+        super().__init__(zeta)
+        if window < 1 or replan_every < 1:
+            raise ValueError("window and replan_every must be >= 1")
+        if replan_every > window:
+            raise ValueError("replan_every must be <= window (each replan "
+                             "folds at most a window's worth of arrivals)")
+        self.gamma_arg = None if gamma is None else tuple(gamma)
+        self.window = window
+        self.replan_every = replan_every
+        self.min_queries = min_queries
+
+    def attach(self, nodes, trace, zeta):
+        super().attach(nodes, trace, zeta)
+        self._profiles = unique_profiles(nodes)
+        if self.gamma_arg is not None:
+            self._gamma = self.gamma_arg
+        else:  # replica shares: each model's fraction of the fleet
+            hosts = {p.name: 0 for p in self._profiles}
+            for n in nodes:
+                hosts[n.profile.name] += 1
+            self._gamma = tuple(hosts[p.name] / len(nodes)
+                                for p in self._profiles)
+        if len(self._gamma) != len(self._profiles):
+            raise ValueError("gamma length must match the distinct models")
+        self._sched: IncrementalScheduler | None = None
+        self._window_ids: deque[int] = deque()
+        self._pending: list[tuple[int, int]] = []
+
+    def _replan(self) -> None:
+        """Fold pending arrivals in, expired window entries out — one
+        warm-start reschedule call for the whole delta."""
+        if self._sched is None:
+            self._sched = IncrementalScheduler(
+                self._profiles, self._pending, self.zeta, self._gamma)
+            self._window_ids.extend(range(len(self._pending)))
+            if len(self._window_ids) > self.window:  # warmup > window
+                expired = [self._window_ids.popleft() for _ in
+                           range(len(self._window_ids) - self.window)]
+                self._sched.reschedule(removed=expired)
+        else:
+            first_id = self._sched.next_id
+            n_new = len(self._pending)
+            expired = []
+            while (self._window_ids
+                   and len(self._window_ids) + n_new > self.window):
+                expired.append(self._window_ids.popleft())
+            self._sched.reschedule(added=self._pending, removed=expired)
+            self._window_ids.extend(range(first_id, first_id + n_new))
+        self._pending = []
+
+    def select(self, req, nodes, now):
+        self._pending.append((req.tau_in, req.tau_out))
+        n_seen = (len(self._pending) if self._sched is None
+                  else self._sched.next_id + len(self._pending))
+        warmed = n_seen >= max(self.min_queries, len(self._profiles))
+        if warmed and (self._sched is None
+                       or len(self._pending) >= self.replan_every):
+            # normalizers see every arrival: here explicitly, on the
+            # fallback path inside super().select
+            self._observe(req, nodes)
+            self._replan()
+            model = self._sched.model_of(self._sched.next_id - 1)
+            hosts = self._nodes_hosting(nodes, model)
+            return self._least_loaded(hosts)
+        # pre-warmup / between re-plans: causal zeta_online fallback
+        return super().select(req, nodes, now)
 
 
 class OfflineOraclePolicy(RoutingPolicy):

@@ -16,10 +16,17 @@ from repro.core.energy_model import (  # noqa: F401
 )
 from repro.core.scheduler import (  # noqa: F401
     Assignment,
+    capacitated_optimality_certificate,
     schedule,
     schedule_capacitated,
     schedule_random,
     schedule_round_robin,
     schedule_single_model,
     zeta_sweep,
+)
+from repro.core.sweep import (  # noqa: F401
+    IncrementalScheduler,
+    ParetoFrontier,
+    frontier_breakpoints,
+    pareto_frontier,
 )

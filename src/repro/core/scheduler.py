@@ -35,6 +35,15 @@ share constraints), for which exact combinatorial algorithms exist:
     certificate used by the perf suite at sizes where the oracle is too
     slow to run.
 
+    ``schedule_capacitated(..., warm_start=prior_assignee)`` repairs an
+    existing assignment instead of solving from scratch:
+    negative-cycle/negative-chain canceling on the same K-bin residual
+    graph (``_repair_assignment``), terminating exactly when the
+    optimality certificate holds.  With a near-optimal prior (the previous
+    ζ of a sweep, or a workload that changed by a few queries) the repair
+    does O(delta) chain moves instead of O(m) — the substrate of
+    ``repro.core.sweep``'s incremental re-planner.
+
 Baselines from the paper's Figure 3: single-model, round-robin, random.
 """
 
@@ -262,6 +271,120 @@ def _solve_capacitated_flow(C: np.ndarray, caps: np.ndarray) -> np.ndarray:
     return assignee
 
 
+class _ArcHeaps:
+    """Lazy per-arc regret heaps over an assignment (the chains solver's
+    and the warm-start repair's shared bookkeeping).
+
+    ``heaps[u][v]`` holds (C[i,v] − C[i,u], i) for queries i assigned to u
+    at push time; entries go stale when i moves (or is retired to bin −1)
+    and are skipped lazily against the live ``assignee`` array, which is
+    shared by reference with the caller."""
+
+    def __init__(self, C: np.ndarray, assignee: np.ndarray, k: int):
+        self.C = C
+        self.assignee = assignee
+        self.k = k
+        self.heaps: list[list[list]] = [[[] for _ in range(k)]
+                                        for _ in range(k)]
+        for u in range(k):
+            idx = np.nonzero(assignee == u)[0]
+            if not len(idx):
+                continue
+            base = C[idx, u]
+            for v in range(k):
+                if v == u:
+                    continue
+                h = list(zip((C[idx, v] - base).tolist(), idx.tolist()))
+                heapq.heapify(h)
+                self.heaps[u][v] = h
+
+    def arc_min(self, u: int, v: int):
+        """(cost, query) of the current cheapest u→v reassignment."""
+        h = self.heaps[u][v]
+        a = self.assignee
+        while h and a[h[0][1]] != u:
+            heapq.heappop(h)
+        return h[0] if h else None
+
+    def push(self, i: int, v: int) -> None:
+        """Register query i as newly assigned to bin v."""
+        ci = self.C[i]
+        bv = ci[v]
+        for w in range(self.k):
+            if w != v:
+                heapq.heappush(self.heaps[v][w], (float(ci[w] - bv), i))
+
+    def residual(self, counts: np.ndarray) -> list[list[float]]:
+        """Current cheapest-regret matrix R (inf where no query to move)."""
+        k = self.k
+        INF = float("inf")
+        R = [[INF] * k for _ in range(k)]
+        for u in range(k):
+            if counts[u] == 0:
+                continue
+            for v in range(k):
+                if v != u:
+                    top = self.arc_min(u, v)
+                    if top is not None:
+                        R[u][v] = top[0]
+        return R
+
+
+def _cheapest_chain(R: list[list[float]], k: int,
+                    sources, targets) -> tuple[float, list[int]] | None:
+    """Cheapest residual chain from any source bin to any target bin.
+
+    Edge-count-bounded Bellman–Ford DP (≤ k−1 arcs) with per-level parent
+    pointers: unlike Floyd–Warshall next-hop reconstruction, it cannot
+    loop when fp rounding of tied path sums creates ~1e-19-weight residual
+    cycles (degenerate workloads with many duplicate queries do this).
+    Any cycle a pathological instance still smuggles into the parent chain
+    is spliced out — the removed cycle weight is fp noise by the no-
+    negative-cycle invariant, so the cost is unchanged up to ulps."""
+    INF = float("inf")
+    src = set(int(s) for s in sources)
+    tgt = [int(t) for t in targets]
+    if not src or not tgt:
+        return None
+    prev = [0.0 if v in src else INF for v in range(k)]
+    pars: list[list[int]] = []
+    best: tuple[float, int, int] | None = None   # (cost, n_edges, dest)
+    for _ in range(1, k):
+        cur = [INF] * k
+        par = [-1] * k
+        for u in range(k):
+            pu = prev[u]
+            if pu == INF:
+                continue
+            Ru = R[u]
+            for v in range(k):
+                w = Ru[v]
+                if w < INF and pu + w < cur[v]:
+                    cur[v] = pu + w
+                    par[v] = u
+        pars.append(par)
+        for d in tgt:
+            if cur[d] < INF and (best is None or cur[d] < best[0]):
+                best = (cur[d], len(pars), d)
+        prev = cur
+    if best is None:
+        return None
+    cost, e, v = best
+    path = [v]
+    for level in range(e - 1, -1, -1):
+        v = pars[level][v]
+        path.append(v)
+    path.reverse()
+    while len(set(path)) != len(path):   # splice out fp-tie cycles
+        seen: dict[int, int] = {}
+        for i, b in enumerate(path):
+            if b in seen:
+                path = path[:seen[b]] + path[i:]
+                break
+            seen[b] = i
+    return cost, path
+
+
 def _solve_capacitated_chains(C: np.ndarray, caps: np.ndarray) -> np.ndarray:
     """Exact fast path exploiting k ≪ m: successive shortest reassignment
     chains on the k-bin aggregated residual graph.
@@ -284,93 +407,27 @@ def _solve_capacitated_chains(C: np.ndarray, caps: np.ndarray) -> np.ndarray:
     if n_moves == 0:
         return assignee
 
-    # per-arc (u, v) heap of (regret C[i,v] − C[i,u], i) over queries i on u;
-    # entries go stale when i moves and are skipped lazily.
-    heaps: list[list[list | None]] = [[None] * k for _ in range(k)]
-    for u in range(k):
-        idx = np.nonzero(assignee == u)[0]
-        base = C[idx, u] if len(idx) else None
-        for v in range(k):
-            if v == u:
-                continue
-            if len(idx):
-                h = list(zip((C[idx, v] - base).tolist(), idx.tolist()))
-                heapq.heapify(h)
-            else:
-                h = []
-            heaps[u][v] = h
-
-    INF = float("inf")
-
-    def arc_min(u: int, v: int):
-        """(cost, query) of the current cheapest u→v reassignment."""
-        h = heaps[u][v]
-        while h and assignee[h[0][1]] != u:
-            heapq.heappop(h)
-        return h[0] if h else None
-
+    arcs = _ArcHeaps(C, assignee, k)
     for _ in range(n_moves):
-        # residual arc costs between bins (python lists: k is tiny)
-        R = [[INF] * k for _ in range(k)]
-        for u in range(k):
-            if counts[u] == 0:
-                continue
-            for v in range(k):
-                if v != u:
-                    top = arc_min(u, v)
-                    if top is not None:
-                        R[u][v] = top[0]
-        # Floyd–Warshall with next-hop (no negative cycles by the SSP invariant)
-        dist = [row[:] for row in R]
-        nxt = [[j for j in range(k)] for _ in range(k)]
-        for i in range(k):
-            dist[i][i] = 0.0
-        for w in range(k):
-            dw = dist[w]
-            for i in range(k):
-                diw = dist[i][w]
-                if diw == INF:
-                    continue
-                di = dist[i]
-                ni = nxt[i]
-                niw = ni[w]
-                for j in range(k):
-                    nd = diw + dw[j]
-                    if nd < di[j]:
-                        di[j] = nd
-                        ni[j] = niw
-        best = None
-        for s in range(k):
-            if counts[s] <= caps[s]:
-                continue
-            ds = dist[s]
-            for d in range(k):
-                if counts[d] < caps[d] and ds[d] < INF:
-                    if best is None or ds[d] < best[0]:
-                        best = (ds[d], s, d)
-        if best is None:
+        R = arcs.residual(counts)
+        found = _cheapest_chain(
+            R, k,
+            sources=[s for s in range(k) if counts[s] > caps[s]],
+            targets=[d for d in range(k) if counts[d] < caps[d]])
+        if found is None:
             raise RuntimeError("no augmenting chain — infeasible capacities")
-        _, s, d = best
-        path = [s]
-        while path[-1] != d:
-            path.append(nxt[path[-1]][d])
-            if len(path) > k + 1:
-                raise RuntimeError("chain reconstruction cycled")
+        _, path = found
         # gather the chain's moves from the pre-move state, then apply
         moves = []
         for u, v in zip(path, path[1:]):
-            top = arc_min(u, v)
+            top = arcs.arc_min(u, v)
             assert top is not None, "arc vanished mid-chain"
             moves.append((u, v, top[1]))
         for u, v, i in moves:
             assignee[i] = v
             counts[u] -= 1
             counts[v] += 1
-            ci = C[i]
-            base_v = ci[v]
-            for w in range(k):
-                if w != v:
-                    heapq.heappush(heaps[v][w], (float(ci[w] - base_v), i))
+            arcs.push(i, v)
     return assignee
 
 
@@ -410,30 +467,152 @@ def capacitated_optimality_certificate(
     return True
 
 
+def _find_negative_cycle(R: list[list[float]], k: int,
+                         tol: float) -> list[int] | None:
+    """Bellman–Ford negative-cycle detection on the k-bin residual graph.
+    Returns the cycle as a bin sequence [b0, ..., bl] whose arcs are the
+    consecutive pairs plus the closing (bl, b0), or None."""
+    INF = float("inf")
+    dist = [0.0] * k          # virtual source at distance 0 to every bin
+    pred = [-1] * k
+    x = -1
+    for _ in range(k):
+        x = -1
+        for u in range(k):
+            du = dist[u]
+            Ru = R[u]
+            for v in range(k):
+                w = Ru[v]
+                if w < INF and du + w < dist[v] - tol:
+                    dist[v] = du + w
+                    pred[v] = u
+                    x = v
+        if x < 0:
+            return None
+    for _ in range(k):        # walk into the cycle x is reachable from
+        x = pred[x]
+    cyc = [x]
+    v = pred[x]
+    while v != x:
+        cyc.append(v)
+        v = pred[v]
+    cyc.reverse()             # arcs: (cyc[i], cyc[i+1]) and (cyc[-1], cyc[0])
+    return cyc
+
+
+def _repair_assignment(C: np.ndarray, caps: np.ndarray, assignee: np.ndarray,
+                       *, tol: float | None = None) -> np.ndarray:
+    """Exact repair of an arbitrary warm-start assignment to the optimum of
+    the capacitated transportation LP.
+
+    Restores feasibility (cheapest surplus→deficit chains) and optimality
+    (negative-cycle / negative-chain canceling, Klein's algorithm on the
+    k-bin aggregated residual graph), terminating exactly when
+    ``capacitated_optimality_certificate`` holds.  Arc minima come from
+    the same lazy ``_ArcHeaps`` the cold chains solver uses — O(k log m)
+    per move after an O(mk) build — so a near-optimal warm start costs
+    O(delta) chain moves, and even a far-from-optimal one (e.g. the
+    normalizers shifted under a workload edit, re-ranking whole duplicate
+    groups) stays a constant factor of the cold solve.  Termination is
+    guaranteed: every cancellation strictly decreases the objective by
+    more than ``tol`` at fixed counts, and every feasibility move strictly
+    decreases total surplus."""
+    m, k = C.shape
+    if int(caps.sum()) < m:
+        raise RuntimeError(f"infeasible: capacities {caps.tolist()} < {m} queries")
+    assignee = np.asarray(assignee, dtype=np.int64).copy()
+    if assignee.shape != (m,) or ((assignee < 0) | (assignee >= k)).any():
+        raise ValueError("warm_start must be an (m,) array of bin indices")
+    if tol is None:
+        tol = 1e-12 * max(1.0, float(np.abs(C).max()))
+    counts = np.bincount(assignee, minlength=k)
+    arcs = _ArcHeaps(C, assignee, k)
+
+    def apply_moves(path: list[int], cyclic: bool) -> None:
+        pairs = list(zip(path, path[1:]))
+        if cyclic:
+            pairs.append((path[-1], path[0]))
+        # gather every move from the pre-move state, then apply (a query
+        # entering bin v mid-chain must not be re-moved by the (v, w) arc)
+        moves = []
+        for u, v in pairs:
+            top = arcs.arc_min(u, v)
+            assert top is not None, "stale residual arc"
+            moves.append((u, v, top[1]))
+        for u, v, i in moves:
+            assert assignee[i] == u, "stale residual arc"
+            assignee[i] = v
+            counts[u] -= 1
+            counts[v] += 1
+            arcs.push(i, v)
+
+    max_iter = 64 * (m + k * k) + 1024   # bug guard, not an algorithmic bound
+    for _ in range(max_iter):
+        R = arcs.residual(counts)
+        cyc = _find_negative_cycle(R, k, tol)
+        if cyc is not None:
+            apply_moves(cyc, cyclic=True)
+            continue
+        surplus = np.nonzero(counts > caps)[0]
+        deficit = [d for d in range(k) if counts[d] < caps[d]]
+        if len(surplus):
+            found = _cheapest_chain(R, k, sources=surplus, targets=deficit)
+            if found is None:
+                raise RuntimeError("no augmenting chain — infeasible capacities")
+            apply_moves(found[1], cyclic=False)
+            continue
+        found = _cheapest_chain(R, k, sources=range(k), targets=deficit)
+        if found is None or found[0] >= -tol:
+            return assignee      # certificate conditions hold — exact optimum
+        apply_moves(found[1], cyclic=False)
+    raise RuntimeError("warm-start repair did not converge (pathological C?)")
+
+
 def schedule_capacitated(
     profiles: Sequence[LLMProfile],
     queries: Sequence[Query],
     zeta: float,
-    gamma: Sequence[float],
+    gamma: Sequence[float] | None = None,
     *,
     costs: NormalizedCosts | None = None,
     method: str = "chains",
+    caps: Sequence[int] | None = None,
+    warm_start: np.ndarray | None = None,
 ) -> Assignment:
     """Exact optimum of Eq. 2 with |Q_K| ≤ γ_K·|Q| capacities.
 
     method="chains" (default) is the fast aggregated successive-shortest-
     path solver; method="flow" is the full min-cost-flow reference oracle.
     Both are exact — the perf suite and tests assert their objectives
-    coincide."""
+    coincide.
+
+    Capacities come from `gamma` (shares of m, the paper's γ_K) or an
+    explicit integer `caps` vector — exactly one of the two.  With
+    `warm_start=` (a prior (m,) assignee array, chains method only) the
+    solution is repaired from the prior via `_repair_assignment` instead
+    of re-solved; the result is still exact."""
     if costs is None:
         costs = normalized_costs(profiles, queries)
     C = objective_matrix(costs, zeta)
-    m, _ = C.shape
-    caps = _capacities_from_gamma(gamma, m)
-    if method == "chains":
-        assignee = _solve_capacitated_chains(C, caps)
+    m, k = C.shape
+    if (gamma is None) == (caps is None):
+        raise ValueError("pass exactly one of gamma= or caps=")
+    if caps is None:
+        caps_arr = _capacities_from_gamma(gamma, m)
+    else:
+        caps_arr = np.asarray(caps, dtype=np.int64)
+        if caps_arr.shape != (k,) or (caps_arr < 0).any():
+            raise ValueError(f"caps must be a non-negative ({k},) vector")
+        if int(caps_arr.sum()) < m:
+            raise ValueError(f"infeasible caps: sum {caps_arr.sum()} < {m}")
+    if warm_start is not None:
+        if method != "chains":
+            raise ValueError("warm_start= requires method='chains'")
+        assignee = _repair_assignment(C, caps_arr, warm_start)
+    elif method == "chains":
+        assignee = _solve_capacitated_chains(C, caps_arr)
     elif method == "flow":
-        assignee = _solve_capacitated_flow(C, caps)
+        assignee = _solve_capacitated_flow(C, caps_arr)
     else:
         raise ValueError(f"unknown method {method!r}; use 'chains' or 'flow'")
     return _evaluate(costs, assignee, zeta, C=C)
@@ -493,7 +672,11 @@ def zeta_sweep(
     *,
     gamma: Sequence[float] | None = None,
 ) -> list[Assignment]:
-    """The paper's Figure 3 sweep: one Assignment per ζ value."""
+    """The paper's Figure 3 sweep: one Assignment per ζ value.
+
+    Cold solve per ζ (kept as the simple reference); the streaming engine
+    with warm-start reuse across adjacent ζ and exact frontier breakpoints
+    is ``repro.core.sweep.pareto_frontier``."""
     costs = normalized_costs(profiles, queries)
     out = []
     for z in zetas:

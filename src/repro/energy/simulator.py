@@ -38,7 +38,24 @@ from repro.energy.hardware import Node, SWING_NODE, min_accelerators
 from repro.models import get_api
 from repro.models.common import ModelConfig
 
-_MEMO_MAX_ENTRIES = 1 << 17   # per-cache bound; cleared wholesale when hit
+_MEMO_MAX_ENTRIES = 1 << 17   # per-cache LRU bound
+
+
+def _lru_get(memo: dict, key):
+    """Hit = move-to-end (dicts preserve insertion order, so the front is
+    always the least-recently-used entry)."""
+    out = memo.pop(key, None)
+    if out is not None:
+        memo[key] = out
+    return out
+
+
+def _lru_put(memo: dict, key, val, limit: int) -> None:
+    """Insert, evicting the least-recently-used entry at the bound —
+    wholesale clearing used to drop the hot keys mid-campaign."""
+    if len(memo) >= limit:
+        memo.pop(next(iter(memo)))
+    memo[key] = val
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,9 +136,11 @@ class AnalyticLLMSimulator:
 
         # phase-cost memos: repeated (context, steps, batch) segments are
         # common in cluster sims (identical queries, completion-boundary
-        # batching) and must not re-integrate.
+        # batching) and must not re-integrate.  LRU-bounded (move-to-end on
+        # hit, evict-oldest on insert) so long campaigns keep hot keys.
         self._prefill_memo: dict[tuple, tuple[float, float]] = {}
         self._decode_memo: dict[tuple, tuple[float, float]] = {}
+        self._memo_max_entries = _MEMO_MAX_ENTRIES
 
     # ------------------------------------------------------------------
     def _pass_time_energy(self, pc: costs_lib.PassCosts) -> tuple[float, float]:
@@ -162,13 +181,11 @@ class AnalyticLLMSimulator:
         """(seconds, accelerator joules) of one prefill pass over the prompt."""
         B = self.batch if batch is None else batch
         key = (tau_in, B)
-        out = self._prefill_memo.get(key)
+        out = _lru_get(self._prefill_memo, key)
         if out is None:
             pc = costs_lib.pass_costs(self.cfg, tau_in, tau_in, B, decode=False)
             out = self._pass_time_energy(pc)
-            if len(self._prefill_memo) >= _MEMO_MAX_ENTRIES:
-                self._prefill_memo.clear()
-            self._prefill_memo[key] = out
+            _lru_put(self._prefill_memo, key, out, self._memo_max_entries)
         return out
 
     def prefill_cost_batch(self, tau_in, batch: int | None = None
@@ -197,12 +214,10 @@ class AnalyticLLMSimulator:
         if n_steps <= 0:
             return 0.0, 0.0
         key = (ctx0, n_steps, B)
-        out = self._decode_memo.get(key)
+        out = _lru_get(self._decode_memo, key)
         if out is None:
             out = self._decode_closed_form(ctx0, n_steps, B)
-            if len(self._decode_memo) >= _MEMO_MAX_ENTRIES:
-                self._decode_memo.clear()
-            self._decode_memo[key] = out
+            _lru_put(self._decode_memo, key, out, self._memo_max_entries)
         return out
 
     def _step_pass(self, L: float, B: float) -> costs_lib.PassCosts:

@@ -1,0 +1,390 @@
+"""jit/Pallas batch cost kernels — the analytic energy surface on device.
+
+``simulate_batch(sim, tau_in, tau_out)`` evaluates what
+``AnalyticLLMSimulator.simulate`` computes — one prefill roofline pass
+plus the EXACT closed-form decode integral (piecewise-quadratic power
+sums per roofline branch, ``repro.energy.simulator``'s algorithm) — over
+whole arrays of (τin, τout) in a single ``jax.jit`` call, and
+``cost_matrices(sims, ...)`` stacks k per-node evaluations into the m×k
+energy/runtime matrices the scheduler consumes.  Million-query × k-node
+cost surfaces are therefore produced on-device with no Python loop over
+queries; agreement with the numpy closed form is gated at ≤1e-9 relative
+(tests/test_cost_kernels.py and the perf-suite ``jit_cost_kernel`` gate).
+
+All array math runs under ``jax.experimental.enable_x64`` — the decode
+power sums reach count³ ≈ 1e18 at τout ~ 10⁶, far beyond float32 — scoped
+to these calls so the rest of the repo keeps jax's default f32 semantics.
+
+``pass_costs_pallas`` is the Pallas variant of the elementwise pass-cost
+surface, tiled (8, 128) over the query axis.  It pays on TPU, where the
+fused elementwise pipeline stays in VMEM and f32 is native; on CPU it
+runs in interpret mode for validation only — use the jit path there.
+
+Static model/hardware structure (family branches, window clamps, MoE
+breakpoints, roofline capacities) is resolved at trace time from the
+hashable ``ModelConfig``/``Node`` dataclasses; compiled callables are
+cached per (cfg, node, kv_cache) so repeated sweeps pay tracing once.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.energy import costs as costs_lib
+from repro.energy.hardware import Node
+from repro.models import active_params, get_api
+from repro.models.common import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Elementwise pass-cost surface (jnp mirror of costs.pass_costs_batch)
+# ---------------------------------------------------------------------------
+
+
+def pass_surface(cfg: ModelConfig, new_tokens, context, batch, *,
+                 include_weights: bool = True, decode: bool = False):
+    """(flops, hbm_bytes) of a forward pass, as jnp expressions over
+    broadcastable arrays.  Family/window/MoE structure is static (resolved
+    from cfg at trace time); the formulas mirror
+    ``repro.energy.costs.pass_costs_batch`` term for term."""
+    nt, ctx, bt = jnp.broadcast_arrays(new_tokens, context, batch)
+    b = 2 if cfg.param_dtype == "bfloat16" else 4
+    n_active = float(active_params(cfg))   # python floats: exact weak-typed
+    tokens = bt * nt                       # constants in f32 and f64 alike
+
+    flops = 2.0 * n_active * tokens
+    # attention
+    if cfg.family == "ssm":
+        H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        flops = flops + cfg.n_layers * bt * nt * (2 * H * P * N * 4)
+    else:
+        heads = cfg.n_heads
+        hd = cfg.head_dim_
+        if cfg.use_mla:
+            hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        if cfg.family == "hybrid":
+            n_attn = cfg.n_layers // max(1, len(cfg.block_pattern))
+            c = jnp.minimum(ctx, cfg.local_window) if cfg.local_window else ctx
+            flops = flops + n_attn * bt * 4 * heads * hd * nt * c
+        else:
+            n_layers = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+            c = jnp.minimum(ctx, cfg.window) if cfg.window else ctx
+            flops = flops + n_layers * bt * 4 * heads * hd * nt * c
+            if cfg.family == "encdec":
+                flops = flops + (cfg.dec_layers * bt * 4 * heads * hd
+                                 * nt * cfg.n_frames)
+    # MoE router overhead
+    if cfg.family == "moe":
+        nm = cfg.n_layers - cfg.n_dense_layers
+        flops = flops + nm * bt * nt * (2 * cfg.d_model * cfg.n_experts
+                                        + 32 * cfg.n_experts)
+
+    bytes_ = jnp.zeros_like(tokens)
+    if include_weights:
+        api = get_api(cfg)
+        if cfg.family != "moe":
+            bytes_ = bytes_ + float(api.count_params(cfg) * b)
+        else:
+            total = api.count_params(cfg)
+            de = cfg.d_expert or cfg.d_ff
+            nm = cfg.n_layers - cfg.n_dense_layers
+            per_expert = 3 * cfg.d_model * de
+            routed = nm * cfg.n_experts * per_expert
+            hit = jnp.minimum(float(cfg.n_experts), tokens * cfg.top_k)
+            bytes_ = bytes_ + (float(total - routed)
+                               + hit * float(nm * per_expert)) * b
+    bytes_ = bytes_ + tokens * float(cfg.n_layers * cfg.d_model * 12 * b)
+    kvb = costs_lib.kv_bytes_per_token(cfg)
+    bytes_ = bytes_ + tokens * kvb
+    if decode:
+        if cfg.family == "hybrid":
+            c = jnp.minimum(ctx, cfg.local_window) if cfg.local_window else ctx
+        elif cfg.window:
+            c = jnp.minimum(ctx, cfg.window)
+        else:
+            c = ctx
+        extra = bt * c * kvb
+        if cfg.family == "ssm":
+            ssm_state_bytes = (cfg.n_layers * cfg.ssm_nheads * cfg.ssm_headdim
+                               * cfg.ssm_state * 4)
+            extra = extra + bt * float(2 * ssm_state_bytes)
+        bytes_ = bytes_ + extra
+    return flops, bytes_
+
+
+# ---------------------------------------------------------------------------
+# Closed-form decode integral (jnp mirror of _decode_closed_form)
+# ---------------------------------------------------------------------------
+
+
+def _interp_quadratic(y0, y1, y2, h):
+    c0 = y0
+    c1 = (-3.0 * y0 + 4.0 * y1 - y2) / (2.0 * h)
+    c2 = (y0 - 2.0 * y1 + y2) / (2.0 * h * h)
+    return c0, c1, c2
+
+
+def _poly_sum(c, u0, count):
+    """Σ_{j=0}^{count-1} p(u0+j), exact power-sum form (needs float64)."""
+    c0, c1, c2 = c
+    s1 = count * (count - 1.0) / 2.0
+    s2 = (count - 1.0) * count * (2.0 * count - 1.0) / 6.0
+    return (c0 * count
+            + c1 * (count * u0 + s1)
+            + c2 * (count * u0 * u0 + 2.0 * u0 * s1 + s2))
+
+
+def _quad_roots_sorted(qc, u0, uhi):
+    """Roots of c2 u² + c1 u + c0 strictly inside (u0, uhi), as two values
+    (invalid → +inf, which the edge clamp maps to an empty split) —
+    branchless mirror of simulator._quad_roots_in."""
+    c0, c1, c2 = qc
+    lin = c2 == 0.0
+    c1_safe = jnp.where(c1 != 0.0, c1, 1.0)
+    r_lin = jnp.where(c1 != 0.0, -c0 / c1_safe, jnp.inf)
+    disc = c1 * c1 - 4.0 * c2 * c0
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    q = jnp.where(c1 != 0.0, -0.5 * (c1 + jnp.sign(c1_safe) * sq), 0.5 * sq)
+    c2_safe = jnp.where(lin, 1.0, c2)
+    ra = q / c2_safe
+    rb = jnp.where(q != 0.0, c0 / jnp.where(q != 0.0, q, 1.0), ra)
+    r_dbl = -c1 / (2.0 * c2_safe)
+    q1 = jnp.where(disc > 0.0, ra, jnp.where(disc == 0.0, r_dbl, jnp.inf))
+    q2 = jnp.where(disc > 0.0, rb, jnp.inf)
+    r1 = jnp.where(lin, r_lin, q1)
+    r2 = jnp.where(lin, jnp.inf, q2)
+    valid1 = (r1 > u0) & (r1 < uhi)
+    valid2 = (r2 > u0) & (r2 < uhi)
+    r1 = jnp.where(valid1, r1, jnp.inf)
+    r2 = jnp.where(valid2, r2, jnp.inf)
+    return jnp.minimum(r1, r2), jnp.maximum(r1, r2)
+
+
+def _decode_phase(cfg: ModelConfig, node: Node, ctx0, n, batch, *,
+                  kv_cache: bool):
+    """(seconds, accelerator joules) of the decode phase, vectorized —
+    the exact piecewise-quadratic power-sum integral of
+    ``AnalyticLLMSimulator._decode_closed_form`` in jnp."""
+    a = node.accel
+    fcap = node.n_accel * a.peak_flops * a.flops_efficiency
+    bcap = node.n_accel * a.hbm_bw * a.bw_efficiency
+    reprefix = not kv_cache
+
+    n_eff = jnp.maximum(n, 1.0)
+    base = ctx0 + 0.5                  # grid: L_t = base + t
+    lo = base
+    hi = base + (n_eff - 1.0)
+
+    def step_costs(L):
+        if reprefix:   # paper mode: re-run the full L-token prefix per step
+            return pass_surface(cfg, L, L, batch, decode=False)
+        return pass_surface(cfg, jnp.ones_like(L), L, batch, decode=True)
+
+    # static breakpoint structure (≤ 2: attention-window clamp, MoE
+    # expert-saturation in re-prefix mode); values may be traced via batch
+    bps = []
+    w = costs_lib.attention_window(cfg)
+    if np.isfinite(w):
+        bps.append(w * jnp.ones_like(base))
+    if reprefix and cfg.family == "moe" and cfg.top_k:
+        bps.append(cfg.n_experts / (batch * cfg.top_k) * jnp.ones_like(base))
+    if len(bps) == 2:
+        bps = [jnp.minimum(bps[0], bps[1]), jnp.maximum(bps[0], bps[1])]
+
+    # segment coordinates and the step-index boundaries (grid points with
+    # L ≤ seg.hi belong to the segment, exactly as the numpy loop assigns)
+    edges_s = [lo] + [jnp.clip(b, lo, hi) for b in bps] + [hi]
+    t_bounds = [jnp.zeros_like(base)]
+    run = jnp.zeros_like(base)
+    for b in bps:
+        raw = jnp.clip(jnp.floor(b - base) + 1.0, 0.0, n_eff)
+        te = jnp.where(b <= lo, 0.0, jnp.where(b >= hi, n_eff, raw))
+        run = jnp.maximum(run, te)
+        t_bounds.append(run)
+    t_bounds.append(n_eff)
+
+    t_sum = jnp.zeros_like(base)
+    flops_sum = jnp.zeros_like(base)
+    bytes_sum = jnp.zeros_like(base)
+    for s in range(len(edges_s) - 1):
+        s0, s1 = edges_s[s], edges_s[s + 1]
+        t0, t1 = t_bounds[s], t_bounds[s + 1]
+        count = jnp.maximum(t1 - t0, 0.0)
+        live = count > 0.0
+        h = (s1 - s0) / 2.0
+        hs = jnp.where(h > 0.0, h, 1.0)   # degenerate segments have count 0
+        y0f, y0b = step_costs(s0)
+        y1f, y1b = step_costs(s0 + hs)
+        y2f, y2b = step_costs(s0 + 2.0 * hs)
+        cf = _interp_quadratic(y0f, y1f, y2f, hs)
+        cb = _interp_quadratic(y0b, y1b, y2b, hs)
+        u0 = (base + t0) - s0
+        flops_sum = flops_sum + jnp.where(live, _poly_sum(cf, u0, count), 0.0)
+        bytes_sum = bytes_sum + jnp.where(live, _poly_sum(cb, u0, count), 0.0)
+
+        # roofline branch: q(u) = flops(u)/fcap − bytes(u)/bcap; split the
+        # step range at the quadratic's roots, then pick the branch per
+        # sub-range from the same three probes the numpy path uses
+        qc = tuple(f / fcap - bb / bcap for f, bb in zip(cf, cb))
+        uhi = u0 + (count - 1.0)
+        r1, r2 = _quad_roots_sorted(qc, u0, uhi)
+        e1 = jnp.where(jnp.isfinite(r1),
+                       jnp.clip(jnp.ceil(r1 - u0), 0.0, count), 0.0)
+        e2 = jnp.where(jnp.isfinite(r2),
+                       jnp.clip(jnp.ceil(r2 - u0), 0.0, count), 0.0)
+        elo = jnp.minimum(e1, e2)
+        ehi = jnp.maximum(e1, e2)
+
+        def q_at(j):
+            u = u0 + j
+            return qc[0] + qc[1] * u + qc[2] * u * u
+
+        for j0, j1 in ((jnp.zeros_like(count), elo), (elo, ehi), (ehi, count)):
+            cnt = jnp.maximum(j1 - j0, 0.0)
+            sub = live & (cnt > 0.0)
+            probes = (q_at(j0), q_at(jnp.floor((j0 + j1 - 1.0) / 2.0)),
+                      q_at(j1 - 1.0))
+            use_f = ((probes[0] >= 0.0) & (probes[1] >= 0.0)
+                     & (probes[2] >= 0.0))
+            use_b = ((probes[0] <= 0.0) & (probes[1] <= 0.0)
+                     & (probes[2] <= 0.0))
+            tf = _poly_sum(cf, u0 + j0, cnt) / fcap
+            tb = _poly_sum(cb, u0 + j0, cnt) / bcap
+            # mixed probes cannot occur for a true root-split quadratic;
+            # max() is the conservative fp-edge-case fallback
+            val = jnp.where(use_f, tf,
+                            jnp.where(use_b, tb, jnp.maximum(tf, tb)))
+            t_sum = t_sum + jnp.where(sub, val, 0.0)
+
+    t_dec = t_sum + n_eff * node.dispatch_overhead_s
+    e_dec = (a.idle_w * node.n_accel * t_dec
+             + a.j_per_flop * flops_sum
+             + a.j_per_byte_hbm * bytes_sum)
+    empty = n <= 0.0
+    return (jnp.where(empty, 0.0, t_dec), jnp.where(empty, 0.0, e_dec))
+
+
+# ---------------------------------------------------------------------------
+# Compiled per-(model, node, mode) simulate kernels
+# ---------------------------------------------------------------------------
+
+_SIM_CACHE: dict[tuple, Callable] = {}
+
+
+def _compiled_simulate(cfg: ModelConfig, node: Node, kv_cache: bool,
+                       host_power_w: float) -> Callable:
+    key = (cfg, node, kv_cache, host_power_w)
+    fn = _SIM_CACHE.get(key)
+    if fn is not None:
+        return fn
+    a = node.accel
+    fcap = node.n_accel * a.peak_flops * a.flops_efficiency
+    bcap = node.n_accel * a.hbm_bw * a.bw_efficiency
+
+    @jax.jit
+    def run(tin, tout, batch):
+        pf, pb = pass_surface(cfg, tin, tin, batch, decode=False)
+        t_pre = (jnp.maximum(pf / fcap, pb / bcap)
+                 + node.dispatch_overhead_s)
+        e_pre = (a.idle_w * node.n_accel * t_pre
+                 + a.j_per_flop * pf + a.j_per_byte_hbm * pb)
+        t_dec, e_dec = _decode_phase(cfg, node, tin, tout, batch,
+                                     kv_cache=kv_cache)
+        runtime = t_pre + t_dec
+        energy = e_pre + e_dec + host_power_w * runtime
+        return energy, runtime
+
+    _SIM_CACHE[key] = run
+    return run
+
+
+def simulate_batch(sim, tau_in, tau_out, *, batch=None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Noise-free (energy_j, runtime_s) per query for an
+    ``AnalyticLLMSimulator``, computed on-device in one jit call — the
+    batched equivalent of ``[sim.simulate(a, b) for a, b in zip(...)]``.
+    ≤1e-9 relative against the numpy closed form (gated)."""
+    B = float(sim.batch if batch is None else batch)
+    with enable_x64():
+        fn = _compiled_simulate(sim.cfg, sim.node, sim.kv_cache,
+                                sim.host_power_w)
+        tin = jnp.asarray(np.asarray(tau_in, dtype=np.float64))
+        tout = jnp.asarray(np.asarray(tau_out, dtype=np.float64))
+        e, r = fn(tin, tout, jnp.asarray(B, dtype=jnp.float64))
+        return np.asarray(e), np.asarray(r)
+
+
+def cost_matrices(sims: Sequence, tau_in, tau_out, *, per_query: bool = False
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """m×k energy/runtime matrices over k simulators (one per fleet node),
+    each column one on-device jit call.  ``per_query=True`` divides by each
+    simulator's batch (the scheduler's batch-normalized convention)."""
+    cols_e, cols_r = [], []
+    for sim in sims:
+        e, r = simulate_batch(sim, tau_in, tau_out)
+        if per_query:
+            e, r = e / sim.batch, r / sim.batch
+        cols_e.append(e)
+        cols_r.append(r)
+    return np.stack(cols_e, axis=1), np.stack(cols_r, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas variant of the elementwise pass-cost surface
+# ---------------------------------------------------------------------------
+
+_LANES = 128
+_SUBLANES = 8
+_BLOCK = _LANES * _SUBLANES
+
+
+def pass_costs_pallas(cfg: ModelConfig, new_tokens, context, batch, *,
+                      include_weights: bool = True, decode: bool = False,
+                      interpret: bool | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """(flops, hbm_bytes) arrays via a Pallas elementwise kernel, tiled
+    (8, 128) over the query axis.  Worth it on TPU (fused pipeline in
+    VMEM, f32 native); on CPU this runs in interpret mode for validation
+    only — the jit path (`pass_surface` under x64) is the production one.
+    f32 accumulation: validate at ~1e-6 relative, not the 1e-9 x64 gate."""
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    nt = np.asarray(new_tokens, dtype=np.float32).ravel()
+    ctx = np.asarray(context, dtype=np.float32).ravel()
+    bt = np.broadcast_to(np.asarray(batch, dtype=np.float32), nt.shape).copy()
+    m = nt.shape[0]
+    pad = (-m) % _BLOCK
+    if pad:
+        nt = np.concatenate([nt, np.ones(pad, np.float32)])
+        ctx = np.concatenate([ctx, np.ones(pad, np.float32)])
+        bt = np.concatenate([bt, np.ones(pad, np.float32)])
+    rows = nt.shape[0] // _LANES
+    shape2d = (rows, _LANES)
+
+    def kernel(nt_ref, ctx_ref, bt_ref, f_ref, b_ref):
+        f, b = pass_surface(cfg, nt_ref[...], ctx_ref[...], bt_ref[...],
+                            include_weights=include_weights, decode=decode)
+        f_ref[...] = f
+        b_ref[...] = b
+
+    spec = pl.BlockSpec((_SUBLANES, _LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // _SUBLANES,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(shape2d, jnp.float32)] * 2,
+        interpret=interpret,
+    )(nt.reshape(shape2d), ctx.reshape(shape2d), bt.reshape(shape2d))
+    flops = np.asarray(out[0]).ravel()[:m]
+    bytes_ = np.asarray(out[1]).ravel()[:m]
+    return flops, bytes_

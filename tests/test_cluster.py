@@ -265,3 +265,76 @@ class TestOnlineRouter:
     def test_oracle_rejected(self):
         with pytest.raises(ValueError):
             OnlineRouter([PROFILES["llama2-7b"]], policy=OfflineOraclePolicy())
+
+
+# ---------------------------------------------------------------------------
+# zeta_replan: the warm-start re-planner policy
+# ---------------------------------------------------------------------------
+
+
+class TestZetaReplanPolicy:
+    def _run(self, n=120, rate=6.0, seed=3, **kw):
+        from repro.cluster import ZetaReplanPolicy
+        trace = poisson_trace(n, rate, seed=seed)
+        nodes = [b() for b in builders()]
+        return simulate_cluster(trace, nodes, ZetaReplanPolicy(**kw),
+                                zeta=0.5), trace
+
+    def test_serves_everything_deterministically(self):
+        rep1, trace = self._run(window=64)
+        rep2, _ = self._run(window=64)
+        assert len(rep1.records) == len(trace)
+        assert rep1.objective == rep2.objective
+        assert rep1.policy == "zeta_replan"
+
+    def test_enforces_replica_shares_online(self):
+        """With default gamma = replica shares (1/3 each here), the plan
+        must spread load across the fleet; the pointwise argmin collapses
+        onto the cheap model at high ζ — that collapse is exactly what the
+        capacitated partition forbids."""
+        from collections import Counter
+        rep, trace = self._run(n=240, window=120)
+        counts = Counter(r.model for r in rep.records)
+        m = len(trace)
+        for name in FLEET:
+            # warmup + window effects leave slack; shares must still bind
+            assert counts[name] >= 0.2 * m, (name, counts)
+
+    def test_explicit_gamma_and_replan_period(self):
+        rep, trace = self._run(window=80, replan_every=16,
+                               gamma=(0.1, 0.2, 0.7))
+        assert len(rep.records) == len(trace)
+        assert np.isfinite(rep.objective)
+
+    def test_oracle_still_bounds_replan(self):
+        from repro.cluster import ZetaReplanPolicy
+        trace = poisson_trace(60, 4.0, seed=9)
+        reports = compare_policies(
+            trace, builders(),
+            [ZetaReplanPolicy(window=48), OfflineOraclePolicy()], zeta=0.5)
+        assert (reports["offline_oracle"].objective
+                <= reports["zeta_replan"].objective + 1e-9)
+
+    def test_window_is_respected(self):
+        """The planner's workload must converge to exactly `window`
+        queries (a double-count once let it creep to window+replan-1)."""
+        from repro.cluster import ZetaReplanPolicy
+        pol = ZetaReplanPolicy(window=32, replan_every=8)
+        trace = poisson_trace(200, 6.0, seed=4)
+        nodes = [b() for b in builders()]
+        simulate_cluster(trace, nodes, pol, zeta=0.5)
+        assert pol._sched.m_active <= 32
+
+    def test_rejects_bad_args(self):
+        from repro.cluster import ZetaReplanPolicy
+        with pytest.raises(ValueError):
+            ZetaReplanPolicy(window=0)
+        with pytest.raises(ValueError):
+            ZetaReplanPolicy(replan_every=0)
+        with pytest.raises(ValueError):
+            ZetaReplanPolicy(window=8, replan_every=9)
+        trace = poisson_trace(10, 4.0, seed=1)
+        nodes = [b() for b in builders()]
+        with pytest.raises(ValueError):
+            simulate_cluster(trace, nodes,
+                             ZetaReplanPolicy(gamma=(0.5, 0.5)), zeta=0.5)

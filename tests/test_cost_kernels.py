@@ -1,0 +1,103 @@
+"""jit/Pallas batch cost kernels vs the numpy closed form.
+
+The contract BENCH_core.json's kernel throughput numbers are conditional
+on: `simulate_batch` ≤ 1e-9 relative against
+`AnalyticLLMSimulator.simulate` for every family and both KV modes
+(including window/MoE breakpoint crossings and τout ∈ {0, 1} edges), and
+the Pallas elementwise surface (f32) within 1e-5 of `pass_costs_batch`
+in interpret mode."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import PAPER_ZOO, get_config  # noqa: E402
+from repro.energy import costs as costs_lib  # noqa: E402
+from repro.energy.simulator import AnalyticLLMSimulator  # noqa: E402
+from repro.kernels import cost_batch  # noqa: E402
+
+FAMILY_CONFIGS = {
+    "dense": PAPER_ZOO["llama2-7b"],
+    "moe": PAPER_ZOO["mixtral-8x7b"],
+    "windowed": get_config("mistral-7b"),
+    "ssm": get_config("mamba2-130m"),
+    "hybrid": get_config("recurrentgemma-9b"),
+    "mla": get_config("deepseek-v3-671b"),
+}
+
+# crosses the mistral/recurrentgemma window clamps, the MoE saturation
+# point, tiny phases, and the τout = 0 prefill-only edge
+TIN = np.array([1, 2, 8, 100, 512, 3000, 4095, 4096, 5000, 64])
+TOUT = np.array([1, 3, 100, 4096, 512, 2000, 2, 1, 0, 300])
+
+
+class TestSimulateBatchJit:
+    @pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+    @pytest.mark.parametrize("kv", [True, False])
+    def test_matches_numpy_closed_form(self, family, kv):
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS[family], batch=4,
+                                   kv_cache=kv, noise_sigma=0.0)
+        e, r = cost_batch.simulate_batch(sim, TIN, TOUT)
+        for i in range(len(TIN)):
+            pb = sim.simulate(int(TIN[i]), int(TOUT[i]))
+            assert e[i] == pytest.approx(pb.energy_j, rel=1e-9), \
+                (family, kv, TIN[i], TOUT[i])
+            assert r[i] == pytest.approx(pb.runtime_s, rel=1e-9), \
+                (family, kv, TIN[i], TOUT[i])
+
+    def test_million_step_decode_finite(self):
+        """The x64 power sums must survive count³ ≈ 1e18."""
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["dense"], batch=1,
+                                   kv_cache=True, noise_sigma=0.0)
+        e, r = cost_batch.simulate_batch(sim, [1], [1_000_000])
+        pb = sim.simulate(1, 1_000_000)
+        assert np.isfinite(e[0]) and np.isfinite(r[0])
+        assert e[0] == pytest.approx(pb.energy_j, rel=1e-9)
+
+    def test_batch_override(self):
+        sim = AnalyticLLMSimulator(FAMILY_CONFIGS["dense"], batch=8,
+                                   kv_cache=True, noise_sigma=0.0)
+        e8, _ = cost_batch.simulate_batch(sim, [64], [64])
+        e1, _ = cost_batch.simulate_batch(sim, [64], [64], batch=1)
+        assert e1[0] < e8[0]
+
+    def test_cost_matrices_shape_and_values(self):
+        sims = [AnalyticLLMSimulator(FAMILY_CONFIGS[f], batch=2,
+                                     kv_cache=True, noise_sigma=0.0)
+                for f in ("dense", "moe")]
+        tin = np.array([8, 64, 512])
+        tout = np.array([8, 32, 128])
+        E, R = cost_batch.cost_matrices(sims, tin, tout, per_query=True)
+        assert E.shape == R.shape == (3, 2)
+        for j, sim in enumerate(sims):
+            for i in range(3):
+                pb = sim.simulate(int(tin[i]), int(tout[i]))
+                assert E[i, j] == pytest.approx(pb.energy_j / sim.batch,
+                                                rel=1e-9)
+                assert R[i, j] == pytest.approx(pb.runtime_s / sim.batch,
+                                                rel=1e-9)
+
+
+class TestPassCostsPallas:
+    @pytest.mark.parametrize("family", ["dense", "moe", "windowed", "ssm"])
+    @pytest.mark.parametrize("decode", [False, True])
+    def test_interpret_matches_numpy_f32(self, family, decode):
+        cfg = FAMILY_CONFIGS[family]
+        rng = np.random.default_rng(3)
+        nt = rng.integers(1, 4096, 200).astype(float)
+        ctx = nt + rng.integers(0, 4096, 200)
+        f, b = cost_batch.pass_costs_pallas(cfg, nt, ctx, 8.0,
+                                            decode=decode, interpret=True)
+        ref = costs_lib.pass_costs_batch(cfg, nt, ctx, 8.0, decode=decode)
+        np.testing.assert_allclose(f, ref.flops, rtol=1e-5)
+        np.testing.assert_allclose(b, ref.hbm_bytes, rtol=1e-5)
+
+    def test_unpadded_sizes(self):
+        """m not a multiple of the (8, 128) tile must round-trip."""
+        cfg = FAMILY_CONFIGS["dense"]
+        nt = np.arange(1.0, 38.0)
+        f, b = cost_batch.pass_costs_pallas(cfg, nt, nt, 4.0, interpret=True)
+        assert f.shape == b.shape == (37,)
+        ref = costs_lib.pass_costs_batch(cfg, nt, nt, 4.0, decode=False)
+        np.testing.assert_allclose(f, ref.flops, rtol=1e-5)

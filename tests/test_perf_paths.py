@@ -316,3 +316,75 @@ class TestBatchedCampaign:
         for i in range(mat.shape[0]):
             assert stop[i] == stats.should_stop_trials(
                 list(mat[i]), tolerance_s=2.0, max_trials=25)
+
+
+# ---------------------------------------------------------------------------
+# decode_step_polys: exactness at and around every breakpoint
+# ---------------------------------------------------------------------------
+
+
+class TestDecodeStepPolyBreakpoints:
+    """The piecewise polynomials ARE the per-step cost surface: verify
+    them against the chunk=1 reference at and around every breakpoint
+    (attention-window clamp, MoE expert saturation), in both kv_cache
+    modes, for all six model families."""
+
+    B = 4
+
+    @staticmethod
+    def _step(cfg, L, B, reprefix):
+        if reprefix:
+            return costs_lib.pass_costs(cfg, L, L, B, decode=False)
+        return costs_lib.pass_costs(cfg, 1.0, L, B, decode=True)
+
+    @staticmethod
+    def _poly_at(segs, L):
+        for seg in segs:
+            if seg.lo <= L <= seg.hi:
+                u = L - seg.lo
+                return (seg.flops[0] + seg.flops[1] * u + seg.flops[2] * u * u,
+                        seg.hbm_bytes[0] + seg.hbm_bytes[1] * u
+                        + seg.hbm_bytes[2] * u * u)
+        raise AssertionError(f"L={L} not covered by segments")
+
+    @pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+    @pytest.mark.parametrize("kv", [True, False])
+    def test_polys_match_surface_around_breakpoints(self, family, kv):
+        cfg = FAMILY_CONFIGS[family]
+        reprefix = not kv
+        bps = costs_lib.decode_step_breakpoints(cfg, self.B,
+                                                reprefix=reprefix)
+        probes = bps + [64.0]          # control range for breakpoint-free cfgs
+        for bp in probes:
+            lo = max(1.0, bp - 6.5)
+            hi = bp + 6.5
+            segs = costs_lib.decode_step_polys(cfg, self.B, lo, hi,
+                                               reprefix=reprefix)
+            # segment edges land exactly on the interior breakpoints
+            for b in bps:
+                if lo < b < hi:
+                    assert any(s.hi == b for s in segs[:-1]), (bp, b)
+            for L in np.arange(lo, hi + 0.25, 0.5):
+                L = float(min(L, hi))
+                pf, pb = self._poly_at(segs, L)
+                ref = self._step(cfg, L, self.B, reprefix)
+                assert pf == pytest.approx(ref.flops, rel=1e-9), (bp, L)
+                assert pb == pytest.approx(ref.hbm_bytes, rel=1e-9), (bp, L)
+
+    @pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+    @pytest.mark.parametrize("kv", [True, False])
+    def test_decode_cost_exact_across_each_breakpoint(self, family, kv):
+        """Phase totals spanning a breakpoint: closed form == chunk=1
+        reference loop."""
+        cfg = FAMILY_CONFIGS[family]
+        sim = AnalyticLLMSimulator(cfg, batch=self.B, kv_cache=kv,
+                                   noise_sigma=0.0)
+        bps = costs_lib.decode_step_breakpoints(cfg, self.B,
+                                                reprefix=not kv)
+        for bp in bps or [512.0]:
+            ctx0 = max(1, int(bp) - 5)
+            for n in (3, 11):          # straddle the breakpoint both ways
+                t1, e1 = sim.decode_cost(ctx0, n)
+                t2, e2 = sim.decode_cost_chunked(ctx0, n, chunk=1)
+                assert t1 == pytest.approx(t2, rel=1e-9), (family, kv, bp, n)
+                assert e1 == pytest.approx(e2, rel=1e-9), (family, kv, bp, n)

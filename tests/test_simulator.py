@@ -94,3 +94,42 @@ class TestPassCosts:
     def test_min_accelerators(self):
         assert min_accelerators(10e9, TPU_NODE.accel) == 1
         assert min_accelerators(100e9, TPU_NODE.accel) > 5
+
+
+class TestMemoLRU:
+    """LRU eviction regression: the old wholesale clear dropped hot keys
+    mid-campaign when the bound was hit."""
+
+    def _sim(self, limit):
+        sim = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], batch=2,
+                                   kv_cache=True, noise_sigma=0.0)
+        sim._memo_max_entries = limit
+        return sim
+
+    def test_hot_decode_key_survives_eviction(self):
+        sim = self._sim(4)
+        for ctx0 in (10, 20, 30, 40):      # fill to the bound
+            sim.decode_cost(ctx0, 8)
+        hot = (10, 8, 2)
+        assert sim.decode_cost(10, 8)      # hit -> move-to-end
+        sim.decode_cost(50, 8)             # insert -> evicts LRU (ctx0=20)
+        assert hot in sim._decode_memo
+        assert (20, 8, 2) not in sim._decode_memo
+        assert len(sim._decode_memo) == 4  # bound respected, not cleared
+
+    def test_prefill_memo_same_policy(self):
+        sim = self._sim(3)
+        for tin in (8, 16, 32):
+            sim.prefill_cost(tin)
+        sim.prefill_cost(8)                # refresh the oldest
+        sim.prefill_cost(64)
+        assert (8, 2) in sim._prefill_memo
+        assert (16, 2) not in sim._prefill_memo
+        assert len(sim._prefill_memo) == 3
+
+    def test_eviction_does_not_change_values(self):
+        sim = self._sim(2)
+        ref = sim.decode_cost(100, 50)
+        sim.decode_cost(200, 50)
+        sim.decode_cost(300, 50)           # 100 evicted
+        assert sim.decode_cost(100, 50) == ref   # re-integrated identically

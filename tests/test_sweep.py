@@ -1,0 +1,305 @@
+"""Sweep-engine invariants (warm-start incremental scheduling + frontier).
+
+The exactness contracts BENCH_core.json's warm-start speedups are
+conditional on: a repaired warm solution must match a cold solve's
+objective within the chains-vs-flow 1e-12-relative equivalence class AND
+pass the LP-optimality certificate; frontier breakpoints must be exactly
+the ζ where the unconstrained argmin assignment changes."""
+
+import numpy as np
+import pytest
+
+from repro.core import scheduler
+from repro.core.energy_model import (
+    AccuracyModel,
+    BilinearModel,
+    LLMProfile,
+    normalized_costs,
+    objective_matrix,
+)
+from repro.core.sweep import (
+    IncrementalScheduler,
+    frontier_breakpoints,
+    pareto_frontier,
+)
+from repro.data.workloads import WorkloadSpec, alpaca_like_workload
+
+
+def make_fleet(k, seed):
+    rng = np.random.default_rng(seed)
+    return [LLMProfile(f"m{i}",
+                       BilinearModel(tuple(rng.uniform(0.05, 1.0, 3))),
+                       BilinearModel(tuple(rng.uniform(1e-4, 1e-2, 3))),
+                       AccuracyModel(float(rng.uniform(30, 80))))
+            for i in range(k)]
+
+
+def random_instance(seed, m_max=200, k_max=6):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(8, m_max + 1))
+    k = int(rng.integers(2, k_max + 1))
+    queries = [(int(a), int(b)) for a, b in
+               zip(rng.integers(1, 4096, m), rng.integers(1, 4096, m))]
+    profs = make_fleet(k, seed)
+    g = rng.dirichlet(np.ones(k) * rng.uniform(0.5, 3.0))
+    gamma = tuple((g / g.sum()).tolist())
+    zeta = float(rng.uniform(0, 1))
+    return profs, queries, zeta, gamma
+
+
+def assert_matches_cold(asg, cold):
+    # 1e-12 rel (not ==): permuted exact optima over duplicate queries can
+    # differ in the last ulp of the pairwise sum (the PR-2 convention)
+    assert abs(asg.objective - cold.objective) <= 1e-12 * max(
+        1.0, abs(cold.objective))
+
+
+# ---------------------------------------------------------------------------
+# warm_start= kwarg on schedule_capacitated
+# ---------------------------------------------------------------------------
+
+
+class TestWarmStartKwarg:
+    def test_matches_cold_from_random_warm_starts(self):
+        """Even an adversarial (uniform random) warm assignment must be
+        repaired to the exact optimum."""
+        for t in range(15):
+            profs, qs, zeta, gamma = random_instance(4000 + t)
+            m, k = len(qs), len(profs)
+            cold = scheduler.schedule_capacitated(profs, qs, zeta, gamma)
+            warm0 = np.random.default_rng(t).integers(0, k, m)
+            warm = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                                  warm_start=warm0)
+            assert_matches_cold(warm, cold)
+            costs = normalized_costs(profs, qs)
+            C = objective_matrix(costs, zeta)
+            caps = scheduler._capacities_from_gamma(gamma, m)
+            assert scheduler.capacitated_optimality_certificate(
+                C, warm.assignee, caps)
+
+    def test_warm_start_from_cold_solution_is_noop_optimal(self):
+        profs, qs, zeta, gamma = random_instance(99)
+        cold = scheduler.schedule_capacitated(profs, qs, zeta, gamma)
+        warm = scheduler.schedule_capacitated(profs, qs, zeta, gamma,
+                                              warm_start=cold.assignee)
+        assert warm.objective == cold.objective
+
+    def test_warm_start_requires_chains(self):
+        profs, qs, zeta, gamma = random_instance(7)
+        with pytest.raises(ValueError):
+            scheduler.schedule_capacitated(
+                profs, qs, zeta, gamma, method="flow",
+                warm_start=np.zeros(len(qs), dtype=int))
+
+    def test_caps_override(self):
+        profs, qs, zeta, gamma = random_instance(11)
+        m, k = len(qs), len(profs)
+        caps = scheduler._capacities_from_gamma(gamma, m)
+        via_gamma = scheduler.schedule_capacitated(profs, qs, zeta, gamma)
+        via_caps = scheduler.schedule_capacitated(profs, qs, zeta, caps=caps)
+        assert via_gamma.objective == via_caps.objective
+        with pytest.raises(ValueError):
+            scheduler.schedule_capacitated(profs, qs, zeta, gamma, caps=caps)
+        with pytest.raises(ValueError):
+            scheduler.schedule_capacitated(profs, qs, zeta)
+        with pytest.raises(ValueError):
+            scheduler.schedule_capacitated(profs, qs, zeta,
+                                           caps=np.zeros(k, dtype=int))
+
+
+# ---------------------------------------------------------------------------
+# IncrementalScheduler.reschedule == cold solve (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+class TestIncrementalReschedule:
+    def test_50_randomized_delta_instances_match_cold(self):
+        """added/removed/ζ deltas; certificate asserted on every solve via
+        check=True, objective vs a cold chains solve per instance."""
+        for t in range(50):
+            rng = np.random.default_rng(6000 + t)
+            profs, qs, zeta, gamma = random_instance(6000 + t)
+            inc = IncrementalScheduler(profs, qs, zeta, gamma, check=True)
+            cold0 = scheduler.schedule_capacitated(profs, qs, zeta, gamma)
+            assert_matches_cold(inc.assignment, cold0)
+            n_add = int(rng.integers(0, 8))
+            n_rem = int(rng.integers(0, min(8, len(qs) - 1)))
+            added = [(int(a), int(b)) for a, b in
+                     zip(rng.integers(1, 4096, n_add),
+                         rng.integers(1, 4096, n_add))]
+            removed = list(rng.choice(inc.active_ids, size=n_rem,
+                                      replace=False))
+            z2 = float(np.clip(zeta + rng.uniform(-0.2, 0.2), 0, 1))
+            asg = inc.reschedule(added=added, removed=removed, zeta=z2)
+            cold = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                                  z2, gamma)
+            assert_matches_cold(asg, cold)
+            caps = scheduler._capacities_from_gamma(gamma, inc.m_active)
+            assert (asg.counts() <= caps).all()
+            assert asg.counts().sum() == inc.m_active
+
+    def test_capacity_deltas_accumulate_and_match_cold(self):
+        profs, qs, zeta, gamma = random_instance(77, m_max=120)
+        k = len(profs)
+        inc = IncrementalScheduler(profs, qs, zeta, gamma, check=True)
+        caps0 = scheduler._capacities_from_gamma(gamma, len(qs))
+        d1 = np.zeros(k, dtype=int)
+        d1[0] += 3
+        asg = inc.reschedule(capacity_deltas=d1)
+        cold = scheduler.schedule_capacitated(profs, qs, zeta,
+                                              caps=caps0 + d1)
+        assert_matches_cold(asg, cold)
+        asg2 = inc.reschedule(capacity_deltas=d1)   # accumulates
+        cold2 = scheduler.schedule_capacitated(profs, qs, zeta,
+                                               caps=caps0 + 2 * d1)
+        assert_matches_cold(asg2, cold2)
+
+    def test_sequential_deltas_stay_exact(self):
+        """A chain of edits (the online re-planner's usage) must stay on
+        the cold-solve optimum at every step."""
+        profs, qs, zeta, gamma = random_instance(123, m_max=80)
+        rng = np.random.default_rng(5)
+        inc = IncrementalScheduler(profs, qs, zeta, gamma, check=True)
+        for step in range(8):
+            added = [(int(rng.integers(1, 4096)), int(rng.integers(1, 4096)))]
+            removed = [int(rng.choice(inc.active_ids))]
+            asg = inc.reschedule(added=added, removed=removed)
+            cold = scheduler.schedule_capacitated(
+                profs, inc.active_queries(), inc.zeta, gamma)
+            assert_matches_cold(asg, cold)
+
+    def test_degenerate_duplicate_workload(self):
+        """Alpaca-style workloads are tie-heavy (many duplicate queries);
+        this shape used to cycle the chains next-hop reconstruction."""
+        profs = make_fleet(5, 999)
+        qs = alpaca_like_workload(WorkloadSpec(n_queries=800, seed=7))
+        gamma = tuple((np.ones(5) / 5).tolist())
+        inc = IncrementalScheduler(profs, qs, 0.5, gamma, check=True)
+        added = alpaca_like_workload(WorkloadSpec(n_queries=16, seed=11))
+        removed = list(np.random.default_rng(1).choice(
+            inc.active_ids, size=16, replace=False))
+        asg = inc.reschedule(added=added, removed=removed)
+        cold = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                              0.5, gamma)
+        assert_matches_cold(asg, cold)
+
+    def test_bookkeeping_errors(self):
+        profs, qs, zeta, gamma = random_instance(13)
+        inc = IncrementalScheduler(profs, qs, zeta, gamma)
+        with pytest.raises(KeyError):
+            inc.reschedule(removed=[inc.next_id + 5])
+        rid = int(inc.active_ids[0])
+        inc.reschedule(removed=[rid])
+        with pytest.raises(KeyError):          # double-remove
+            inc.reschedule(removed=[rid])
+        with pytest.raises(ValueError):
+            IncrementalScheduler(profs, qs, zeta)          # neither
+        with pytest.raises(ValueError):
+            IncrementalScheduler(profs, qs, zeta, gamma,
+                                 caps=[len(qs)] * len(profs))  # both
+        k = len(profs)
+        with pytest.raises(RuntimeError):      # caps sum < m is infeasible
+            inc.reschedule(capacity_deltas=-np.full(k, len(qs), dtype=int))
+
+    def test_compaction_keeps_ids_stable_and_memory_bounded(self):
+        """A long sliding-window stream must stay O(window): dead rows are
+        compacted away while external ids keep resolving, and every solve
+        still matches cold."""
+        profs, qs, zeta, gamma = random_instance(31, m_max=40)
+        rng = np.random.default_rng(8)
+        inc = IncrementalScheduler(profs, qs, zeta, gamma, check=True)
+        window = len(qs)
+        from collections import deque
+        ids = deque(inc.active_ids.tolist())
+        for step in range(40):
+            first = inc.next_id
+            added = [(int(rng.integers(1, 4096)), int(rng.integers(1, 4096)))
+                     for _ in range(16)]
+            expired = [ids.popleft() for _ in range(16)]
+            inc.reschedule(added=added, removed=expired)
+            ids.extend(range(first, first + 16))
+        assert inc.m_active == window
+        assert inc._m_total <= 4 * window + 256   # dead rows were compacted
+        assert list(inc.active_ids) == list(ids)  # external ids survive
+        assert inc.model_of(int(ids[-1])) in inc.model_names
+        with pytest.raises(KeyError):             # compacted-away id is gone
+            inc.bin_of(0)
+        cold = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                              inc.zeta, gamma)
+        assert_matches_cold(inc.assignment, cold)
+
+    def test_ids_are_insertion_ordered(self):
+        profs, qs, zeta, gamma = random_instance(21)
+        inc = IncrementalScheduler(profs, qs, zeta, gamma)
+        first = inc.next_id
+        assert first == len(qs)
+        inc.reschedule(added=[(5, 5), (6, 6)])
+        assert inc.next_id == first + 2
+        assert inc.model_of(first) in inc.model_names
+        assert inc.active_queries()[-1] == (6, 6)
+
+
+# ---------------------------------------------------------------------------
+# Frontier breakpoints + pareto_frontier
+# ---------------------------------------------------------------------------
+
+
+class TestFrontierBreakpoints:
+    def test_argmin_constant_within_segments_changes_across(self):
+        for t in range(8):
+            profs, qs, _, _ = random_instance(3000 + t, m_max=60)
+            costs = normalized_costs(profs, qs)
+            bps = frontier_breakpoints(costs)
+            edges = np.concatenate([[0.0], bps, [1.0]])
+            prev = None
+            for lo, hi in zip(edges[:-1], edges[1:]):
+                zs = np.linspace(lo, hi, 5)[1:-1]
+                a0 = objective_matrix(costs, float(zs[0])).argmin(1)
+                for z in zs[1:]:
+                    a = objective_matrix(costs, float(z)).argmin(1)
+                    assert (a == a0).all(), (t, lo, hi)
+                if prev is not None:
+                    assert not (a0 == prev).all(), (t, lo)
+                prev = a0
+
+    def test_no_breakpoint_missed_vs_dense_grid(self):
+        profs, qs, _, _ = random_instance(42, m_max=40)
+        costs = normalized_costs(profs, qs)
+        bps = frontier_breakpoints(costs)
+        grid = np.linspace(0.0, 1.0, 1501)
+        prev = objective_matrix(costs, 0.0).argmin(1)
+        for z0, z1 in zip(grid[:-1], grid[1:]):
+            cur = objective_matrix(costs, float(z1)).argmin(1)
+            if not (cur == prev).all():
+                assert ((bps > z0 - 1e-12) & (bps < z1 + 1e-12)).any(), z1
+            prev = cur
+
+    def test_frontier_monotone_and_rejects_gamma(self):
+        profs, qs, _, gamma = random_instance(8, m_max=80)
+        fr = pareto_frontier(profs, qs, breakpoints=True)
+        assert len(fr.assignments) == len(fr.breakpoints) + 1
+        e = fr.energies()
+        assert all(b <= a + 1e-9 * abs(a) for a, b in zip(e, e[1:]))
+        with pytest.raises(ValueError):
+            pareto_frontier(profs, qs, breakpoints=True, gamma=gamma)
+        with pytest.raises(ValueError):
+            pareto_frontier(profs, qs)   # grid mode needs zetas
+
+
+class TestParetoGrid:
+    def test_capacitated_grid_matches_cold_zeta_sweep(self):
+        profs, qs, _, gamma = random_instance(55, m_max=150)
+        zetas = np.round(np.linspace(0.0, 1.0, 9), 3)
+        fr = pareto_frontier(profs, qs, zetas, gamma=gamma, check=True)
+        cold = scheduler.zeta_sweep(profs, qs, zetas, gamma=gamma)
+        assert fr.zetas == tuple(float(z) for z in zetas)
+        for a, b in zip(fr.assignments, cold):
+            assert_matches_cold(a, b)
+
+    def test_unconstrained_grid_matches_schedule(self):
+        profs, qs, _, _ = random_instance(66, m_max=100)
+        zetas = [0.8, 0.2, 0.5]                # unsorted input order kept
+        fr = pareto_frontier(profs, qs, zetas)
+        for z, a in zip(fr.zetas, fr.assignments):
+            ref = scheduler.schedule(profs, qs, z)
+            assert a.objective == ref.objective
