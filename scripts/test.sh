@@ -11,8 +11,12 @@
 #                            (closed-form decode vs chunked reference, fast
 #                            capacitated solver vs min-cost-flow oracle,
 #                            warm-start reschedule vs cold solve, jitted
-#                            batch cost kernel vs the numpy closed form);
-#                            fails on disagreement, never on wall-clock
+#                            batch cost kernel vs the numpy closed form,
+#                            DVFS closed-form frequency choice vs a brute-
+#                            force frequency grid, and gated-sim energy
+#                            conservation: busy+idle+gated+transition ==
+#                            total to 1e-9); fails on disagreement, never
+#                            on wall-clock
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

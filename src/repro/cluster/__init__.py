@@ -3,41 +3,90 @@
 The paper derives workload-based energy models and uses them for *offline*
 energy-optimal scheduling over a known workload.  This package serves the
 same workloads as *streaming traffic* against a heterogeneous fleet and
-quantifies the offline→online optimality gap.
+quantifies the offline→online optimality gap — and, since PR 4, manages
+the fleet's *power*: node power-gating under pluggable autoscalers,
+per-phase DVFS, and non-oracle τout prediction.
 
 Module map (the event model, and how the pieces plug together):
 
-    trace.py    — TracedRequest / ArrivalTrace + generators (Poisson,
-                  bursty Gamma, diurnal thinning, replay of the offline
-                  Alpaca-like case-study workload).  A trace is the only
-                  stochastic input; everything downstream is deterministic.
-    node.py     — ClusterNode: one model replica on one hardware Node.
-                  Continuous batching at phase granularity (batched prefill,
-                  decode segments to the next completion boundary, joiner
-                  prefills in between).  Per-phase time/energy delegates to
-                  repro.energy.simulator, so an uncontended node conserves
-                  energy against the per-request AnalyticLLMSimulator.
-    policies.py — online routers: round_robin, random, least_loaded,
-                  greedy_energy (profile-predicted argmin), zeta_online
-                  (Eq. 2 with causal running normalizers), zeta_replan
-                  (the γ-capacitated partition maintained online over a
-                  sliding window via core.sweep.IncrementalScheduler's
-                  warm-start reschedule), and offline_oracle (replays
-                  core.scheduler.schedule() over the full trace — the
-                  lower bound on the Eq. 2 objective).
-                  New policies subclass RoutingPolicy and implement
-                  select(req, nodes, now); attach() gives them the fleet
-                  and (for oracle-grade information models) the trace.
-    sim.py      — the discrete-event loop.  Two event kinds: arrivals and
-                  node phase completions, processed in (time, seq) order so
-                  ties are deterministic.  compare_policies() reruns a trace
-                  over fresh fleets for an apples-to-apples policy table.
-    metrics.py  — ClusterReport: busy vs idle energy split, J/token,
-                  latency p50/p95/p99, slowdown-SLO attainment, per-node
-                  utilization, and the realized Eq. 2 objective used to
-                  measure the gap to the offline oracle.
+    trace.py      — TracedRequest / ArrivalTrace + generators (Poisson,
+                    bursty Gamma, diurnal thinning, on/off square-wave
+                    churn, replay of the offline Alpaca-like case-study
+                    workload).  A trace is the only stochastic input;
+                    everything downstream is deterministic.
+    node.py       — ClusterNode: one model replica on one hardware Node.
+                    Continuous batching at phase granularity (batched
+                    prefill, decode segments to the next completion
+                    boundary, joiner prefills in between).  Per-phase
+                    time/energy delegates to repro.energy.simulator, so an
+                    uncontended node conserves energy against the
+                    per-request AnalyticLLMSimulator.  Owns the power-state
+                    machine and the per-phase DVFS governor (below).
+    power.py      — PowerConfig (transition latency/energy, gated residual
+                    draw) and autoscalers: reactive_idle (gate after an
+                    idle timeout, wake on demand) and predictive_rate
+                    (sliding-window arrival-rate estimate sizes the awake
+                    fleet, pre-waking ahead of need).
+    predictors.py — TauOutPredictor: per-model empirical τout quantiles
+                    over a sliding completion window (Zheng-et-al-style
+                    length estimation) — the non-oracle information model
+                    for the routers.
+    policies.py   — online routers: round_robin, random, least_loaded,
+                    greedy_energy (profile-predicted argmin), zeta_online
+                    (Eq. 2 with causal running normalizers), zeta_replan
+                    (the γ-capacitated partition maintained online over a
+                    sliding window via core.sweep.IncrementalScheduler's
+                    warm-start reschedule), and offline_oracle (replays
+                    core.scheduler.schedule() over the full trace — the
+                    lower bound on the Eq. 2 objective).  The energy-aware
+                    policies accept tau_out_predictor= to downgrade their
+                    information model from oracle to learned.
+                    New policies subclass RoutingPolicy and implement
+                    select(req, nodes, now); attach() gives them the fleet
+                    and (for oracle-grade information models) the trace;
+                    observe_completion() is their causal feedback channel.
+    sim.py        — the discrete-event loop.  Five event kinds: arrivals,
+                    node phase completions, wake/gate completions, and
+                    autoscaler idle timers, processed in (time, seq) order
+                    so ties are deterministic.  compare_policies() reruns
+                    a trace over fresh fleets (and fresh autoscalers) for
+                    an apples-to-apples policy table.
+    metrics.py    — ClusterReport: the busy/idle/gated/transition energy
+                    split (the buckets partition each node's horizon —
+                    gated time is never double-charged as idle — and sum
+                    exactly to total energy), J/token, latency p50/p95/p99,
+                    slowdown-SLO attainment, per-node utilization, and the
+                    realized Eq. 2 objective used to measure the gap to
+                    the offline oracle.
 
-Entry points: benchmarks/fig4_online_gap.py (arrival-rate × ζ sweep) and
+Power-state lifecycle (driven by ClusterNode, timed by sim.py)::
+
+        enqueue / next phase         idle timer + autoscaler ok
+    ACTIVE <────────────> IDLE ─────────────────────────────> GATING
+       ^                   ^                                     │ gate_s
+       │ wake done         │ wake done (no queued work)          v
+      (work waiting)      WAKING <─────────────────────────── GATED
+                            on-demand (routed request) or pre-wake
+
+DVFS operating-point semantics: an AcceleratorSpec exposes discrete
+`dvfs_scales`; at scale s, peak_flops ∝ s, hbm_bw keeps its `dvfs_bw_floor`
+fraction plus the coupled remainder, dyn_w ∝ s^α, idle_w fixed.  A node
+with dvfs="per_phase" asks the simulator for the energy-minimal point per
+phase (closed-form evaluation per candidate, host draw included), so
+compute-bound prefill runs near max clock while bandwidth-bound decode
+underclocks; freq_scale= pins a fixed point instead.
+
+Gap definitions measured by benchmarks/fig4_online_gap.py:
+
+    commitment gap  — oracle-τout online router vs the offline-oracle
+                      replay: the cost of routing one request at a time,
+                      with full per-request knowledge.
+    information gap — predicted-τout router vs the same router with
+                      oracle τout: the cost of *not knowing* output
+                      lengths, isolated from the commitment gap.
+
+Entry points: benchmarks/fig4_online_gap.py (arrival-rate × ζ sweep,
+power-gating and DVFS columns, the two-gap split) and
 examples/cluster_sim.py (a narrated single run).
 """
 
@@ -54,12 +103,20 @@ from repro.cluster.policies import (  # noqa: F401
     ZetaOnlinePolicy,
     ZetaReplanPolicy,
 )
+from repro.cluster.power import (  # noqa: F401
+    AutoscalePolicy,
+    PowerConfig,
+    PredictiveRatePolicy,
+    ReactiveIdlePolicy,
+)
+from repro.cluster.predictors import TauOutPredictor  # noqa: F401
 from repro.cluster.sim import compare_policies, fresh_nodes, simulate_cluster  # noqa: F401
 from repro.cluster.trace import (  # noqa: F401
     ArrivalTrace,
     TracedRequest,
     bursty_trace,
     diurnal_trace,
+    onoff_trace,
     poisson_trace,
     replay_trace,
     timestamped_trace,

@@ -1,11 +1,22 @@
 """Aggregate metrics for a cluster run.
 
-Energy accounting is split into *busy* energy (accelerator dynamic+idle
-during phases plus the host serving draw — exactly what the per-request
-AnalyticLLMSimulator would report) and *idle* energy (node idle power over
-the gaps), so the conservation invariant against the offline simulator can
-be stated on busy energy alone while fleet-level J/token still includes
-the cost of keeping under-utilized replicas powered.
+Energy accounting is split into four buckets per node:
+
+  * *busy*       — accelerator dynamic+idle during phases plus the host
+                   serving draw (exactly what the per-request
+                   AnalyticLLMSimulator would report);
+  * *idle*       — node idle power over powered-but-workless seconds;
+  * *gated*      — the residual draw while powered down;
+  * *transition* — gate/wake ramps (latency at transition power plus any
+                   fixed per-transition joules).
+
+The buckets partition each node's horizon exactly — one second lands in
+exactly one bucket, so gated time is never double-charged as idle — and
+their sum IS the total energy (the conservation invariant gated in the
+perf suite at 1e-9).  The busy bucket alone carries the conservation
+invariant against the offline simulator, while fleet-level J/token still
+includes the cost of keeping under-utilized replicas powered (or the
+savings from gating them).
 """
 
 from __future__ import annotations
@@ -53,6 +64,24 @@ class NodeStats:
     busy_energy_j: float
     idle_energy_j: float
     utilization: float          # busy_s / makespan
+    # --- power-management buckets (all zero for an always-on node) ----
+    idle_s: float = 0.0
+    gated_s: float = 0.0
+    gated_energy_j: float = 0.0
+    transition_s: float = 0.0
+    transition_energy_j: float = 0.0
+    horizon_s: float = 0.0      # busy+idle+gated+transition == horizon
+    n_wakes: int = 0
+    n_gates: int = 0
+
+    @property
+    def total_energy_j(self) -> float:
+        return (self.busy_energy_j + self.idle_energy_j
+                + self.gated_energy_j + self.transition_energy_j)
+
+    @property
+    def accounted_s(self) -> float:
+        return self.busy_s + self.idle_s + self.gated_s + self.transition_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,8 +104,25 @@ class ClusterReport:
         return sum(s.idle_energy_j for s in self.node_stats)
 
     @property
+    def total_gated_energy_j(self) -> float:
+        return sum(s.gated_energy_j for s in self.node_stats)
+
+    @property
+    def total_transition_energy_j(self) -> float:
+        return sum(s.transition_energy_j for s in self.node_stats)
+
+    @property
     def total_energy_j(self) -> float:
-        return self.total_busy_energy_j + self.total_idle_energy_j
+        return (self.total_busy_energy_j + self.total_idle_energy_j
+                + self.total_gated_energy_j + self.total_transition_energy_j)
+
+    @property
+    def total_wakes(self) -> int:
+        return sum(s.n_wakes for s in self.node_stats)
+
+    @property
+    def total_gates(self) -> int:
+        return sum(s.n_gates for s in self.node_stats)
 
     @property
     def total_tokens(self) -> int:
@@ -86,6 +132,15 @@ class ClusterReport:
     def j_per_token(self) -> float:
         tok = self.total_tokens
         return self.total_energy_j / tok if tok else 0.0
+
+    def energy_breakdown(self) -> dict[str, float]:
+        """The four-bucket split (joules) — sums to total_energy_j."""
+        return {
+            "busy": self.total_busy_energy_j,
+            "idle": self.total_idle_energy_j,
+            "gated": self.total_gated_energy_j,
+            "transition": self.total_transition_energy_j,
+        }
 
     # --- latency ----------------------------------------------------------
     def latency_percentile(self, q: float) -> float:
@@ -123,8 +178,14 @@ class ClusterReport:
 
     # --- display ----------------------------------------------------------
     def summary(self) -> str:
+        power = ""
+        if self.total_gates or self.total_gated_energy_j:
+            power = (f"gated={self.total_gated_energy_j:.0f} "
+                     f"trans={self.total_transition_energy_j:.0f} "
+                     f"wakes={self.total_wakes} ")
         return (f"{self.policy:>15s}: E={self.total_energy_j:12.0f}J "
                 f"(busy={self.total_busy_energy_j:.0f} idle={self.total_idle_energy_j:.0f}) "
+                f"{power}"
                 f"pred={self.predicted_energy_j:.0f}J obj={self.objective:+.3f} "
                 f"J/tok={self.j_per_token:7.2f} "
                 f"p50={self.latency_p50:6.2f}s p95={self.latency_p95:6.2f}s "
@@ -134,16 +195,25 @@ class ClusterReport:
 
 
 def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
+    """Snapshot the per-node accounting.  Nodes must have been finalized
+    (books closed at the makespan) by the simulation loop."""
     out = []
     for n in nodes:
-        idle_s = max(0.0, makespan_s - n.busy_s)
         out.append(NodeStats(
             node_id=n.node_id,
             model=n.model_name,
             n_served=n.n_served,
             busy_s=n.busy_s,
             busy_energy_j=n.busy_energy_j,
-            idle_energy_j=idle_s * n.idle_power_w,
+            idle_energy_j=n.idle_energy_j,
             utilization=(n.busy_s / makespan_s) if makespan_s > 0 else 0.0,
+            idle_s=n.idle_s,
+            gated_s=n.gated_s,
+            gated_energy_j=n.gated_energy_j,
+            transition_s=n.transition_s,
+            transition_energy_j=n.transition_energy_j,
+            horizon_s=n.horizon_s,
+            n_wakes=n.n_wakes,
+            n_gates=n.n_gates,
         ))
     return tuple(out)

@@ -1,4 +1,4 @@
-"""Per-node serving state machine with continuous batching.
+"""Per-node serving state machine with continuous batching + power states.
 
 A ClusterNode hosts one model replica on one hardware Node and serves the
 requests a routing policy sends it.  Service is phase-granular:
@@ -18,25 +18,47 @@ Time and energy per phase delegate to repro.energy.simulator
 per-request simulator's PhaseBreakdown exactly — the energy-conservation
 invariant tested in tests/test_cluster.py.
 
-decode_cost is the exact closed-form integral (additive across segment
-splits, so completion-boundary segmentation conserves energy by
-construction) and both phase costs are memoized inside the simulator per
-(context, steps, batch) — workloads with repeated query shapes never
-re-integrate a decode segment, which is what keeps million-request
-cluster sweeps tractable.
+Power management (repro.cluster.power) adds the off-phase lifecycle:
+besides serving (ACTIVE) the node can sit powered (IDLE), be powered down
+(GATED, residual draw) or be mid-transition (GATING/WAKING, with
+configurable latency and energy).  Every second of the node's horizon is
+accounted to exactly one of the busy/idle/gated/transition buckets —
+gated seconds are never double-charged as idle — and the sum of the four
+energy buckets IS the node's total energy (the conservation invariant the
+perf suite gates at 1e-9).  A request routed to a gated node triggers an
+on-demand wake; autoscalers may gate idle nodes and pre-wake gated ones.
+
+Per-phase DVFS (`dvfs="per_phase"`): before charging a phase the node asks
+the simulator for the energy-minimal operating point over
+`accel.dvfs_scales` (closed-form evaluation per candidate, host serving
+draw included as `extra_w`), so compute-bound prefills run near max clock
+while bandwidth-bound decode segments underclock — the per-phase split of
+Fernandez et al.  `freq_scale=` pins a fixed operating point instead
+(the fixed-frequency baseline fig4 compares against).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import Counter, deque
 
 from repro.core.energy_model import LLMProfile
 from repro.energy.hardware import Node, SWING_NODE
 from repro.energy.simulator import AnalyticLLMSimulator
 from repro.models.common import ModelConfig
 
+from repro.cluster.power import (
+    ACTIVE,
+    GATED,
+    GATING,
+    IDLE,
+    WAKING,
+    PowerConfig,
+)
 from repro.cluster.trace import TracedRequest
+
+# event hints returned to the sim loop: (kind, absolute time)
+_PHASE, _WAKE, _GATE = "phase", "wake", "gate"
 
 
 @dataclasses.dataclass
@@ -65,8 +87,9 @@ class Completion:
 
 
 class ClusterNode:
-    """One model replica on one hardware node, with a waiting queue and a
-    continuously-batched active set.  Driven by repro.cluster.sim."""
+    """One model replica on one hardware node, with a waiting queue, a
+    continuously-batched active set, and a power-state machine.  Driven by
+    repro.cluster.sim."""
 
     def __init__(
         self,
@@ -79,11 +102,19 @@ class ClusterNode:
         kv_cache: bool = True,
         decode_chunk: int = 256,   # legacy reference-loop chunk (decode_cost
                                    # itself is closed-form and chunk-free)
+        power: PowerConfig | None = None,
+        dvfs: str = "off",         # "off" (pinned freq_scale) | "per_phase"
+        freq_scale: float = 1.0,   # fixed operating point when dvfs="off"
     ):
+        if dvfs not in ("off", "per_phase"):
+            raise ValueError(f"dvfs must be 'off' or 'per_phase', got {dvfs!r}")
         self.node_id = node_id
         self.model_cfg = model_cfg
         self.profile = profile
         self.max_batch = max_batch
+        self.power = power if power is not None else PowerConfig()
+        self.dvfs = dvfs
+        self.freq_scale = freq_scale
         self.sim = AnalyticLLMSimulator(
             model_cfg, hardware, batch=1, kv_cache=kv_cache,
             noise_sigma=0.0, decode_chunk=decode_chunk)
@@ -95,10 +126,24 @@ class ClusterNode:
         self._phase_members: list[_InFlight] = []
         self._phase_steps: int = 0
 
-        # aggregate accounting
+        # power-state machine (starts powered and idle at t = 0)
+        self._pstate = IDLE
+        self._pstate_since = 0.0
+
+        # aggregate accounting: the four time/energy buckets
         self.busy_s = 0.0
         self.busy_energy_j = 0.0
+        self.idle_s = 0.0
+        self.idle_energy_j = 0.0
+        self.gated_s = 0.0
+        self.gated_energy_j = 0.0
+        self.transition_s = 0.0
+        self.transition_energy_j = 0.0
+        self.horizon_s = 0.0       # set by finalize()
         self.n_served = 0
+        self.n_wakes = 0
+        self.n_gates = 0
+        self.freq_choices: Counter = Counter()   # (phase_kind, scale) -> count
 
     # ------------------------------------------------------------------
     @property
@@ -118,14 +163,128 @@ class ClusterNode:
         a, h = self.hardware.accel, self.hardware.host
         return a.idle_w * self.hardware.n_accel + h.idle_w
 
+    @property
+    def transition_power_w(self) -> float:
+        w = self.power.transition_w
+        return self.idle_power_w if w is None else w
+
+    # --- power-state surface (read by sim loop, autoscalers, policies) --
+    @property
+    def power_state(self) -> str:
+        return self._pstate
+
+    @property
+    def power_state_since(self) -> float:
+        return self._pstate_since
+
+    @property
+    def awake(self) -> bool:
+        return self._pstate in (ACTIVE, IDLE)
+
+    @property
+    def can_gate(self) -> bool:
+        return (self._pstate == IDLE and not self.waiting and not self.active)
+
+    @property
+    def power_rank(self) -> int:
+        """Tie-break key for routing: who serves a fresh request soonest.
+        0 = powered (idle/active), 1 = waking, 2 = gated (one wake away),
+        3 = gating (must finish ramping down, then wake)."""
+        return {ACTIVE: 0, IDLE: 0, WAKING: 1, GATED: 2, GATING: 3}[self._pstate]
+
+    # --- time/energy bucket accounting ---------------------------------
+    def _accrue(self, now: float) -> None:
+        """Close the open interval of the current state at `now`.  ACTIVE
+        time/energy is charged per phase by _charge (exact closed forms),
+        so only the off-phase states accrue here."""
+        dt = now - self._pstate_since
+        if dt <= 0.0:
+            return
+        if self._pstate == IDLE:
+            self.idle_s += dt
+            self.idle_energy_j += dt * self.idle_power_w
+        elif self._pstate == GATED:
+            self.gated_s += dt
+            self.gated_energy_j += dt * self.power.gated_w
+        elif self._pstate in (GATING, WAKING):
+            self.transition_s += dt
+            self.transition_energy_j += dt * self.transition_power_w
+
+    def _set_state(self, state: str, now: float) -> None:
+        if state == self._pstate:
+            return
+        self._accrue(now)
+        self._pstate = state
+        self._pstate_since = now
+
+    def finalize(self, end_s: float) -> None:
+        """Close the books at the end of a simulation.  The node's horizon
+        is the report makespan, extended if a power transition was still
+        settling past it (that time is accounted, not dropped — the
+        conservation invariant stays exact)."""
+        horizon = max(end_s, self._pstate_since)
+        self._accrue(horizon)
+        self._pstate_since = horizon
+        self.horizon_s = horizon
+
+    @property
+    def total_energy_j(self) -> float:
+        return (self.busy_energy_j + self.idle_energy_j
+                + self.gated_energy_j + self.transition_energy_j)
+
+    @property
+    def accounted_s(self) -> float:
+        return self.busy_s + self.idle_s + self.gated_s + self.transition_s
+
     # ------------------------------------------------------------------
-    def enqueue(self, req: TracedRequest, now: float) -> float | None:
-        """Accept a routed request.  Returns the end time of a newly started
-        phase if the node was idle, else None (the request waits)."""
+    def enqueue(self, req: TracedRequest, now: float
+                ) -> tuple[str, float] | None:
+        """Accept a routed request.  Returns the next timed event this
+        creates — ("phase", end_s) if an idle node starts serving,
+        ("wake", end_s) if a gated node begins its on-demand wake — or
+        None when the request just queues (node busy or mid-transition)."""
         self.waiting.append(req)
-        if not self.busy:
-            return self._start_phase(now)
+        if self._pstate == GATED:
+            return (_WAKE, self.begin_wake(now))
+        if self._pstate in (WAKING, GATING) or self.busy:
+            return None
+        return self._phase_event(self._start_phase(now))
+
+    # --- power transitions ---------------------------------------------
+    def begin_wake(self, now: float) -> float:
+        """Start powering the node back up; returns the ready time."""
+        assert self._pstate == GATED, f"wake from {self._pstate}"
+        self._set_state(WAKING, now)
+        self.transition_energy_j += self.power.wake_j
+        self.n_wakes += 1
+        return now + self.power.wake_s
+
+    def on_wake_end(self, now: float) -> tuple[str, float] | None:
+        """Node is powered again: serve whatever queued during the wake."""
+        assert self._pstate == WAKING, f"wake ended in {self._pstate}"
+        self._set_state(IDLE, now)
+        return self._phase_event(self._start_phase(now))
+
+    def begin_gate(self, now: float) -> tuple[str, float]:
+        """Start ramping an idle node down; uninterruptible (an arrival
+        during the ramp queues, then triggers a wake once gated)."""
+        assert self.can_gate, f"gate from {self._pstate} (work pending?)"
+        self._set_state(GATING, now)
+        self.transition_energy_j += self.power.gate_j
+        self.n_gates += 1
+        return (_GATE, now + self.power.gate_s)
+
+    def on_gate_end(self, now: float) -> tuple[str, float] | None:
+        assert self._pstate == GATING, f"gate ended in {self._pstate}"
+        self._set_state(GATED, now)
+        if self.waiting:   # something arrived mid-ramp: wake right back up
+            return (_WAKE, self.begin_wake(now))
         return None
+
+    # --- phases ---------------------------------------------------------
+    @staticmethod
+    def _phase_event(end_s: float | None) -> tuple[str, float] | None:
+        return None if end_s is None else (_PHASE, end_s)
 
     def _charge(self, members: list[_InFlight], t: float, e_accel: float) -> None:
         e_total = e_accel + self.sim.host_power_w * t
@@ -135,6 +294,28 @@ class ClusterNode:
         for m in members:
             m.energy_j += share
 
+    def _prefill(self, tau_in: int, batch: int) -> tuple[float, float]:
+        if self.dvfs == "per_phase":
+            s, t, e = self.sim.best_prefill_frequency(
+                tau_in, batch=batch, extra_w=self.sim.host_power_w)
+        else:
+            s = self.freq_scale
+            t, e = self.sim.prefill_cost(tau_in, batch=batch, freq_scale=s)
+        self.freq_choices[("prefill", s)] += 1
+        return t, e
+
+    def _decode(self, base: int, n_steps: int, batch: int
+                ) -> tuple[float, float]:
+        if self.dvfs == "per_phase":
+            s, t, e = self.sim.best_decode_frequency(
+                base, n_steps, batch=batch, extra_w=self.sim.host_power_w)
+        else:
+            s = self.freq_scale
+            t, e = self.sim.decode_cost(base, n_steps, batch=batch,
+                                        freq_scale=s)
+        self.freq_choices[("decode", s)] += 1
+        return t, e
+
     def _start_phase(self, now: float) -> float | None:
         """Pick the next phase; returns its end time (None if going idle)."""
         slots = self.max_batch - len(self.active)
@@ -143,8 +324,8 @@ class ClusterNode:
             joiners = [self.waiting.popleft()
                        for _ in range(min(slots, len(self.waiting)))]
             members = [_InFlight(r, start_s=now) for r in joiners]
-            t, e = self.sim.prefill_cost(max(r.tau_in for r in joiners),
-                                         batch=len(joiners))
+            t, e = self._prefill(max(r.tau_in for r in joiners), len(joiners))
+            self._set_state(ACTIVE, now)
             self._charge(members, t, e)
             self.active.extend(members)
             self._phase_members = members
@@ -154,22 +335,25 @@ class ClusterNode:
         if self.active:
             # decode to the next completion boundary (padded batch: every
             # step attends up to the longest member context); closed-form
-            # and memoized on (base, n_steps, batch), so bursts of
+            # and memoized on (base, n_steps, batch, freq), so bursts of
             # identical requests price each segment shape exactly once
             n_steps = min(m.remaining for m in self.active)
             base = max(m.context for m in self.active)
-            t, e = self.sim.decode_cost(base, n_steps, batch=len(self.active))
+            t, e = self._decode(base, n_steps, len(self.active))
+            self._set_state(ACTIVE, now)
             self._charge(self.active, t, e)
             self._phase_members = list(self.active)
             self._phase_steps = n_steps
             self._phase_end_s = now + t
             return self._phase_end_s
+        self._set_state(IDLE, now)
         self._phase_end_s = None
         return None
 
-    def on_phase_end(self, now: float) -> tuple[list[Completion], float | None]:
+    def on_phase_end(self, now: float
+                     ) -> tuple[list[Completion], tuple[str, float] | None]:
         """Advance past the finished phase.  Returns (completions, next
-        phase end time or None if the node went idle)."""
+        phase event or None if the node went idle)."""
         assert self._phase_end_s is not None
         done: list[Completion] = []
         for m in self._phase_members:
@@ -192,4 +376,4 @@ class ClusterNode:
         self._phase_members = []
         self._phase_steps = 0
         self._phase_end_s = None
-        return done, self._start_phase(now)
+        return done, self._phase_event(self._start_phase(now))

@@ -19,6 +19,15 @@ ZetaOnlinePolicy implements the paper's "dynamically normalize ... by the
 largest known value" rule *causally*: its normalizers grow as requests
 stream in, so early routing decisions use stale maxima — a genuine source
 of online regret that vanishes as the trace warms up.
+
+τout information models: the energy-aware policies take an optional
+``tau_out_predictor`` (repro.cluster.predictors.TauOutPredictor).  Without
+one they read the request's true τout — the paper's offline-knowledge
+assumption.  With one they price each candidate model at its predicted
+quantile, learning only from completions the event loop echoes through
+``observe_completion`` — never from the trace — so fig4 can measure the
+information gap (oracle-τout vs predicted-τout router) separately from
+the commitment gap (oracle-τout router vs the offline replay).
 """
 
 from __future__ import annotations
@@ -32,6 +41,7 @@ from repro.core.energy_model import LLMProfile, normalized_costs, objective_matr
 from repro.core.scheduler import schedule
 from repro.core.sweep import IncrementalScheduler
 
+from repro.cluster.predictors import TauOutPredictor
 from repro.cluster.trace import ArrivalTrace, TracedRequest
 
 
@@ -52,10 +62,19 @@ class RoutingPolicy:
     def select(self, req: TracedRequest, nodes: Sequence, now: float) -> int:
         raise NotImplementedError
 
+    def observe_completion(self, record, now: float) -> None:
+        """Causal completion feedback (a metrics.RequestRecord): the only
+        channel through which a non-oracle policy learns true τout."""
+
     # ------------------------------------------------------------------
     @staticmethod
     def _least_loaded(candidates: Sequence) -> int:
-        best = min(candidates, key=lambda n: (n.load(), n.node_id))
+        # equal load breaks toward the node that can serve soonest
+        # (powered < waking < gated < gating); always-on fleets have
+        # power_rank 0 everywhere, so the PR 1 ordering is unchanged
+        best = min(candidates,
+                   key=lambda n: (n.load(), getattr(n, "power_rank", 0),
+                                  n.node_id))
         return best.node_id
 
     @staticmethod
@@ -102,21 +121,51 @@ class LeastLoadedPolicy(RoutingPolicy):
         return self._least_loaded(nodes)
 
 
-class GreedyEnergyPolicy(RoutingPolicy):
+class _TauOutMixin:
+    """Shared τout information model: oracle (read the trace's true value)
+    or a TauOutPredictor fed causally from completions."""
+
+    def _init_predictor(self, tau_out_predictor: TauOutPredictor | None):
+        self.predictor = tau_out_predictor
+        if tau_out_predictor is not None:
+            self.name = f"{self.name}+tau_pred"
+
+    def _reset_predictor(self):
+        if self.predictor is not None:
+            self.predictor.reset()
+
+    def _tau_for(self, req, model_name: str | None) -> float:
+        if self.predictor is None:
+            return float(req.tau_out)
+        return self.predictor.predict(model_name)
+
+    def observe_completion(self, record, now):
+        if self.predictor is not None:
+            self.predictor.observe(record.model, record.tau_out)
+
+
+class GreedyEnergyPolicy(_TauOutMixin, RoutingPolicy):
     """Per-request argmin of predicted energy e_K(τin, τout); ties and
     replicas break toward the least-loaded host."""
 
     name = "greedy_energy"
 
+    def __init__(self, *, tau_out_predictor: TauOutPredictor | None = None):
+        self._init_predictor(tau_out_predictor)
+
+    def attach(self, nodes, trace, zeta):
+        self._reset_predictor()
+
     def select(self, req, nodes, now):
-        preds = [float(n.profile.energy(req.tau_in, req.tau_out))
+        preds = [float(n.profile.energy(
+                     req.tau_in, self._tau_for(req, n.profile.name)))
                  for n in nodes]
         best = min(preds)
         hosts = [n for n, p in zip(nodes, preds) if p <= best * (1 + 1e-12)]
         return self._least_loaded(hosts)
 
 
-class ZetaOnlinePolicy(RoutingPolicy):
+class ZetaOnlinePolicy(_TauOutMixin, RoutingPolicy):
     """Causal Eq. 2: ζ·ê − (1−ζ)·â with *running* normalizers.
 
     The paper normalizes by the largest energy/accuracy over the whole
@@ -125,23 +174,30 @@ class ZetaOnlinePolicy(RoutingPolicy):
 
     name = "zeta_online"
 
-    def __init__(self, zeta: float | None = None):
+    def __init__(self, zeta: float | None = None, *,
+                 tau_out_predictor: TauOutPredictor | None = None):
         self.zeta_override = zeta
         self.zeta = 0.5
         self._e_max = 0.0
         self._a_max = 0.0
+        self._init_predictor(tau_out_predictor)
 
     def attach(self, nodes, trace, zeta):
         self.zeta = self.zeta_override if self.zeta_override is not None else zeta
         self._e_max = 0.0
         self._a_max = 0.0
+        self._reset_predictor()
 
     def _observe(self, req, nodes):
         """Fold a request into the running normalizers (every arrival must
-        pass through here, whatever routing rule ends up deciding it)."""
-        e = np.array([float(n.profile.energy(req.tau_in, req.tau_out))
+        pass through here, whatever routing rule ends up deciding it).
+        Under a predictor the normalizers, like the scores, are built from
+        predicted τout — the true value is not observable at routing time."""
+        e = np.array([float(n.profile.energy(
+                          req.tau_in, self._tau_for(req, n.profile.name)))
                       for n in nodes])
-        a = np.array([float(n.profile.accuracy(req.tau_in, req.tau_out))
+        a = np.array([float(n.profile.accuracy(
+                          req.tau_in, self._tau_for(req, n.profile.name)))
                       for n in nodes])
         self._e_max = max(self._e_max, float(e.max()))
         self._a_max = max(self._a_max, float(a.max()))
@@ -177,8 +233,9 @@ class ZetaReplanPolicy(ZetaOnlinePolicy):
     def __init__(self, zeta: float | None = None, *,
                  gamma: Sequence[float] | None = None,
                  window: int = 512, replan_every: int = 1,
-                 min_queries: int = 4):
-        super().__init__(zeta)
+                 min_queries: int = 4,
+                 tau_out_predictor: TauOutPredictor | None = None):
+        super().__init__(zeta, tau_out_predictor=tau_out_predictor)
         if window < 1 or replan_every < 1:
             raise ValueError("window and replan_every must be >= 1")
         if replan_every > window:
@@ -229,7 +286,10 @@ class ZetaReplanPolicy(ZetaOnlinePolicy):
         self._pending = []
 
     def select(self, req, nodes, now):
-        self._pending.append((req.tau_in, req.tau_out))
+        # the plan's query uses the pooled τ̂out under a predictor (the
+        # partition is chosen before the serving model is known)
+        self._pending.append((req.tau_in,
+                              int(round(self._tau_for(req, None)))))
         n_seen = (len(self._pending) if self._sched is None
                   else self._sched.next_id + len(self._pending))
         warmed = n_seen >= max(self.min_queries, len(self._profiles))

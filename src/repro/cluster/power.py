@@ -1,0 +1,206 @@
+"""Node power management: power states, transition costs, autoscalers.
+
+At low arrival rates the fig4 idle columns dominate total cluster energy —
+no routing policy can recover joules burned by powered-but-idle replicas.
+This module adds the missing lever: nodes can be *gated* (powered down to
+a residual draw) and woken back, with configurable transition latency and
+energy, under a pluggable autoscaling policy.
+
+Power-state lifecycle (ClusterNode drives it, the event loop times it)::
+
+            enqueue/phase            idle-timer + policy ok
+      ACTIVE <────────> IDLE ──────────────────────────> GATING
+        ^                ^                                  │ gate_s
+        │ wake done      │ wake done (no work)              v
+      (work waiting)     WAKING <──────────────────────── GATED
+                              arrival routed here / proactive wake
+
+    * ACTIVE  — serving a phase; busy seconds/joules (accelerator idle+
+                dynamic plus host serving draw, as before).
+    * IDLE    — powered, no work: idle_power_w (accel idle · n + host idle).
+    * GATED   — powered down: `PowerConfig.gated_w` residual (BMC, NIC).
+    * GATING / WAKING — transitions: `transition_w` draw (defaults to the
+                idle power — fans spin, links train) for gate_s / wake_s
+                seconds plus the fixed extras gate_j / wake_j.
+
+    Every second of a node's horizon lands in exactly one bucket
+    (busy/idle/gated/transition) — gated time is never double-charged as
+    idle; `tests/test_power.py` and the perf-suite conservation gate
+    assert the partition to 1e-9.
+
+Autoscalers see three moments: `on_idle` (a node just ran out of work —
+arm a gate timer?), `should_gate` (the timer fired and the node is still
+idle — commit?), and `on_arrival` (wake gated nodes proactively?).  A
+request routed to a gated node always triggers an on-demand wake — work
+is never stranded, whatever the policy does.
+
+Two built-in policies:
+
+    * ReactiveIdlePolicy   — gate a node once it has sat idle for
+      `idle_timeout_s`, keeping at least `min_awake` nodes up; wakes are
+      purely on demand (first routed request pays the wake latency).
+    * PredictiveRatePolicy — estimates the arrival rate over a sliding
+      window and the mean service time from observed completions, sizes
+      the awake fleet to `rate · service / target_util`, wakes gated
+      nodes *ahead* of need on arrivals and gates down below it.  The
+      reactive/predictive split is exactly the tradeoff the §6.3-style
+      case study needs: reactive saves more joules but pays wake latency
+      on the first request of every burst.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Sequence
+
+# power-state tags (kept as plain strings: cheap, printable, json-able)
+ACTIVE = "active"
+IDLE = "idle"
+GATED = "gated"
+GATING = "gating"
+WAKING = "waking"
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerConfig:
+    """Transition costs and residual draw of a gateable node.
+
+    Defaults are deliberately conservative for an A100-class server:
+    ~15 s to bring the node back (power rails + model weights re-resident)
+    against a 5 s ramp down, a 10 W gated residual, and transitions drawn
+    at the node's idle power unless `transition_w` overrides it."""
+
+    gated_w: float = 10.0          # residual draw while gated (BMC, NIC)
+    wake_s: float = 15.0           # gated -> ready latency
+    gate_s: float = 5.0            # idle -> gated latency
+    wake_j: float = 0.0            # fixed extra energy per wake
+    gate_j: float = 0.0            # fixed extra energy per gate-down
+    transition_w: float | None = None   # draw during gate/wake (None = idle)
+
+    def __post_init__(self):
+        if min(self.gated_w, self.wake_s, self.gate_s,
+               self.wake_j, self.gate_j) < 0:
+            raise ValueError("PowerConfig fields must be non-negative")
+
+
+class AutoscalePolicy:
+    """Base autoscaler: never gates (the PR 1 always-on fleet)."""
+
+    name = "always_on"
+
+    def attach(self, nodes: Sequence) -> None:
+        self.nodes = list(nodes)
+
+    def on_idle(self, node, now: float) -> float | None:
+        """Node just went idle.  Return an absolute time at which to
+        re-check it for gating (an idle timer), or None to leave it up."""
+        return None
+
+    def should_gate(self, node, now: float) -> bool:
+        """The idle timer fired and the node is still idle: commit?"""
+        return False
+
+    def on_arrival(self, req, nodes: Sequence, now: float) -> list[int]:
+        """Node ids to wake proactively (before the request is routed)."""
+        return []
+
+    def on_completion(self, completion, now: float) -> None:
+        """Observed a finished request (service-time feedback)."""
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _awake(nodes: Sequence) -> int:
+        """Nodes currently up or on their way up (serving capacity that
+        does not need a wake)."""
+        return sum(1 for n in nodes if n.power_state in (ACTIVE, IDLE, WAKING))
+
+
+class ReactiveIdlePolicy(AutoscalePolicy):
+    """Gate after `idle_timeout_s` of idleness; wake on demand only."""
+
+    name = "reactive_idle"
+
+    def __init__(self, idle_timeout_s: float = 30.0, *, min_awake: int = 1):
+        if idle_timeout_s < 0 or min_awake < 0:
+            raise ValueError("idle_timeout_s and min_awake must be >= 0")
+        self.idle_timeout_s = idle_timeout_s
+        self.min_awake = min_awake
+
+    def on_idle(self, node, now):
+        return now + self.idle_timeout_s
+
+    def should_gate(self, node, now):
+        return self._awake(self.nodes) > self.min_awake
+
+
+class PredictiveRatePolicy(AutoscalePolicy):
+    """Size the awake fleet from a sliding-window arrival-rate estimate.
+
+    required ≈ ceil(rate · mean_service_s / target_util), clamped to
+    [min_awake, fleet].  `mean_service_s` is learned from completions
+    (queue-free service time, start→finish); until the first completion a
+    `service_prior_s` seeds it.  Wakes happen ahead of routing on the
+    arrival that pushes the estimate over capacity; gating goes through
+    the same idle timer as the reactive policy but only below the
+    requirement."""
+
+    name = "predictive_rate"
+
+    def __init__(self, window_s: float = 60.0, *, target_util: float = 0.6,
+                 min_awake: int = 1, idle_timeout_s: float = 10.0,
+                 service_prior_s: float = 2.0):
+        if window_s <= 0 or not 0 < target_util <= 1:
+            raise ValueError("window_s > 0 and target_util in (0, 1] required")
+        self.window_s = window_s
+        self.target_util = target_util
+        self.min_awake = min_awake
+        self.idle_timeout_s = idle_timeout_s
+        self.service_prior_s = service_prior_s
+        self._arrivals: deque[float] = deque()
+        self._service_sum = 0.0
+        self._service_n = 0
+
+    def attach(self, nodes):
+        super().attach(nodes)
+        self._arrivals.clear()
+        self._service_sum = 0.0
+        self._service_n = 0
+
+    # --- estimates ----------------------------------------------------
+    def _rate(self, now: float) -> float:
+        while self._arrivals and self._arrivals[0] < now - self.window_s:
+            self._arrivals.popleft()
+        span = min(self.window_s, max(now, 1e-9))
+        return len(self._arrivals) / span
+
+    def _service_s(self) -> float:
+        if self._service_n == 0:
+            return self.service_prior_s
+        return self._service_sum / self._service_n
+
+    def required_nodes(self, now: float) -> int:
+        demand = self._rate(now) * self._service_s() / self.target_util
+        return int(min(len(self.nodes),
+                       max(self.min_awake, math.ceil(demand))))
+
+    # --- hooks --------------------------------------------------------
+    def on_arrival(self, req, nodes, now):
+        self._arrivals.append(now)
+        need = self.required_nodes(now)
+        awake = self._awake(nodes)
+        if awake >= need:
+            return []
+        gated = [n.node_id for n in nodes if n.power_state == GATED]
+        return gated[:need - awake]
+
+    def on_completion(self, completion, now):
+        self._service_sum += completion.finish_s - completion.start_s
+        self._service_n += 1
+
+    def on_idle(self, node, now):
+        return now + self.idle_timeout_s
+
+    def should_gate(self, node, now):
+        return self._awake(self.nodes) > self.required_nodes(now)

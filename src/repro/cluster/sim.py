@@ -1,10 +1,22 @@
 """The discrete-event loop: streaming arrivals over a heterogeneous fleet.
 
-Two event kinds drive the simulation — request arrivals (from the trace)
-and node phase completions (from the continuous-batching state machines).
-Events are processed in (time, sequence) order; the sequence counter makes
-simultaneous events deterministic, so a fixed trace + policy always yields
-a bit-identical ClusterReport.
+Five event kinds drive the simulation — request arrivals (from the trace),
+node phase completions (from the continuous-batching state machines), and
+the power-management triple: wake completions, gate completions, and idle
+timers (armed by the autoscaler when a node runs out of work).  Events are
+processed in (time, sequence) order; the sequence counter makes
+simultaneous events deterministic, so a fixed trace + policy (+ autoscaler)
+always yields a bit-identical ClusterReport.
+
+Without an `autoscaler=`, no idle timer is ever armed and no node ever
+leaves the ACTIVE/IDLE pair — the loop degenerates to the PR 1 two-event
+simulation, keeping the offline-oracle replay baseline and its gap numbers
+directly comparable across PRs.
+
+Completions are echoed to `policy.observe_completion` (τout predictor
+feedback — the only causal channel through which a non-oracle router may
+learn output lengths) and `autoscaler.on_completion` (service-time
+feedback for predictive fleet sizing).
 """
 
 from __future__ import annotations
@@ -19,9 +31,12 @@ from repro.cluster.policies import (
     objective_of_assignment,
     unique_profiles,
 )
+from repro.cluster.power import GATED, IDLE, AutoscalePolicy
 from repro.cluster.trace import ArrivalTrace
 
-_ARRIVAL, _PHASE_END = 0, 1
+_ARRIVAL, _PHASE_END, _WAKE_END, _GATE_END, _IDLE_TIMER = range(5)
+
+_EVENT_CODE = {"phase": _PHASE_END, "wake": _WAKE_END, "gate": _GATE_END}
 
 
 def simulate_cluster(
@@ -30,6 +45,7 @@ def simulate_cluster(
     policy: RoutingPolicy,
     *,
     zeta: float = 0.5,
+    autoscaler: AutoscalePolicy | None = None,
 ) -> ClusterReport:
     """Serve the whole trace; returns the aggregate ClusterReport."""
     if not nodes:
@@ -38,6 +54,8 @@ def simulate_cluster(
     if len(by_id) != len(nodes):
         raise ValueError("node_ids must be unique")
     policy.attach(nodes, trace, zeta)
+    if autoscaler is not None:
+        autoscaler.attach(nodes)
 
     events: list[tuple[float, int, int, object]] = []
     seq = 0
@@ -47,27 +65,52 @@ def simulate_cluster(
 
     records: list[RequestRecord] = []
     makespan = trace.duration_s
+    arrivals_left = len(trace)
 
-    def push_phase(node: ClusterNode, end_s: float | None) -> None:
+    def push(node: ClusterNode, ev: tuple[str, float] | None) -> None:
         nonlocal seq
-        if end_s is not None:
-            heapq.heappush(events, (end_s, seq, _PHASE_END, node.node_id))
+        if ev is not None:
+            kind, end_s = ev
+            heapq.heappush(events, (end_s, seq, _EVENT_CODE[kind],
+                                    node.node_id))
             seq += 1
+
+    def arm_idle_timer(node: ClusterNode, now: float) -> None:
+        """Ask the autoscaler whether (and when) to revisit an idle node.
+        The timer carries the idle-epoch token so a node that served work
+        and went idle again in between invalidates the stale timer."""
+        nonlocal seq
+        if autoscaler is None or node.power_state != IDLE:
+            return
+        t = autoscaler.on_idle(node, now)
+        if t is not None:
+            heapq.heappush(events, (t, seq, _IDLE_TIMER,
+                                    (node.node_id, node.power_state_since)))
+            seq += 1
+
+    for n in nodes:   # the fleet starts idle: give the autoscaler a shot
+        arm_idle_timer(n, 0.0)
 
     while events:
         now, _, kind, payload = heapq.heappop(events)
         if kind == _ARRIVAL:
             req = payload
+            arrivals_left -= 1
+            if autoscaler is not None:
+                for nid in autoscaler.on_arrival(req, nodes, now):
+                    node = by_id[nid]
+                    if node.power_state == GATED:   # proactive pre-wake
+                        push(node, ("wake", node.begin_wake(now)))
             nid = policy.select(req, nodes, now)
             if nid not in by_id:
                 raise ValueError(f"{policy.name} routed to unknown node {nid}")
-            push_phase(by_id[nid], by_id[nid].enqueue(req, now))
-        else:
+            push(by_id[nid], by_id[nid].enqueue(req, now))
+        elif kind == _PHASE_END:
             node = by_id[payload]
-            completions, next_end = node.on_phase_end(now)
+            completions, next_ev = node.on_phase_end(now)
             for c in completions:
                 makespan = max(makespan, c.finish_s)
-                records.append(RequestRecord(
+                rec = RequestRecord(
                     request_id=c.req.request_id,
                     node_id=node.node_id,
                     model=node.model_name,
@@ -78,13 +121,45 @@ def simulate_cluster(
                     finish_s=c.finish_s,
                     energy_j=c.energy_j,
                     isolated_runtime_s=c.isolated_runtime_s,
-                ))
-            push_phase(node, next_end)
+                )
+                policy.observe_completion(rec, now)
+                if autoscaler is not None:
+                    autoscaler.on_completion(rec, now)
+                records.append(rec)
+            push(node, next_ev)
+            if next_ev is None:
+                arm_idle_timer(node, now)
+        elif kind == _WAKE_END:
+            node = by_id[payload]
+            next_ev = node.on_wake_end(now)
+            push(node, next_ev)
+            if next_ev is None:   # pre-woken with nothing to do (yet)
+                arm_idle_timer(node, now)
+        elif kind == _GATE_END:
+            node = by_id[payload]
+            push(node, node.on_gate_end(now))
+        else:  # _IDLE_TIMER
+            nid, token = payload
+            node = by_id[nid]
+            if (node.power_state == IDLE
+                    and node.power_state_since == token
+                    and node.can_gate
+                    and autoscaler is not None):
+                if autoscaler.should_gate(node, now):
+                    push(node, node.begin_gate(now))
+                elif arrivals_left > 0:
+                    # declined (e.g. min_awake bound): re-check later — a
+                    # node that never leaves IDLE must not be stranded
+                    # powered after fleet conditions change.  Re-arming
+                    # stops with the last arrival so the loop terminates.
+                    arm_idle_timer(node, now)
 
     if len(records) != len(trace):
         raise RuntimeError(
             f"served {len(records)}/{len(trace)} requests — event loop bug")
     records.sort(key=lambda r: r.request_id)
+    for n in nodes:   # close every node's books at the common horizon
+        n.finalize(makespan)
 
     profiles = unique_profiles(nodes)
     queries = trace.queries()
@@ -118,10 +193,15 @@ def compare_policies(
     policies: Sequence[RoutingPolicy],
     *,
     zeta: float = 0.5,
+    autoscaler_builder=None,
 ) -> dict[str, ClusterReport]:
-    """Run every policy on identical fresh clusters over the same trace."""
+    """Run every policy on identical fresh clusters over the same trace.
+    `autoscaler_builder` is a zero-arg factory (autoscalers hold per-run
+    state, so they need the same fresh-per-run treatment as nodes)."""
     out: dict[str, ClusterReport] = {}
     for pol in policies:
         nodes = fresh_nodes(node_builders)
-        out[pol.name] = simulate_cluster(trace, nodes, pol, zeta=zeta)
+        scaler = autoscaler_builder() if autoscaler_builder is not None else None
+        out[pol.name] = simulate_cluster(trace, nodes, pol, zeta=zeta,
+                                         autoscaler=scaler)
     return out

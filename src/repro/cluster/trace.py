@@ -107,6 +107,15 @@ def diurnal_trace(n: int, rate_qps: float, *, amplitude: float = 0.8,
                          diurnal_period_s=period_s)
 
 
+def onoff_trace(n: int, rate_qps: float, *, on_s: float = 30.0,
+                off_s: float = 120.0, spec: WorkloadSpec | None = None,
+                seed: int = 0) -> ArrivalTrace:
+    """Square-wave traffic (Poisson bursts separated by silences, same
+    mean rate) — the gate/wake-churn adversary for power management."""
+    return _shaped_trace(f"onoff@{rate_qps:g}", "onoff", n, rate_qps,
+                         spec, seed, onoff_on_s=on_s, onoff_off_s=off_s)
+
+
 def replay_trace(queries: Sequence[Query], rate_qps: float, *,
                  pattern: str = "poisson", seed: int = 0,
                  name: str = "replay") -> ArrivalTrace:

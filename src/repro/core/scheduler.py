@@ -280,14 +280,19 @@ class _ArcHeaps:
     and are skipped lazily against the live ``assignee`` array, which is
     shared by reference with the caller."""
 
-    def __init__(self, C: np.ndarray, assignee: np.ndarray, k: int):
+    def __init__(self, C: np.ndarray, assignee: np.ndarray, k: int,
+                 n_rows: int | None = None):
+        """`n_rows` bounds the initial scan (rows beyond it are treated as
+        unassigned — callers holding capacity-sized buffers pass the used
+        height; later `push` calls may register any row of C)."""
         self.C = C
         self.assignee = assignee
         self.k = k
         self.heaps: list[list[list]] = [[[] for _ in range(k)]
                                         for _ in range(k)]
+        scan = assignee if n_rows is None else assignee[:n_rows]
         for u in range(k):
-            idx = np.nonzero(assignee == u)[0]
+            idx = np.nonzero(scan == u)[0]
             if not len(idx):
                 continue
             base = C[idx, u]
@@ -525,8 +530,30 @@ def _repair_assignment(C: np.ndarray, caps: np.ndarray, assignee: np.ndarray,
         raise ValueError("warm_start must be an (m,) array of bin indices")
     if tol is None:
         tol = 1e-12 * max(1.0, float(np.abs(C).max()))
-    counts = np.bincount(assignee, minlength=k)
     arcs = _ArcHeaps(C, assignee, k)
+    _repair_live(caps, assignee, arcs, tol=tol, n_rows=m)
+    return assignee
+
+
+def _repair_live(caps: np.ndarray, assignee: np.ndarray, arcs: _ArcHeaps,
+                 *, tol: float, n_rows: int) -> None:
+    """The repair inner loop, in place over row-aligned buffers.
+
+    `assignee` may be taller than the live workload and may hold −1
+    sentinels (retired rows — skipped by the lazy heaps and excluded from
+    counts); only rows < `n_rows` are scanned.  `arcs` must index the same
+    (C, assignee) pair — passing a prebuilt instance is what lets
+    ``sweep.IncrementalScheduler`` reuse its heaps across same-ζ delta
+    repairs instead of rebuilding them O(mk) per call.  Terminates exactly
+    when the ``capacitated_optimality_certificate`` conditions hold on the
+    live rows (same argument as ``_repair_assignment``)."""
+    k = len(caps)
+    live = assignee[:n_rows]
+    counts = np.bincount(live[live >= 0], minlength=k).astype(np.int64)
+    m_live = int(counts.sum())
+    if int(caps.sum()) < m_live:
+        raise RuntimeError(
+            f"infeasible: capacities {caps.tolist()} < {m_live} queries")
 
     def apply_moves(path: list[int], cyclic: bool) -> None:
         pairs = list(zip(path, path[1:]))
@@ -546,7 +573,7 @@ def _repair_assignment(C: np.ndarray, caps: np.ndarray, assignee: np.ndarray,
             counts[v] += 1
             arcs.push(i, v)
 
-    max_iter = 64 * (m + k * k) + 1024   # bug guard, not an algorithmic bound
+    max_iter = 64 * (m_live + k * k) + 1024   # bug guard, not an algorithmic bound
     for _ in range(max_iter):
         R = arcs.residual(counts)
         cyc = _find_negative_cycle(R, k, tol)
@@ -563,7 +590,7 @@ def _repair_assignment(C: np.ndarray, caps: np.ndarray, assignee: np.ndarray,
             continue
         found = _cheapest_chain(R, k, sources=range(k), targets=deficit)
         if found is None or found[0] >= -tol:
-            return assignee      # certificate conditions hold — exact optimum
+            return               # certificate conditions hold — exact optimum
         apply_moves(found[1], cyclic=False)
     raise RuntimeError("warm-start repair did not converge (pathological C?)")
 

@@ -100,6 +100,18 @@ class IncrementalScheduler:
         self._cap_deltas = np.zeros(self.k, dtype=np.int64)
         self.check = check
 
+        # cached repair bookkeeping: the lazy _ArcHeaps (and the row-aligned
+        # objective buffer they index) survive across reschedules while
+        # (ζ, e_max, a_max) are unchanged — a delta repair then skips the
+        # O(mk) heap rebuild.  Invalidated on ζ moves, normalization-maxima
+        # shifts, and buffer reallocation (_grow/_compact re-home rows).
+        self._arcs = None
+        self._arcs_key: tuple[float, float, float] | None = None
+        self._arcs_rows = 0          # _C_buf rows filled under _arcs_key
+        self._C_buf: np.ndarray | None = None
+        self.arc_reuse_count = 0     # observability for tests/benchmarks
+        self.arc_rebuild_count = 0
+
         # row-parallel buffers (grown by doubling, compacted when dead rows
         # dominate, so a long stream of reschedules over a sliding window
         # stays O(window) in memory and per-solve cost, not O(arrivals))
@@ -167,11 +179,18 @@ class IncrementalScheduler:
         return self.model_names[self.bin_of(query_id)]
 
     # ------------------------------------------------------------------
+    def _invalidate_arcs(self) -> None:
+        self._arcs = None
+        self._arcs_key = None
+        self._arcs_rows = 0
+        self._C_buf = None
+
     def _grow(self, n_new: int) -> None:
         need = self._m_total + n_new
         cap = self._E.shape[0]
         if need <= cap:
             return
+        self._invalidate_arcs()   # reallocation re-homes the rows arcs index
         new_cap = max(need, 2 * cap)
         m = self._m_total
         for name in ("_E", "_A", "_Rt"):
@@ -190,7 +209,9 @@ class IncrementalScheduler:
 
     def _compact(self) -> None:
         """Drop dead rows (triggered when they dominate, so a sliding-
-        window stream stays O(window), not O(total arrivals))."""
+        window stream stays O(window), not O(total arrivals)).  Also the
+        bound on stale heap entries: compaction rebuilds the arcs cache."""
+        self._invalidate_arcs()
         keep = self._active_rows()
         n = len(keep)
         for name in ("_E", "_A", "_Rt", "_ids", "_assignee"):
@@ -245,6 +266,16 @@ class IncrementalScheduler:
                 f"infeasible capacities {caps.tolist()} for {m} queries")
         return caps
 
+    def _objective_rows(self, rows: np.ndarray, e_max: float,
+                        a_max: float) -> np.ndarray:
+        """Eq. 2 objective rows under the given normalization maxima —
+        elementwise-identical to ``objective_matrix(normalized_costs(...))``
+        on the same rows (same divisions, same saxpy)."""
+        E, A = self._E[rows], self._A[rows]
+        e_hat = E / e_max if e_max > 0 else E
+        a_hat = A / a_max if a_max > 0 else A
+        return self.zeta * e_hat - (1.0 - self.zeta) * a_hat
+
     def _solve(self) -> Assignment:
         act = self._active_rows()
         m = len(act)
@@ -262,22 +293,59 @@ class IncrementalScheduler:
             energy_hat=E / e_max if e_max > 0 else E,
             accuracy_hat=A / a_max if a_max > 0 else A,
         )
-        C = objective_matrix(costs, self.zeta)
         caps = self._caps_for(m)
+        key = (self.zeta, e_max, a_max)
 
-        warm = self._assignee[act]
-        fresh = warm < 0
-        if fresh.all() or self._assignment is None:
-            assignee = scheduler._solve_capacitated_chains(C, caps)
+        if self._arcs is not None and key == self._arcs_key:
+            # same ζ and normalization maxima: every cached regret
+            # (C[i,v] − C[i,u]) is still exact for surviving rows, so the
+            # heaps extend instead of rebuilding — removed rows were
+            # retired to −1 (skipped lazily), added rows get their
+            # objective row appended and an argmin warm seed pushed.
+            self.arc_reuse_count += 1
+            lo, hi = self._arcs_rows, self._m_total
+            if hi > lo:
+                self._C_buf[lo:hi] = self._objective_rows(
+                    np.arange(lo, hi), e_max, a_max)
+                self._arcs_rows = hi
+            fresh_rows = act[self._assignee[act] < 0]
+            for r in fresh_rows:
+                j = int(self._C_buf[r].argmin())
+                self._assignee[r] = j
+                self._arcs.push(int(r), j)
+            C = self._C_buf[act]
+            scheduler._repair_live(
+                caps, self._assignee, self._arcs,
+                tol=1e-12 * max(1.0, float(np.abs(C).max())),
+                n_rows=self._m_total)
+            assignee = self._assignee[act].copy()
         else:
-            if fresh.any():  # new queries start at their unconstrained argmin
-                warm = warm.copy()
-                warm[fresh] = C[fresh].argmin(axis=1)
-            assignee = scheduler._repair_assignment(C, caps, warm)
+            # ζ or a normalization maximum moved (or buffers were
+            # re-homed): every objective entry changed — rebuild the
+            # row-aligned buffer and heaps, then warm-repair as before.
+            self.arc_rebuild_count += 1
+            C_act = objective_matrix(costs, self.zeta)
+            cap_rows = self._E.shape[0]
+            if self._C_buf is None or self._C_buf.shape[0] != cap_rows:
+                self._C_buf = np.empty((cap_rows, self.k))
+            self._C_buf[act] = C_act
+            fresh_rows = act[self._assignee[act] < 0]
+            if len(fresh_rows):  # new queries start at their argmin
+                self._assignee[fresh_rows] = (
+                    self._C_buf[fresh_rows].argmin(axis=1))
+            self._arcs = scheduler._ArcHeaps(
+                self._C_buf, self._assignee, self.k, n_rows=self._m_total)
+            self._arcs_key = key
+            self._arcs_rows = self._m_total
+            C = self._C_buf[act]
+            scheduler._repair_live(
+                caps, self._assignee, self._arcs,
+                tol=1e-12 * max(1.0, float(np.abs(C).max())),
+                n_rows=self._m_total)
+            assignee = self._assignee[act].copy()
         if self.check and not scheduler.capacitated_optimality_certificate(
                 C, assignee, caps):
             raise RuntimeError("optimality certificate failed after repair")
-        self._assignee[act] = assignee
         self._assignment = scheduler._evaluate(costs, assignee, self.zeta, C=C)
         return self._assignment
 
@@ -307,7 +375,9 @@ class IncrementalScheduler:
                 raise ValueError(f"capacity_deltas must have shape ({self.k},)")
             self._cap_deltas += d
         for rid in removed:
-            self._alive[self._live_row(int(rid))] = False
+            row = self._live_row(int(rid))
+            self._alive[row] = False
+            self._assignee[row] = -1   # retire: cached heaps skip −1 lazily
         if self._m_total > 256 and self.m_active < self._m_total // 2:
             self._compact()
         self._append(list(added))

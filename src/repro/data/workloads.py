@@ -52,6 +52,8 @@ def arrival_times(
     burstiness: float = 4.0,
     diurnal_amplitude: float = 0.8,
     diurnal_period_s: float = 600.0,
+    onoff_on_s: float = 30.0,
+    onoff_off_s: float = 120.0,
     seed: int = 0,
 ) -> np.ndarray:
     """Timestamps (seconds, ascending, starting near 0) for n requests.
@@ -63,6 +65,12 @@ def arrival_times(
     pattern="diurnal"  — nonhomogeneous Poisson via thinning with
                          rate(t) = rate_qps·(1 + A·sin(2πt/period)); the
                          mean rate over a full period is rate_qps.
+    pattern="onoff"    — square-wave traffic: Poisson bursts during
+                         onoff_on_s-second windows separated by
+                         onoff_off_s seconds of silence (mean rate over a
+                         full period is rate_qps).  The adversarial input
+                         for node power-gating: long idle gaps that invite
+                         gating, followed by fronts that force wakes.
     """
     if rate_qps <= 0:
         raise ValueError(f"rate_qps must be > 0, got {rate_qps}")
@@ -86,6 +94,16 @@ def arrival_times(
                 out[i] = t
                 i += 1
         return out
+    if pattern == "onoff":
+        on = float(onoff_on_s)
+        off = float(onoff_off_s)
+        if on <= 0 or off < 0:
+            raise ValueError("need onoff_on_s > 0 and onoff_off_s >= 0")
+        # draw a homogeneous Poisson stream in on-window time, then map
+        # on-time to wall time by inserting the off windows
+        lam = rate_qps * (on + off) / on
+        tau = np.cumsum(rng.exponential(1.0 / lam, n))
+        return tau + np.floor(tau / on) * off
     raise ValueError(f"unknown arrival pattern: {pattern!r}")
 
 

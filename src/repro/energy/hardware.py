@@ -13,6 +13,33 @@ Dynamic energy is split between compute and memory traffic:
 so a fully compute-bound kernel at peak FLOP/s draws peak_w, and a fully
 memory-bound kernel at peak bandwidth draws the same — the roofline power
 model used by POLCA-style studies.
+
+DVFS (per-phase frequency scaling)
+----------------------------------
+``AcceleratorSpec.at_frequency(s)`` returns the spec at core-clock scale
+s ∈ (0, 1] with the roofline moved per the standard DVFS laws:
+
+    peak_flops(s) = s · peak_flops            (compute rate ∝ core clock)
+    hbm_bw(s)     = (μ + (1 − μ)·s) · hbm_bw  (HBM clock is a separate
+                                               domain; μ = dvfs_bw_floor is
+                                               the bandwidth fraction kept
+                                               as s → 0, i.e. only the
+                                               on-chip fabric/L2 share of
+                                               the pipe follows the core)
+    dyn_w(s)      = s^α · dyn_w               (P ∝ f·V², V roughly ∝ f ⇒
+                                               α ≈ 3; measured GPU curves
+                                               sit nearer α ≈ 2.4 because
+                                               voltage floors flatten the
+                                               tail — dvfs_power_exp)
+    idle_w(s)     = idle_w                    (leakage, fans, HBM refresh)
+
+Compute-bound prefill therefore loses throughput ∝ 1/s but saves dynamic
+energy ∝ s^(α−1), while bandwidth-bound decode keeps most of its
+throughput (μ close to 1) and still takes the full s^α dynamic-power win —
+the opposite-payoffs-per-phase structure Fernandez et al. (arXiv:
+2504.17674) measure.  ``dvfs_scales`` is the discrete set of operating
+points a governor may pick from (real parts expose discrete P-states);
+``scale=1.0`` is always the last entry so "no DVFS" stays expressible.
 """
 
 from __future__ import annotations
@@ -20,6 +47,9 @@ from __future__ import annotations
 import dataclasses
 
 COMPUTE_SHARE = 0.6
+
+# default governor-visible operating points (fractions of the max core clock)
+DVFS_SCALES = (0.5, 0.6, 0.7, 0.8, 0.9, 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,10 +63,33 @@ class AcceleratorSpec:
     peak_w: float
     flops_efficiency: float = 0.55   # achievable fraction of peak (matmul)
     bw_efficiency: float = 0.8
+    # --- DVFS law (see module docstring) -------------------------------
+    dvfs_scales: tuple[float, ...] = DVFS_SCALES
+    dvfs_power_exp: float = 2.4      # dyn_w ∝ s^α
+    dvfs_bw_floor: float = 0.8       # hbm_bw fraction retained as s → 0
 
     @property
     def dyn_w(self) -> float:
         return self.peak_w - self.idle_w
+
+    def at_frequency(self, scale: float) -> "AcceleratorSpec":
+        """This accelerator at core-clock scale ∈ (0, 1]: peak_flops ∝ s,
+        hbm_bw partially coupled (μ + (1−μ)·s), dyn_w ∝ s^α, idle_w fixed.
+        FLOP/byte *counts* of a pass never change — only rates and power —
+        so the closed-form phase integrals stay exact at any point."""
+        if scale == 1.0:
+            return self
+        if not 0.0 < scale <= 1.0:
+            raise ValueError(f"frequency scale must be in (0, 1], got {scale}")
+        bw_frac = self.dvfs_bw_floor + (1.0 - self.dvfs_bw_floor) * scale
+        dyn = self.dyn_w * scale ** self.dvfs_power_exp
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}@{scale:g}x",
+            peak_flops=self.peak_flops * scale,
+            hbm_bw=self.hbm_bw * bw_frac,
+            peak_w=self.idle_w + dyn,
+        )
 
     @property
     def j_per_flop(self) -> float:

@@ -20,10 +20,21 @@ branch — O(#segments) instead of O(τout) Python-loop passes, and exact
 where the old midpoint-chunk loop was approximate.  The loop survives as
 `decode_cost_chunked` (chunk=1 is the exact per-step reference the closed
 form is tested against).  Phase costs are memoized per
-(context, steps, batch) so cluster simulations never re-integrate a
-repeated decode segment, and `measure_batch` vectorizes whole
-characterization grids per call (noise-stream-compatible with sequential
-`measure`).
+(context, steps, batch, frequency) so cluster simulations never
+re-integrate a repeated decode segment, and `measure_batch` vectorizes
+whole characterization grids per call (noise-stream-compatible with
+sequential `measure`).
+
+Per-phase DVFS: `prefill_cost`/`decode_cost` take `freq_scale=` — the
+phase is priced at `node.accel.at_frequency(s)` (scaled peak_flops /
+hbm_bw / dyn_w, fixed idle_w; FLOP/byte counts are frequency-invariant,
+so the same piecewise-polynomial closed forms apply at any operating
+point, with the roofline crossover re-solved under the scaled caps).
+`best_prefill_frequency`/`best_decode_frequency` pick the energy-minimal
+operating point analytically: one O(#segments) closed-form evaluation per
+allowed scale, argmin over `accel.dvfs_scales` of phase energy plus any
+time-proportional draw the caller charges per busy second (`extra_w`,
+e.g. the host serving power).  No per-step simulation anywhere.
 """
 
 from __future__ import annotations
@@ -134,17 +145,27 @@ class AnalyticLLMSimulator:
         n = min_accelerators(pbytes, node.accel)
         self.node = node.with_accelerators(n)
 
-        # phase-cost memos: repeated (context, steps, batch) segments are
-        # common in cluster sims (identical queries, completion-boundary
+        # phase-cost memos: repeated (context, steps, batch, freq) segments
+        # are common in cluster sims (identical queries, completion-boundary
         # batching) and must not re-integrate.  LRU-bounded (move-to-end on
         # hit, evict-oldest on insert) so long campaigns keep hot keys.
         self._prefill_memo: dict[tuple, tuple[float, float]] = {}
         self._decode_memo: dict[tuple, tuple[float, float]] = {}
         self._memo_max_entries = _MEMO_MAX_ENTRIES
+        # per-operating-point accelerator specs (freq_scale -> spec)
+        self._accel_at: dict[float, object] = {1.0: self.node.accel}
 
     # ------------------------------------------------------------------
-    def _pass_time_energy(self, pc: costs_lib.PassCosts) -> tuple[float, float]:
-        a = self.node.accel
+    def _accel(self, scale: float):
+        spec = self._accel_at.get(scale)
+        if spec is None:
+            spec = self.node.accel.at_frequency(scale)
+            self._accel_at[scale] = spec
+        return spec
+
+    def _pass_time_energy(self, pc: costs_lib.PassCosts,
+                          scale: float = 1.0) -> tuple[float, float]:
+        a = self._accel(scale)
         n = self.node.n_accel
         t_c = pc.flops / (n * a.peak_flops * a.flops_efficiency)
         t_m = pc.hbm_bytes / (n * a.hbm_bw * a.bw_efficiency)
@@ -176,15 +197,16 @@ class AnalyticLLMSimulator:
         h = self.node.host
         return h.idle_w / 4.0 + h.active_w_per_core * h.serving_cores
 
-    def prefill_cost(self, tau_in: int, batch: int | None = None
-                     ) -> tuple[float, float]:
-        """(seconds, accelerator joules) of one prefill pass over the prompt."""
+    def prefill_cost(self, tau_in: int, batch: int | None = None,
+                     *, freq_scale: float = 1.0) -> tuple[float, float]:
+        """(seconds, accelerator joules) of one prefill pass over the prompt,
+        priced at core-clock scale `freq_scale` (per-phase DVFS)."""
         B = self.batch if batch is None else batch
-        key = (tau_in, B)
+        key = (tau_in, B, freq_scale)
         out = _lru_get(self._prefill_memo, key)
         if out is None:
             pc = costs_lib.pass_costs(self.cfg, tau_in, tau_in, B, decode=False)
-            out = self._pass_time_energy(pc)
+            out = self._pass_time_energy(pc, freq_scale)
             _lru_put(self._prefill_memo, key, out, self._memo_max_entries)
         return out
 
@@ -199,24 +221,27 @@ class AnalyticLLMSimulator:
     # --- decode: exact closed-form integration ------------------------
 
     def decode_cost(self, ctx0: float, n_steps: int,
-                    batch: int | None = None) -> tuple[float, float]:
+                    batch: int | None = None,
+                    *, freq_scale: float = 1.0) -> tuple[float, float]:
         """(seconds, accelerator joules) of `n_steps` decode steps starting
-        at absolute context length `ctx0` (= τin + tokens already generated).
+        at absolute context length `ctx0` (= τin + tokens already generated),
+        priced at core-clock scale `freq_scale` (per-phase DVFS).
 
         Exact: step t attends context L_t = ctx0 + t + ½ (the convention
         the per-step reference loop uses); the per-step cost is piecewise
         polynomial in L_t, so the phase total is evaluated in closed form
-        via power sums per roofline branch.  Exactness makes the integral
-        additive — decode_cost(c, a) + decode_cost(c+a, b) ==
+        via power sums per roofline branch (the compute/memory crossover is
+        re-solved under the frequency-scaled caps).  Exactness makes the
+        integral additive — decode_cost(c, a) + decode_cost(c+a, b) ==
         decode_cost(c, a+b) — which is what lets the cluster simulator's
         segment-split decode conserve energy against simulate()."""
         B = self.batch if batch is None else batch
         if n_steps <= 0:
             return 0.0, 0.0
-        key = (ctx0, n_steps, B)
+        key = (ctx0, n_steps, B, freq_scale)
         out = _lru_get(self._decode_memo, key)
         if out is None:
-            out = self._decode_closed_form(ctx0, n_steps, B)
+            out = self._decode_closed_form(ctx0, n_steps, B, freq_scale)
             _lru_put(self._decode_memo, key, out, self._memo_max_entries)
         return out
 
@@ -226,9 +251,9 @@ class AnalyticLLMSimulator:
         # paper mode: re-run the full prefix for every generated token
         return costs_lib.pass_costs(self.cfg, L, L, B, decode=False)
 
-    def _decode_closed_form(self, ctx0: float, n_steps: int,
-                            B: float) -> tuple[float, float]:
-        a = self.node.accel
+    def _decode_closed_form(self, ctx0: float, n_steps: int, B: float,
+                            scale: float = 1.0) -> tuple[float, float]:
+        a = self._accel(scale)
         n = self.node.n_accel
         fcap = n * a.peak_flops * a.flops_efficiency
         bcap = n * a.hbm_bw * a.bw_efficiency
@@ -237,7 +262,8 @@ class AnalyticLLMSimulator:
         if n_steps <= 4:                       # tiny phases: sum directly
             t_dec = e_dec = 0.0
             for t in range(n_steps):
-                t1, e1 = self._pass_time_energy(self._step_pass(base + t, B))
+                t1, e1 = self._pass_time_energy(self._step_pass(base + t, B),
+                                                scale)
                 t_dec += t1
                 e_dec += e1
             return t_dec, e_dec
@@ -302,7 +328,8 @@ class AnalyticLLMSimulator:
 
     def decode_cost_chunked(self, ctx0: float, n_steps: int,
                             batch: int | None = None, *,
-                            chunk: int | None = None) -> tuple[float, float]:
+                            chunk: int | None = None,
+                            freq_scale: float = 1.0) -> tuple[float, float]:
         """The legacy midpoint-chunk integration loop, kept as the reference
         the closed form is validated against: chunk=1 evaluates every step
         at its true context L = ctx0 + t + ½ (exact; what `decode_cost`
@@ -315,10 +342,50 @@ class AnalyticLLMSimulator:
         for t0 in range(0, n_steps, step):
             c = min(step, n_steps - t0)
             L = ctx0 + t0 + c / 2.0
-            t1, e1 = self._pass_time_energy(self._step_pass(L, B))
+            t1, e1 = self._pass_time_energy(self._step_pass(L, B), freq_scale)
             t_dec += t1 * c
             e_dec += e1 * c
         return t_dec, e_dec
+
+    # --- per-phase DVFS governor --------------------------------------
+
+    def _best_frequency(self, cost_at, extra_w: float
+                        ) -> tuple[float, float, float]:
+        """argmin over the accelerator's operating points of
+        phase_energy + extra_w · phase_time, each candidate priced by one
+        closed-form evaluation.  Ties break toward the higher clock (same
+        energy, less latency).  Returns (scale, seconds, accel joules)."""
+        best = None
+        for s in self.node.accel.dvfs_scales:
+            t, e = cost_at(s)
+            tot = e + extra_w * t
+            if best is None or tot < best[0] - 1e-12 * max(1.0, abs(best[0])):
+                best = (tot, s, t, e)
+            elif abs(tot - best[0]) <= 1e-12 * max(1.0, abs(best[0])) \
+                    and s > best[1]:
+                best = (tot, s, t, e)
+        return best[1], best[2], best[3]
+
+    def best_prefill_frequency(self, tau_in: int, batch: int | None = None,
+                               *, extra_w: float = 0.0
+                               ) -> tuple[float, float, float]:
+        """Energy-minimal operating point for one prefill pass:
+        (freq_scale, seconds, accelerator joules).  `extra_w` is any
+        time-proportional power the caller charges per busy second (host
+        serving draw) — it belongs in the argmin, else the governor
+        underclocks into latency that costs more than it saves."""
+        return self._best_frequency(
+            lambda s: self.prefill_cost(tau_in, batch, freq_scale=s), extra_w)
+
+    def best_decode_frequency(self, ctx0: float, n_steps: int,
+                              batch: int | None = None,
+                              *, extra_w: float = 0.0
+                              ) -> tuple[float, float, float]:
+        """Energy-minimal operating point for a decode segment:
+        (freq_scale, seconds, accelerator joules)."""
+        return self._best_frequency(
+            lambda s: self.decode_cost(ctx0, n_steps, batch, freq_scale=s),
+            extra_w)
 
     # ------------------------------------------------------------------
 

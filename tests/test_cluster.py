@@ -300,6 +300,54 @@ class TestZetaReplanPolicy:
             # warmup + window effects leave slack; shares must still bind
             assert counts[name] >= 0.2 * m, (name, counts)
 
+    def test_enforces_replica_shares_under_bursty_arrivals(self):
+        """γ-share enforcement must survive clustered arrivals: the warm
+        re-planner's sliding window sees whole bursts at once, which is
+        exactly when the pointwise argmin collapses hardest."""
+        from collections import Counter
+        from repro.cluster import ZetaReplanPolicy
+        trace = bursty_trace(240, 6.0, burstiness=8.0, seed=13)
+        rep = simulate_cluster(trace, [b() for b in builders()],
+                               ZetaReplanPolicy(window=120), zeta=0.5)
+        assert len(rep.records) == len(trace)
+        counts = Counter(r.model for r in rep.records)
+        for name in FLEET:
+            assert counts[name] >= 0.2 * len(trace), (name, counts)
+
+    def test_enforces_replica_shares_under_diurnal_arrivals(self):
+        """Same bind under rate modulation (thinning): slack periods must
+        not let the window drain into a single-model plan."""
+        from collections import Counter
+        from repro.cluster import ZetaReplanPolicy
+        trace = diurnal_trace(240, 6.0, amplitude=0.9, period_s=30.0,
+                              seed=17)
+        rep = simulate_cluster(trace, [b() for b in builders()],
+                               ZetaReplanPolicy(window=120), zeta=0.5)
+        assert len(rep.records) == len(trace)
+        counts = Counter(r.model for r in rep.records)
+        for name in FLEET:
+            assert counts[name] >= 0.2 * len(trace), (name, counts)
+
+    def test_replica_shares_hold_with_power_gating_churn(self):
+        """γ-shares and energy conservation together on a trace that
+        forces gate/wake churn mid-plan."""
+        from collections import Counter
+        from repro.cluster import (ReactiveIdlePolicy, ZetaReplanPolicy,
+                                   onoff_trace)
+        trace = onoff_trace(180, 0.8, on_s=10.0, off_s=60.0, seed=23)
+        rep = simulate_cluster(
+            trace, [b() for b in builders()], ZetaReplanPolicy(window=90),
+            zeta=0.5,
+            autoscaler=ReactiveIdlePolicy(idle_timeout_s=5.0))
+        assert len(rep.records) == len(trace)
+        counts = Counter(r.model for r in rep.records)
+        for name in FLEET:
+            assert counts[name] >= 0.15 * len(trace), (name, counts)
+        assert rep.total_gates > 0 and rep.total_wakes > 0
+        for s in rep.node_stats:
+            assert s.accounted_s == pytest.approx(s.horizon_s, rel=1e-9,
+                                                  abs=1e-9)
+
     def test_explicit_gamma_and_replan_period(self):
         rep, trace = self._run(window=80, replan_every=16,
                                gamma=(0.1, 0.2, 0.7))

@@ -67,8 +67,8 @@ class TestPassCosts:
         cfg = get_config("mamba2-130m")
         assert kv_bytes_per_token(cfg) == 0.0
         # decode cost flat in context position
-        c1 = pass_costs(cfg, 1, 1024, 32)
-        c2 = pass_costs(cfg, 1, 65536, 32)
+        c1 = pass_costs(cfg, 1, 1024, 32, decode=True)
+        c2 = pass_costs(cfg, 1, 65536, 32, decode=True)
         assert c1.hbm_bytes == pytest.approx(c2.hbm_bytes)
 
     def test_mla_cache_much_smaller_than_gqa(self):
@@ -80,15 +80,15 @@ class TestPassCosts:
 
     def test_window_bounds_decode_reads(self):
         cfg = get_config("mistral-7b")  # window 4096
-        near = pass_costs(cfg, 1, 4096, 32)
-        far = pass_costs(cfg, 1, 262144, 32)
+        near = pass_costs(cfg, 1, 4096, 32, decode=True)
+        far = pass_costs(cfg, 1, 262144, 32, decode=True)
         assert far.hbm_bytes == pytest.approx(near.hbm_bytes)
 
     def test_moe_decode_touches_fewer_weights(self):
         cfg = get_config("mixtral-8x7b")
         dense_cfg = get_config("llama2-70b")
-        moe = pass_costs(cfg, 1, 128, 1)       # single-token decode
-        dense = pass_costs(dense_cfg, 1, 128, 1)
+        moe = pass_costs(cfg, 1, 128, 1, decode=True)   # single-token decode
+        dense = pass_costs(dense_cfg, 1, 128, 1, decode=True)
         assert moe.hbm_bytes < dense.hbm_bytes
 
     def test_min_accelerators(self):
@@ -110,11 +110,11 @@ class TestMemoLRU:
         sim = self._sim(4)
         for ctx0 in (10, 20, 30, 40):      # fill to the bound
             sim.decode_cost(ctx0, 8)
-        hot = (10, 8, 2)
+        hot = (10, 8, 2, 1.0)
         assert sim.decode_cost(10, 8)      # hit -> move-to-end
         sim.decode_cost(50, 8)             # insert -> evicts LRU (ctx0=20)
         assert hot in sim._decode_memo
-        assert (20, 8, 2) not in sim._decode_memo
+        assert (20, 8, 2, 1.0) not in sim._decode_memo
         assert len(sim._decode_memo) == 4  # bound respected, not cleared
 
     def test_prefill_memo_same_policy(self):
@@ -123,8 +123,8 @@ class TestMemoLRU:
             sim.prefill_cost(tin)
         sim.prefill_cost(8)                # refresh the oldest
         sim.prefill_cost(64)
-        assert (8, 2) in sim._prefill_memo
-        assert (16, 2) not in sim._prefill_memo
+        assert (8, 2, 1.0) in sim._prefill_memo
+        assert (16, 2, 1.0) not in sim._prefill_memo
         assert len(sim._prefill_memo) == 3
 
     def test_eviction_does_not_change_values(self):

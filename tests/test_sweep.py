@@ -138,6 +138,49 @@ class TestIncrementalReschedule:
             assert (asg.counts() <= caps).all()
             assert asg.counts().sum() == inc.m_active
 
+    def test_50_same_zeta_delta_streams_reuse_arc_heaps(self):
+        """The cached-_ArcHeaps regression (PR 4): streams of same-ζ delta
+        repairs must reuse the lazy heaps (no rebuild while the
+        normalization maxima hold), invalidate when a delta shifts a
+        maximum, and stay exact vs a cold solve at every step."""
+        n_reused = 0
+        for t in range(50):
+            rng = np.random.default_rng(9500 + t)
+            profs, qs, zeta, gamma = random_instance(9500 + t, m_max=120)
+            inc = IncrementalScheduler(profs, qs, zeta, gamma, check=True)
+            for _ in range(4):
+                n_add = int(rng.integers(0, 6))
+                n_rem = int(rng.integers(0, min(6, inc.m_active - 1)))
+                added = [(int(a), int(b)) for a, b in
+                         zip(rng.integers(1, 4096, n_add),
+                             rng.integers(1, 4096, n_add))]
+                removed = list(rng.choice(inc.active_ids, size=n_rem,
+                                          replace=False))
+                asg = inc.reschedule(added=added, removed=removed)
+                cold = scheduler.schedule_capacitated(
+                    profs, inc.active_queries(), zeta, gamma)
+                assert_matches_cold(asg, cold)
+            n_reused += inc.arc_reuse_count
+            # every solve is either a reuse or a rebuild, never neither
+            assert inc.arc_reuse_count + inc.arc_rebuild_count == 5
+        # same-distribution deltas rarely shift the maxima: the cache must
+        # actually fire across the suite, not just exist
+        assert n_reused > 100
+
+    def test_arc_cache_invalidates_on_zeta_and_maxima_shift(self):
+        profs, qs, zeta, gamma = random_instance(31, m_max=80)
+        inc = IncrementalScheduler(profs, qs, 0.4, gamma, check=True)
+        assert (inc.arc_reuse_count, inc.arc_rebuild_count) == (0, 1)
+        inc.reschedule(zeta=0.6)             # ζ move: rebuild
+        assert inc.arc_rebuild_count == 2
+        inc.reschedule(added=[(8, 8)])       # tiny query: maxima hold
+        assert inc.arc_reuse_count == 1
+        inc.reschedule(added=[(500_000, 500_000)])   # new max: rebuild
+        assert inc.arc_rebuild_count == 3
+        cold = scheduler.schedule_capacitated(profs, inc.active_queries(),
+                                              0.6, gamma)
+        assert_matches_cold(inc.assignment, cold)
+
     def test_capacity_deltas_accumulate_and_match_cold(self):
         profs, qs, zeta, gamma = random_instance(77, m_max=120)
         k = len(profs)
