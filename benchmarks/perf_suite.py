@@ -9,8 +9,11 @@ Usage (from the repo root):
         solver vs _MinCostFlow, batch vs scalar equivalence, warm-start
         reschedule vs cold solve, jit cost kernel vs the numpy closed
         form, DVFS governor vs a brute-force frequency grid, gated-sim
-        busy/idle/gated/transition energy conservation); no timing
-        assertions, no JSON.  This is what `scripts/test.sh perf` runs.
+        busy/idle/gated/transition energy conservation, and decode-
+        boundary preemption: split additivity of the decode integral plus
+        end-to-end conservation + the replica-oracle bound on a
+        preempting multi-replica run); no timing assertions, no JSON.
+        This is what `scripts/test.sh perf` runs.
 
     --out PATH            where to write the JSON (default <repo>/BENCH_core.json)
     --sizes A,B,C         workload sizes to sweep (default 1000,10000,100000)
@@ -332,6 +335,107 @@ def gate_dvfs_closed_form(failures: list[str]) -> dict:
             "choices_checked": n_checked}
 
 
+def gate_preemption_split(failures: list[str]) -> dict:
+    """Decode-boundary preemption must conserve energy exactly.
+
+    (a) The closed-form decode integral is additive at any split point:
+        decode_cost(c, a) + decode_cost(c+a, b) == decode_cost(c, a+b)
+        to 1e-9 rel, across model families, both KV modes and a scaled
+        operating point — this is the identity that makes a preempted
+        segment's two halves sum to the unpreempted cost.
+    (b) A preempting multi-replica cluster run conserves end to end: all
+        requests served, preemptions actually fire and every preemption
+        has a matching resume, the four buckets still partition each
+        node's horizon, per-request attributed energies sum to the busy
+        bucket, and the replica-aware oracle replay is never worse than
+        the online policy on the Eq. 2 objective."""
+    worst = 0.0
+    splits = [(64, 300, 1), (64, 300, 150), (64, 300, 299),
+              (1000, 64, 20), (8, 2048, 777)]
+    for name in ("llama2-7b", "mixtral-8x7b", "mamba2-130m"):
+        cfg = GATE_CONFIGS[name]()
+        for kv in (True, False):
+            sim = AnalyticLLMSimulator(cfg, batch=4, kv_cache=kv,
+                                       noise_sigma=0.0)
+            for s in (1.0, sim.node.accel.dvfs_scales[0]):
+                for ctx0, n, cut in splits:
+                    t, e = sim.decode_cost(ctx0, n, freq_scale=s)
+                    t1, e1 = sim.decode_cost(ctx0, cut, freq_scale=s)
+                    t2, e2 = sim.decode_cost(ctx0 + cut, n - cut,
+                                             freq_scale=s)
+                    rel = max(abs(t1 + t2 - t) / max(abs(t), 1e-300),
+                              abs(e1 + e2 - e) / max(abs(e), 1e-300))
+                    worst = max(worst, rel)
+                    if rel > 1e-9:
+                        failures.append(
+                            f"preemption split not additive: {name} kv={kv} "
+                            f"s={s} ctx0={ctx0} n={n} cut={cut} "
+                            f"rel={rel:.3e}")
+
+    from repro.cluster import (ClusterNode, ReplicaEnergyPolicy,
+                               ReplicaOraclePolicy, SLOPreemptionPolicy,
+                               poisson_trace, simulate_cluster)
+    from repro.configs import TABLE1
+    from repro.core.energy_model import fit_profile
+    from repro.energy import SWING_NODE
+
+    fleet = ("llama2-7b", "llama2-13b")
+    profiles = {}
+    for name in fleet:
+        sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                                   kv_cache=True, noise_sigma=0.0)
+        pts = [(8, 8), (64, 64), (256, 128), (512, 512), (128, 32)]
+        pbs = [sim.simulate(a, b) for a, b in pts]
+        profiles[name] = fit_profile(
+            name, TABLE1[name]["a_k"],
+            [p[0] for p in pts], [p[1] for p in pts],
+            [pb.energy_j for pb in pbs], [pb.runtime_s for pb in pbs])
+
+    def nodes():   # two replicas per model, tiny batches force contention
+        return [ClusterNode(2 * i + j, PAPER_ZOO[name], profiles[name],
+                            SWING_NODE, max_batch=2)
+                for i, name in enumerate(fleet) for j in (0, 1)]
+
+    trace = poisson_trace(60, 6.0, seed=3)
+    preempter = SLOPreemptionPolicy(slowdown_slo=1.2, min_remaining=2)
+    rep = simulate_cluster(trace, nodes(), ReplicaEnergyPolicy(), zeta=0.5,
+                           preempter=preempter)
+    oracle = simulate_cluster(
+        trace, nodes(), ReplicaOraclePolicy(), zeta=0.5,
+        preempter=SLOPreemptionPolicy(slowdown_slo=1.2, min_remaining=2))
+    if len(rep.records) != len(trace):
+        failures.append("preemption gate lost requests")
+    if rep.total_preemptions == 0:
+        failures.append("preemption gate saw no preemptions")
+    if rep.total_preemptions != rep.total_resumes:
+        failures.append(
+            f"preemptions ({rep.total_preemptions}) != resumes "
+            f"({rep.total_resumes})")
+    worst_e = worst_t = 0.0
+    for s in rep.node_stats:
+        e_sum = (s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
+                 + s.transition_energy_j)
+        worst_e = max(worst_e, abs(e_sum - s.total_energy_j)
+                      / max(1.0, s.total_energy_j))
+        worst_t = max(worst_t, abs(s.accounted_s - s.horizon_s)
+                      / max(1.0, s.horizon_s))
+    attributed = sum(r.energy_j for r in rep.records)
+    busy = sum(s.busy_energy_j for s in rep.node_stats)
+    worst_e = max(worst_e, abs(attributed - busy) / max(1.0, busy))
+    if worst_e > 1e-9 or worst_t > 1e-9:
+        failures.append(
+            f"preempting run violates conservation: energy rel "
+            f"{worst_e:.3e}, time rel {worst_t:.3e}")
+    if oracle.objective > rep.objective + 1e-9:
+        failures.append(
+            f"replica oracle beaten on objective: {oracle.objective!r} > "
+            f"{rep.objective!r}")
+    return {"worst_split_rel": worst, "worst_energy_rel": worst_e,
+            "worst_time_rel": worst_t, "tolerance": 1e-9,
+            "preemptions": rep.total_preemptions,
+            "resumes": rep.total_resumes}
+
+
 def gate_power_conservation(failures: list[str]) -> dict:
     """Gated-sim energy accounting: the busy/idle/gated/transition buckets
     must sum to the total to 1e-9 and partition every node's horizon —
@@ -403,6 +507,7 @@ def run_gates(quick: bool) -> tuple[dict, list[str]]:
         "jit_cost_kernel": gate_jit_cost_kernel(failures),
         "dvfs_closed_form": gate_dvfs_closed_form(failures),
         "power_conservation": gate_power_conservation(failures),
+        "preemption_split": gate_preemption_split(failures),
     }
     return out, failures
 

@@ -13,10 +13,13 @@
 #                            warm-start reschedule vs cold solve, jitted
 #                            batch cost kernel vs the numpy closed form,
 #                            DVFS closed-form frequency choice vs a brute-
-#                            force frequency grid, and gated-sim energy
+#                            force frequency grid, gated-sim energy
 #                            conservation: busy+idle+gated+transition ==
-#                            total to 1e-9); fails on disagreement, never
-#                            on wall-clock
+#                            total to 1e-9, and decode-boundary preemption:
+#                            split additivity of the decode integral plus
+#                            end-to-end conservation and the replica-oracle
+#                            bound on a preempting multi-replica run);
+#                            fails on disagreement, never on wall-clock
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

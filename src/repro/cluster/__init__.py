@@ -5,7 +5,13 @@ energy-optimal scheduling over a known workload.  This package serves the
 same workloads as *streaming traffic* against a heterogeneous fleet and
 quantifies the offline→online optimality gap — and, since PR 4, manages
 the fleet's *power*: node power-gating under pluggable autoscalers,
-per-phase DVFS, and non-oracle τout prediction.
+per-phase DVFS, and non-oracle τout prediction.  PR 5 adds the last open
+lever from PR 1's list: first-class *multi-replica models* (several nodes
+hosting one model, with a replica registry, a wake-cost-aware replica-set
+router, per-model replica-count autoscaling, and a replica-aware offline
+oracle) and *decode-boundary preemption* (suspend a decode at its next
+step boundary with the KV position intact, resume for free when a slot
+opens — energy split exactly by the closed-form decode integral).
 
 Module map (the event model, and how the pieces plug together):
 
@@ -36,21 +42,37 @@ Module map (the event model, and how the pieces plug together):
                     (Eq. 2 with causal running normalizers), zeta_replan
                     (the γ-capacitated partition maintained online over a
                     sliding window via core.sweep.IncrementalScheduler's
-                    warm-start reschedule), and offline_oracle (replays
+                    warm-start reschedule), replica_energy (the replica-
+                    set router: wake-cost-aware Eq. 2 argmin over nodes —
+                    a gated replica's wake energy, amortized over an
+                    expected burst, is priced into the objective instead
+                    of only breaking ties), offline_oracle (replays
                     core.scheduler.schedule() over the full trace — the
-                    lower bound on the Eq. 2 objective).  The energy-aware
-                    policies accept tau_out_predictor= to downgrade their
-                    information model from oracle to learned.
-                    New policies subclass RoutingPolicy and implement
-                    select(req, nodes, now); attach() gives them the fleet
-                    and (for oracle-grade information models) the trace;
-                    observe_completion() is their causal feedback channel.
-    sim.py        — the discrete-event loop.  Five event kinds: arrivals,
-                    node phase completions, wake/gate completions, and
-                    autoscaler idle timers, processed in (time, seq) order
-                    so ties are deterministic.  compare_policies() reruns
-                    a trace over fresh fleets (and fresh autoscalers) for
-                    an apples-to-apples policy table.
+                    lower bound on the Eq. 2 objective), and
+                    replica_oracle (schedule_replicated replay: the same
+                    bound, committed to per-node replica placement).
+                    Preemption policies live here too: SLOPreemptionPolicy
+                    evicts the lowest-ζ-value active decode when the
+                    higher-value queue-head request (the one the freed
+                    slot actually admits) would miss its slowdown SLO —
+                    causally, under an optional tau_out_predictor.  The
+                    energy-aware policies accept tau_out_predictor= to
+                    downgrade their information model from oracle to
+                    learned.  New policies subclass RoutingPolicy and
+                    implement select(req, nodes, now); attach() gives them
+                    the fleet and (for oracle-grade information models)
+                    the trace; observe_completion() is their causal
+                    feedback channel.
+    sim.py        — the discrete-event loop.  Six event kinds: arrivals,
+                    node phase completions, preemption settlements,
+                    wake/gate completions, and autoscaler idle timers,
+                    processed in (time, seq) order so ties are
+                    deterministic; phase-shaped events carry the node's
+                    phase epoch so a preempted segment's stale end event
+                    is dropped.  Builds the per-model replica registry
+                    (replica_registry).  compare_policies() reruns a trace
+                    over fresh fleets (and fresh autoscalers/preempters)
+                    for an apples-to-apples policy table.
     metrics.py    — ClusterReport: the busy/idle/gated/transition energy
                     split (the buckets partition each node's horizon —
                     gated time is never double-charged as idle — and sum
@@ -67,6 +89,24 @@ Power-state lifecycle (driven by ClusterNode, timed by sim.py)::
        │ wake done         │ wake done (no queued work)          v
       (work waiting)      WAKING <─────────────────────────── GATED
                             on-demand (routed request) or pre-wake
+
+Request lifecycle (PREEMPTED/RESUMING added by the preemption layer)::
+
+              routed        joiner prefill          last token
+    WAITING ──────────> QUEUED ─────────> DECODING ──────────> DONE
+                                           │    ^
+                   preempter picks victim; │    │ RESUMING: rejoins the
+                   segment cut at the next │    │ active set at a phase
+                   decode step boundary    v    │ start with a free slot
+                                          PREEMPTED (suspended: KV
+                                           position intact, zero-cost
+                                           resume — never re-prefilled)
+
+    A preempted request keeps everything it has generated; the truncated
+    decode segment is charged for exactly the steps it ran (the closed-
+    form integral split at the boundary — the two halves sum to the
+    unpreempted decode_cost to 1e-9), and the slot it frees admits the
+    queue-head request the preemption policy cut it for.
 
 DVFS operating-point semantics: an AcceleratorSpec exposes discrete
 `dvfs_scales`; at scale s, peak_flops ∝ s, hbm_bw keeps its `dvfs_bw_floor`
@@ -97,17 +137,23 @@ from repro.cluster.policies import (  # noqa: F401
     GreedyEnergyPolicy,
     LeastLoadedPolicy,
     OfflineOraclePolicy,
+    PreemptionPolicy,
     RandomPolicy,
+    ReplicaEnergyPolicy,
+    ReplicaOraclePolicy,
     RoundRobinPolicy,
     RoutingPolicy,
+    SLOPreemptionPolicy,
     ZetaOnlinePolicy,
     ZetaReplanPolicy,
+    replica_registry,
 )
 from repro.cluster.power import (  # noqa: F401
     AutoscalePolicy,
     PowerConfig,
     PredictiveRatePolicy,
     ReactiveIdlePolicy,
+    ReplicaRatePolicy,
 )
 from repro.cluster.predictors import TauOutPredictor  # noqa: F401
 from repro.cluster.sim import compare_policies, fresh_nodes, simulate_cluster  # noqa: F401

@@ -27,6 +27,17 @@ from typing import Sequence
 import numpy as np
 
 
+def replica_registry(nodes: Sequence) -> dict[str, tuple[int, ...]]:
+    """Per-model replica registry: model name → node ids hosting it, in
+    node order (the order `core.scheduler.schedule_replicated` flattens
+    replicas in).  The single grouping rule the routers, the replica
+    oracle, the autoscalers, and the sim loop all size against."""
+    reg: dict[str, list[int]] = {}
+    for n in nodes:
+        reg.setdefault(n.profile.name, []).append(n.node_id)
+    return {name: tuple(nids) for name, nids in reg.items()}
+
+
 @dataclasses.dataclass(frozen=True)
 class RequestRecord:
     request_id: int
@@ -39,6 +50,7 @@ class RequestRecord:
     finish_s: float
     energy_j: float             # attributed busy-energy share
     isolated_runtime_s: float   # uncontended batch-1 service time
+    preemptions: int = 0        # suspend/resume round-trips en route
 
     @property
     def latency_s(self) -> float:
@@ -73,6 +85,9 @@ class NodeStats:
     horizon_s: float = 0.0      # busy+idle+gated+transition == horizon
     n_wakes: int = 0
     n_gates: int = 0
+    # --- preemption counters (zero when no preempter is installed) ----
+    n_preemptions: int = 0
+    n_resumes: int = 0
 
     @property
     def total_energy_j(self) -> float:
@@ -93,6 +108,8 @@ class ClusterReport:
     makespan_s: float
     objective: float            # Eq. 2 value of the realized assignment
     predicted_energy_j: float   # Σ e_K(q) under the fitted profiles
+    # model name -> node ids hosting a replica (the sim's replica registry)
+    replicas: tuple[tuple[str, tuple[int, ...]], ...] = ()
 
     # --- totals -----------------------------------------------------------
     @property
@@ -123,6 +140,18 @@ class ClusterReport:
     @property
     def total_gates(self) -> int:
         return sum(s.n_gates for s in self.node_stats)
+
+    @property
+    def total_preemptions(self) -> int:
+        return sum(s.n_preemptions for s in self.node_stats)
+
+    @property
+    def total_resumes(self) -> int:
+        return sum(s.n_resumes for s in self.node_stats)
+
+    def replica_counts(self) -> dict[str, int]:
+        """Replicas hosted per model (from the sim's replica registry)."""
+        return {name: len(nids) for name, nids in self.replicas}
 
     @property
     def total_tokens(self) -> int:
@@ -183,6 +212,9 @@ class ClusterReport:
             power = (f"gated={self.total_gated_energy_j:.0f} "
                      f"trans={self.total_transition_energy_j:.0f} "
                      f"wakes={self.total_wakes} ")
+        if self.total_preemptions:
+            power += (f"preempt={self.total_preemptions} "
+                      f"resume={self.total_resumes} ")
         return (f"{self.policy:>15s}: E={self.total_energy_j:12.0f}J "
                 f"(busy={self.total_busy_energy_j:.0f} idle={self.total_idle_energy_j:.0f}) "
                 f"{power}"
@@ -215,5 +247,7 @@ def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
             horizon_s=n.horizon_s,
             n_wakes=n.n_wakes,
             n_gates=n.n_gates,
+            n_preemptions=getattr(n, "n_preemptions", 0),
+            n_resumes=getattr(n, "n_resumes", 0),
         ))
     return tuple(out)

@@ -35,6 +35,21 @@ draw included as `extra_w`), so compute-bound prefills run near max clock
 while bandwidth-bound decode segments underclock — the per-phase split of
 Fernandez et al.  `freq_scale=` pins a fixed operating point instead
 (the fixed-frequency baseline fig4 compares against).
+
+Decode-boundary preemption (`preempt_decode`): a running decode segment
+can be cut at the *next step boundary* after the request instant — the
+in-flight token finishes, nothing re-runs.  The truncated segment is
+charged via the same closed-form integral as the full one, split at the
+boundary: because the integral is exactly additive in the step count
+(decode_cost(c, a) + decode_cost(c+a, b) == decode_cost(c, a+b)), the
+two halves of a preempted decode sum to the unpreempted `decode_cost` to
+1e-9 — the perf-suite `preemption_split` gate.  The evicted member keeps
+its KV position (`_InFlight.generated`) in the node's `suspended` list
+and later *resumes* by rejoining the active set at a phase start for
+free: no re-prefill, the Fernandez-et-al observation that decode
+interruption is cheap while prefill re-work is not.  Decode segments are
+charged when they settle (segment end or preemption boundary), never up
+front, so a truncated segment is only ever charged once.
 """
 
 from __future__ import annotations
@@ -58,7 +73,7 @@ from repro.cluster.power import (
 from repro.cluster.trace import TracedRequest
 
 # event hints returned to the sim loop: (kind, absolute time)
-_PHASE, _WAKE, _GATE = "phase", "wake", "gate"
+_PHASE, _WAKE, _GATE, _PREEMPT = "phase", "wake", "gate", "preempt"
 
 
 @dataclasses.dataclass
@@ -67,6 +82,7 @@ class _InFlight:
     start_s: float              # first service (prefill start)
     generated: int = 0          # decode tokens produced so far
     energy_j: float = 0.0       # attributed share of phase energy
+    preemptions: int = 0        # times this request was suspended
 
     @property
     def remaining(self) -> int:
@@ -84,6 +100,7 @@ class Completion:
     finish_s: float
     energy_j: float             # attributed accelerator+host joules
     isolated_runtime_s: float   # batch-1 uncontended service time (slowdown SLO)
+    preemptions: int = 0        # suspend/resume round-trips en route
 
 
 class ClusterNode:
@@ -122,9 +139,20 @@ class ClusterNode:
 
         self.waiting: deque[TracedRequest] = deque()
         self.active: list[_InFlight] = []
+        self.suspended: deque[_InFlight] = deque()   # preempted, KV intact
         self._phase_end_s: float | None = None
         self._phase_members: list[_InFlight] = []
         self._phase_steps: int = 0
+        # decode-segment bookkeeping (settle-time charging + preemption)
+        self._phase_kind: str | None = None      # "prefill" | "decode"
+        self._phase_start_s: float = 0.0
+        self._phase_base: int = 0                # decode base context
+        self._phase_scale: float = 1.0           # chosen operating point
+        self._phase_t: float = 0.0               # full-segment time
+        self._phase_e: float = 0.0               # full-segment accel joules
+        self._phase_epoch: int = 0               # invalidates stale events
+        self._preempt_steps: int | None = None   # pending truncation point
+        self._preempt_victims: list[_InFlight] = []
 
         # power-state machine (starts powered and idle at t = 0)
         self._pstate = IDLE
@@ -143,6 +171,8 @@ class ClusterNode:
         self.n_served = 0
         self.n_wakes = 0
         self.n_gates = 0
+        self.n_preemptions = 0
+        self.n_resumes = 0
         self.freq_choices: Counter = Counter()   # (phase_kind, scale) -> count
 
     # ------------------------------------------------------------------
@@ -155,8 +185,9 @@ class ClusterNode:
         return self._phase_end_s is not None
 
     def load(self) -> int:
-        """Queue depth + in-flight count (the least-loaded policy signal)."""
-        return len(self.waiting) + len(self.active)
+        """Queue depth + in-flight + suspended count (the least-loaded
+        policy signal; suspended work still owes this node decode time)."""
+        return len(self.waiting) + len(self.active) + len(self.suspended)
 
     @property
     def idle_power_w(self) -> float:
@@ -183,7 +214,40 @@ class ClusterNode:
 
     @property
     def can_gate(self) -> bool:
-        return (self._pstate == IDLE and not self.waiting and not self.active)
+        return (self._pstate == IDLE and not self.waiting and not self.active
+                and not self.suspended)
+
+    @property
+    def in_decode(self) -> bool:
+        """Mid-decode-segment — the only phase kind that can be preempted."""
+        return self._phase_end_s is not None and self._phase_kind == "decode"
+
+    @property
+    def preempt_pending(self) -> bool:
+        return self._preempt_steps is not None
+
+    @property
+    def phase_end_s(self) -> float | None:
+        """Absolute end time of the running phase (None when idle) — the
+        preemption policy's wait estimate for a queued arrival."""
+        return self._phase_end_s
+
+    @property
+    def phase_epoch(self) -> int:
+        """Monotone phase generation counter: a scheduled phase/preempt
+        event is valid only if its epoch still matches (preemption is the
+        one path that invalidates an already-scheduled segment end)."""
+        return self._phase_epoch
+
+    @property
+    def pending_wake_j(self) -> float:
+        """Energy a fresh request routed here would spend waking the node:
+        zero while powered or already waking, the full transition cost
+        while gated (or ramping down, since the gate must finish first).
+        The wake-cost-aware router folds this into its argmin."""
+        if self._pstate in (GATED, GATING):
+            return self.power.wake_j + self.power.wake_s * self.transition_power_w
+        return 0.0
 
     @property
     def power_rank(self) -> int:
@@ -305,7 +369,7 @@ class ClusterNode:
         return t, e
 
     def _decode(self, base: int, n_steps: int, batch: int
-                ) -> tuple[float, float]:
+                ) -> tuple[float, float, float]:
         if self.dvfs == "per_phase":
             s, t, e = self.sim.best_decode_frequency(
                 base, n_steps, batch=batch, extra_w=self.sim.host_power_w)
@@ -314,15 +378,28 @@ class ClusterNode:
             t, e = self.sim.decode_cost(base, n_steps, batch=batch,
                                         freq_scale=s)
         self.freq_choices[("decode", s)] += 1
-        return t, e
+        return s, t, e
 
     def _start_phase(self, now: float) -> float | None:
-        """Pick the next phase; returns its end time (None if going idle)."""
+        """Pick the next phase; returns its end time (None if going idle).
+
+        Slot order: waiting requests first (a preemption was triggered
+        *for* an arrival, which must not lose the freed slot back to its
+        own victim), then suspended requests resume into whatever slots
+        remain — a resume is free (KV position intact, no re-prefill), the
+        member simply rejoins the active set for the coming segments."""
+        self._phase_epoch += 1
         slots = self.max_batch - len(self.active)
-        if slots > 0 and self.waiting:
+        joiners = [self.waiting.popleft()
+                   for _ in range(min(slots, len(self.waiting)))]
+        slots -= len(joiners)
+        if slots > 0 and self.suspended:
+            resumed = [self.suspended.popleft()
+                       for _ in range(min(slots, len(self.suspended)))]
+            self.n_resumes += len(resumed)
+            self.active.extend(resumed)
+        if joiners:
             # (joiner) prefill for as many waiting requests as fit
-            joiners = [self.waiting.popleft()
-                       for _ in range(min(slots, len(self.waiting)))]
             members = [_InFlight(r, start_s=now) for r in joiners]
             t, e = self._prefill(max(r.tau_in for r in joiners), len(joiners))
             self._set_state(ACTIVE, now)
@@ -330,23 +407,34 @@ class ClusterNode:
             self.active.extend(members)
             self._phase_members = members
             self._phase_steps = 0
+            self._phase_kind = "prefill"
+            self._phase_start_s = now
             self._phase_end_s = now + t
             return self._phase_end_s
         if self.active:
             # decode to the next completion boundary (padded batch: every
             # step attends up to the longest member context); closed-form
             # and memoized on (base, n_steps, batch, freq), so bursts of
-            # identical requests price each segment shape exactly once
+            # identical requests price each segment shape exactly once.
+            # The charge is deferred to settle time (segment end or
+            # preemption boundary) so a truncated segment is charged once,
+            # for exactly the steps it ran.
             n_steps = min(m.remaining for m in self.active)
             base = max(m.context for m in self.active)
-            t, e = self._decode(base, n_steps, len(self.active))
+            s, t, e = self._decode(base, n_steps, len(self.active))
             self._set_state(ACTIVE, now)
-            self._charge(self.active, t, e)
             self._phase_members = list(self.active)
             self._phase_steps = n_steps
+            self._phase_kind = "decode"
+            self._phase_start_s = now
+            self._phase_base = base
+            self._phase_scale = s
+            self._phase_t = t
+            self._phase_e = e
             self._phase_end_s = now + t
             return self._phase_end_s
         self._set_state(IDLE, now)
+        self._phase_kind = None
         self._phase_end_s = None
         return None
 
@@ -355,6 +443,8 @@ class ClusterNode:
         """Advance past the finished phase.  Returns (completions, next
         phase event or None if the node went idle)."""
         assert self._phase_end_s is not None
+        if self._phase_kind == "decode":   # settle the deferred charge
+            self._charge(self._phase_members, self._phase_t, self._phase_e)
         done: list[Completion] = []
         for m in self._phase_members:
             m.generated += self._phase_steps
@@ -372,8 +462,83 @@ class ClusterNode:
                     energy_j=m.energy_j,
                     isolated_runtime_s=self.sim.simulate(
                         m.req.tau_in, m.req.tau_out).runtime_s,
+                    preemptions=m.preemptions,
                 ))
         self._phase_members = []
         self._phase_steps = 0
+        self._phase_kind = None
         self._phase_end_s = None
         return done, self._phase_event(self._start_phase(now))
+
+    # --- decode-boundary preemption ------------------------------------
+    def _decode_time_at(self, n_steps: int) -> float:
+        """Closed-form time of the running segment truncated to n_steps
+        (memoized — the binary search below costs O(log n) cached evals)."""
+        t, _ = self.sim.decode_cost(self._phase_base, n_steps,
+                                    batch=len(self._phase_members),
+                                    freq_scale=self._phase_scale)
+        return t
+
+    def preempt_decode(self, request_id: int, now: float
+                       ) -> tuple[str, float] | None:
+        """Ask to evict `request_id` from the running decode segment at the
+        next step boundary ≥ `now` (the in-flight token always finishes —
+        nothing is re-run, so the energy split is exact).  Returns the
+        ("preempt", settle_s) event, or None when there is nothing to
+        preempt: not mid-decode, a preemption already pending, the victim
+        is not an active member, or the segment ends before another step
+        boundary anyway.  The already-scheduled segment-end event is
+        invalidated by bumping the phase epoch."""
+        if not self.in_decode or self.preempt_pending:
+            return None
+        member = next((m for m in self.active
+                       if m.req.request_id == request_id), None)
+        if member is None:
+            return None
+        elapsed = now - self._phase_start_s
+        # smallest n with time(n) >= elapsed: the boundary of the token in
+        # flight at `now` (never in the past — causality holds exactly)
+        lo, hi = 0, self._phase_steps
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self._decode_time_at(mid) >= elapsed:
+                hi = mid
+            else:
+                lo = mid + 1
+        if lo >= self._phase_steps:
+            return None                    # segment finishing anyway
+        self._preempt_steps = lo
+        self._preempt_victims = [member]
+        self._phase_epoch += 1             # stale segment-end event dies
+        self._phase_end_s = self._phase_start_s + self._decode_time_at(lo)
+        return (_PREEMPT, self._phase_end_s)
+
+    def on_preempt_end(self, now: float) -> tuple[str, float] | None:
+        """Settle a truncated decode segment at its preemption boundary:
+        charge exactly the steps that ran (closed form over [0, n_done) —
+        the first half of the split whose two parts sum to the unpreempted
+        `decode_cost` to 1e-9), advance every member's KV position, move
+        the victims to the suspended set, and start the next phase (which
+        admits the waiting arrival the preemption made room for)."""
+        assert self._preempt_steps is not None and self.in_decode
+        n_done = self._preempt_steps
+        t_done, e_done = self.sim.decode_cost(
+            self._phase_base, n_done, batch=len(self._phase_members),
+            freq_scale=self._phase_scale)
+        self._charge(self._phase_members, t_done, e_done)
+        for m in self._phase_members:
+            m.generated += n_done
+        # n_done < n_steps = min remaining, so nobody can have completed
+        assert all(m.remaining > 0 for m in self._phase_members)
+        for victim in self._preempt_victims:
+            self.active.remove(victim)
+            victim.preemptions += 1
+            self.suspended.append(victim)
+            self.n_preemptions += 1
+        self._preempt_steps = None
+        self._preempt_victims = []
+        self._phase_members = []
+        self._phase_steps = 0
+        self._phase_kind = None
+        self._phase_end_s = None
+        return self._phase_event(self._start_phase(now))

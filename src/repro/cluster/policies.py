@@ -28,6 +28,25 @@ quantile, learning only from completions the event loop echoes through
 ``observe_completion`` — never from the trace — so fig4 can measure the
 information gap (oracle-τout vs predicted-τout router) separately from
 the commitment gap (oracle-τout router vs the offline replay).
+
+Multi-replica fleets: several nodes may host the same model
+(``replica_registry`` maps model → node ids).  ``ReplicaEnergyPolicy`` is
+the replica-*set* router — it scores nodes, not models, folding each
+replica's pending wake energy (amortized over an expected burst) into the
+Eq. 2 argmin, so the fleet's power state shapes the objective instead of
+just breaking ties.  ``ReplicaOraclePolicy`` is the replica-aware offline
+bound: it replays ``core.scheduler.schedule_replicated`` — the same
+model-level optimum as ``OfflineOraclePolicy``, with each model's bin
+split into per-replica capacities — so the oracle commits to *node*
+placement offline and the fig4 commitment gap stays apples-to-apples on
+replicated fleets.
+
+Preemption: ``PreemptionPolicy.consider`` is consulted by the event loop
+at every arrival, after routing.  ``SLOPreemptionPolicy`` cuts the routed
+node's decode segment — evicting the lowest-ζ-value active member — when
+a higher-value arrival would otherwise wait past its slowdown SLO; the
+victim suspends at the next decode step boundary (KV intact) and resumes
+when a slot frees.
 """
 
 from __future__ import annotations
@@ -38,9 +57,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.energy_model import LLMProfile, normalized_costs, objective_matrix
-from repro.core.scheduler import schedule
+from repro.core.scheduler import schedule, schedule_replicated
 from repro.core.sweep import IncrementalScheduler
 
+from repro.cluster.metrics import replica_registry  # noqa: F401  (re-export)
 from repro.cluster.predictors import TauOutPredictor
 from repro.cluster.trace import ArrivalTrace, TracedRequest
 
@@ -326,6 +346,215 @@ class OfflineOraclePolicy(RoutingPolicy):
     def select(self, req, nodes, now):
         hosts = self._nodes_hosting(nodes, self._model_of[req.request_id])
         return self._least_loaded(hosts)
+
+
+class ReplicaEnergyPolicy(ZetaOnlinePolicy):
+    """Replica-set router: the causal Eq. 2 argmin taken over *nodes*, with
+    each replica's power state priced into the objective instead of only
+    breaking ties.
+
+    A gated (or still-gating) replica costs `pending_wake_j` to bring up
+    before it can serve; that energy is shared by however many requests
+    the wake ends up serving, so the router amortizes it over
+    `wake_amortize` expected requests and adds the share to the candidate
+    score on the same normalization as the energy term:
+
+        score(node) = ζ·ê/ê_max − (1−ζ)·â/â_max
+                      + ζ·(pending_wake_j / wake_amortize)/ê_max
+
+    With every replica awake the wake term vanishes and the policy reduces
+    exactly to zeta_online over the replica set; near-ties still break
+    least-loaded-first, so replicas of the chosen model share load."""
+
+    name = "replica_energy"
+
+    def __init__(self, zeta: float | None = None, *,
+                 wake_amortize: float = 8.0,
+                 tau_out_predictor: TauOutPredictor | None = None):
+        if wake_amortize <= 0:
+            raise ValueError("wake_amortize must be > 0")
+        super().__init__(zeta, tau_out_predictor=tau_out_predictor)
+        self.wake_amortize = wake_amortize
+
+    def select(self, req, nodes, now):
+        e, a = self._observe(req, nodes)
+        wake = np.array([getattr(n, "pending_wake_j", 0.0) for n in nodes])
+        obj = (self.zeta * (e + wake / self.wake_amortize) / self._e_max
+               - (1.0 - self.zeta) * a / self._a_max)
+        order = np.argsort(obj, kind="stable")
+        best = [nodes[i] for i in order if obj[i] <= obj[order[0]] + 1e-12]
+        return self._least_loaded(best)
+
+
+class ReplicaOraclePolicy(OfflineOraclePolicy):
+    """Replica-aware offline oracle: replays
+    ``core.scheduler.schedule_replicated`` over the full trace, committing
+    each request to a *node* (a specific replica), not just a model.
+
+    With the default ``gamma=None`` the model-level assignment is the
+    unconstrained Eq. 2 optimum — identical objective to
+    ``OfflineOraclePolicy`` — and each model's realized query count is
+    split into balanced per-replica capacities, so the oracle bound on the
+    objective is preserved while replica placement is priced by the same
+    capacitated machinery the γ-constrained case study uses.  Passing
+    ``gamma=`` instead prices the paper's data-center partition across
+    the replica set."""
+
+    name = "replica_oracle"
+
+    def __init__(self, gamma: Sequence[float] | None = None):
+        self.gamma_arg = None if gamma is None else tuple(gamma)
+        self._node_of: dict[int, int] = {}
+
+    def attach(self, nodes, trace, zeta):
+        profiles = unique_profiles(nodes)
+        registry = replica_registry(nodes)
+        counts = [len(registry[p.name]) for p in profiles]
+        self._node_of = {}
+        if not len(trace):
+            return
+        rasg = schedule_replicated(profiles, trace.queries(), zeta, counts,
+                                   gamma=self.gamma_arg)
+        # global replica index -> node id, in the same flattening order
+        rep_nodes = [nid for p in profiles for nid in registry[p.name]]
+        for r, rr in zip(trace.requests, rasg.replica_of):
+            self._node_of[r.request_id] = rep_nodes[int(rr)]
+
+    def select(self, req, nodes, now):
+        return self._node_of[req.request_id]
+
+
+# ---------------------------------------------------------------------------
+# Preemption policies (consulted by the event loop at every arrival)
+# ---------------------------------------------------------------------------
+
+
+class PreemptionPolicy:
+    """Base preemption policy: sees every arrival (after routing), may ask
+    the routed node to cut its running decode segment.  The base class
+    never preempts — installing it is behaviorally identical to running
+    without a preempter."""
+
+    name = "no_preemption"
+
+    def attach(self, nodes: Sequence, trace: ArrivalTrace, zeta: float) -> None:
+        self.zeta = zeta
+
+    def consider(self, req: TracedRequest, node, nodes: Sequence,
+                 now: float) -> int | None:
+        """Return the request_id of an active decode member to evict on
+        `node` (the node `req` was just routed to), or None."""
+        return None
+
+    def observe_completion(self, record, now: float) -> None:
+        """Causal completion feedback — same channel the routers get."""
+
+
+class SLOPreemptionPolicy(_TauOutMixin, PreemptionPolicy):
+    """Evict the lowest-ζ-value decode when a higher-value waiting request
+    would miss its slowdown SLO.
+
+    The freed slot goes to the *head* of the node's FIFO queue at the
+    settle boundary, so that head — not necessarily the arrival that
+    triggered the check — is the beneficiary the policy evaluates.
+    Trigger: the routed node is mid-decode with a full batch (no slot
+    until the segment boundary) and the boundary is further past the
+    beneficiary's arrival than its SLO slack,
+    `(slowdown_slo − 1) · r̂_iso` (its isolated runtime under the node's
+    fitted profile).  Victim: the active member with the worst (highest)
+    Eq. 2 per-query score on this node's model, among members with more
+    than `min_remaining` decode steps left (a nearly-done decode frees
+    its slot soon anyway — cutting it buys nothing).  The eviction only
+    fires when the beneficiary's own score beats the victim's by at least
+    `margin` — preemption trades the fleet's lowest-value work for
+    higher-value work, never sideways.
+
+    Scores use running ζ-normalizers fed by every arrival (the same
+    causal normalization rule as zeta_online); `consider` is therefore
+    called on every arrival even when no preemption can trigger.
+
+    τout information model: the shared ``_TauOutMixin`` channel the
+    routers use — without a `tau_out_predictor` the policy reads true
+    output lengths (the paper's offline-knowledge assumption, matching
+    the oracle-τout routers); with one, waiting requests are priced at
+    the predicted quantile and in-flight victims at max(prediction,
+    tokens already generated) — generated tokens are observable, a total
+    length is not — learning only from the completions the event loop
+    echoes through `observe_completion`."""
+
+    name = "slo_preempt"
+
+    def __init__(self, *, slowdown_slo: float = 3.0, min_remaining: int = 8,
+                 margin: float = 0.0,
+                 tau_out_predictor: TauOutPredictor | None = None):
+        if slowdown_slo < 1.0:
+            raise ValueError("slowdown_slo must be >= 1")
+        if min_remaining < 0 or margin < 0:
+            raise ValueError("min_remaining and margin must be >= 0")
+        self.slowdown_slo = slowdown_slo
+        self.min_remaining = min_remaining
+        self.margin = margin
+        self._init_predictor(tau_out_predictor)
+
+    def attach(self, nodes, trace, zeta):
+        super().attach(nodes, trace, zeta)
+        self._profiles = unique_profiles(nodes)
+        self._e_max = 0.0
+        self._a_max = 0.0
+        self._reset_predictor()
+
+    def _waiting_query(self, req: TracedRequest, model: str):
+        """(τin, τ̂out) of a not-yet-served request."""
+        return (req.tau_in, self._tau_for(req, model))
+
+    def _victim_query(self, member, model: str):
+        """(τin, τ̂out) of an in-flight decode: its generated-token count
+        is observed fact, so the estimate never undershoots it."""
+        if self.predictor is None:
+            return member.req.query
+        return (member.req.tau_in,
+                max(self.predictor.predict(model), float(member.generated)))
+
+    def _fold(self, query) -> None:
+        tin, tout = query
+        for p in self._profiles:
+            self._e_max = max(self._e_max, float(p.energy(tin, tout)))
+            self._a_max = max(self._a_max, float(p.accuracy(tin, tout)))
+
+    def _score(self, profile: LLMProfile, query) -> float:
+        tin, tout = query
+        return (self.zeta * float(profile.energy(tin, tout)) / self._e_max
+                - (1.0 - self.zeta)
+                * float(profile.accuracy(tin, tout)) / self._a_max)
+
+    def consider(self, req, node, nodes, now):
+        model = node.profile.name
+        self._fold(self._waiting_query(req, model))  # every arrival feeds
+        if (not getattr(node, "in_decode", False) or node.preempt_pending
+                or len(node.active) < node.max_batch or not node.waiting):
+            return None
+        # the request the freed slot will actually admit: the FIFO head
+        # (req itself when the queue was empty before this arrival)
+        beneficiary = node.waiting[0]
+        bq = self._waiting_query(beneficiary, model)
+        r_iso = float(node.profile.runtime(*bq))
+        wait_s = node.phase_end_s - beneficiary.arrival_s
+        if wait_s <= (self.slowdown_slo - 1.0) * r_iso:
+            return None    # the beneficiary makes its SLO by just queueing
+        candidates = [m for m in node.active
+                      if m.remaining > self.min_remaining]
+        if not candidates:
+            return None
+        victim = max(
+            candidates,
+            key=lambda m: (self._score(node.profile,
+                                       self._victim_query(m, model)),
+                           m.req.request_id))
+        if (self._score(node.profile, bq) + self.margin
+                >= self._score(node.profile,
+                               self._victim_query(victim, model))):
+            return None    # the beneficiary is not worth more than the work
+        return victim.req.request_id
 
 
 DEFAULT_POLICIES = (

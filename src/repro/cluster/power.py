@@ -34,11 +34,14 @@ idle — commit?), and `on_arrival` (wake gated nodes proactively?).  A
 request routed to a gated node always triggers an on-demand wake — work
 is never stranded, whatever the policy does.
 
-Two built-in policies:
+Three built-in policies:
 
     * ReactiveIdlePolicy   — gate a node once it has sat idle for
-      `idle_timeout_s`, keeping at least `min_awake` nodes up; wakes are
-      purely on demand (first routed request pays the wake latency).
+      `idle_timeout_s`, keeping at least `min_awake` nodes up (and, with
+      `min_awake_per_model`, at least that many awake replicas of every
+      hosted model — a fleet-wide floor alone can gate a model's entire
+      replica set); wakes are purely on demand (first routed request pays
+      the wake latency).
     * PredictiveRatePolicy — estimates the arrival rate over a sliding
       window and the mean service time from observed completions, sizes
       the awake fleet to `rate · service / target_util`, wakes gated
@@ -46,6 +49,13 @@ Two built-in policies:
       reactive/predictive split is exactly the tradeoff the §6.3-style
       case study needs: reactive saves more joules but pays wake latency
       on the first request of every burst.
+    * ReplicaRatePolicy    — the multi-replica refinement: the sizing
+      variable is each model's *replica count*, not the node count.
+      Per-model demand (completion rate × mean service time, learned
+      causally from completions) sizes that model's awake replica set;
+      replicas of an under-provisioned model pre-wake on arrivals while
+      an over-provisioned model's spares gate down, independently per
+      model.
 """
 
 from __future__ import annotations
@@ -54,6 +64,8 @@ import dataclasses
 import math
 from collections import deque
 from typing import Sequence
+
+from repro.cluster.metrics import replica_registry
 
 # power-state tags (kept as plain strings: cheap, printable, json-able)
 ACTIVE = "active"
@@ -116,23 +128,46 @@ class AutoscalePolicy:
         does not need a wake)."""
         return sum(1 for n in nodes if n.power_state in (ACTIVE, IDLE, WAKING))
 
+    @staticmethod
+    def _replicas(nodes: Sequence) -> dict[str, list]:
+        """The shared replica registry (metrics.replica_registry — one
+        grouping rule fleet-wide), resolved to live node objects."""
+        by_id = {n.node_id: n for n in nodes}
+        return {name: [by_id[i] for i in nids]
+                for name, nids in replica_registry(nodes).items()}
+
 
 class ReactiveIdlePolicy(AutoscalePolicy):
-    """Gate after `idle_timeout_s` of idleness; wake on demand only."""
+    """Gate after `idle_timeout_s` of idleness; wake on demand only.
+
+    `min_awake` floors the fleet; `min_awake_per_model` floors every
+    model's awake *replica set* — with replicated models the fleet floor
+    alone can concentrate all awake capacity on one model and gate every
+    replica of another, which the per-model floor forbids."""
 
     name = "reactive_idle"
 
-    def __init__(self, idle_timeout_s: float = 30.0, *, min_awake: int = 1):
-        if idle_timeout_s < 0 or min_awake < 0:
-            raise ValueError("idle_timeout_s and min_awake must be >= 0")
+    def __init__(self, idle_timeout_s: float = 30.0, *, min_awake: int = 1,
+                 min_awake_per_model: int = 0):
+        if idle_timeout_s < 0 or min_awake < 0 or min_awake_per_model < 0:
+            raise ValueError("idle_timeout_s, min_awake and "
+                             "min_awake_per_model must be >= 0")
         self.idle_timeout_s = idle_timeout_s
         self.min_awake = min_awake
+        self.min_awake_per_model = min_awake_per_model
+
+    def attach(self, nodes):
+        super().attach(nodes)
+        self._model_nodes = self._replicas(self.nodes)
 
     def on_idle(self, node, now):
         return now + self.idle_timeout_s
 
     def should_gate(self, node, now):
-        return self._awake(self.nodes) > self.min_awake
+        if self._awake(self.nodes) <= self.min_awake:
+            return False
+        peers = self._model_nodes[node.profile.name]
+        return self._awake(peers) > self.min_awake_per_model
 
 
 class PredictiveRatePolicy(AutoscalePolicy):
@@ -204,3 +239,91 @@ class PredictiveRatePolicy(AutoscalePolicy):
 
     def should_gate(self, node, now):
         return self._awake(self.nodes) > self.required_nodes(now)
+
+
+class ReplicaRatePolicy(AutoscalePolicy):
+    """Per-model replica-count autoscaler: each model's awake replica set
+    is sized from that model's own demand estimate.
+
+    required_K ≈ ceil(rate_K · mean_service_K / target_util), clamped to
+    [min_awake_per_model, |replicas of K|].  Both estimates are causal:
+    rate_K counts completions of model K inside a sliding `window_s` (a
+    router-agnostic proxy for the model's arrival share — the autoscaler
+    sees arrivals *before* routing, so it cannot know their model), and
+    mean_service_K averages observed start→finish times, seeded by
+    `service_prior_s` until the first completion.  On every arrival the
+    under-provisioned models pre-wake gated replicas; gating goes through
+    the usual idle timer and commits only while the node's model is above
+    its requirement.  This is the ISSUE-5 sizing change: replica counts
+    per model, not node counts, are the autoscaling variable."""
+
+    name = "replica_rate"
+
+    def __init__(self, window_s: float = 60.0, *, target_util: float = 0.6,
+                 min_awake_per_model: int = 1, idle_timeout_s: float = 10.0,
+                 service_prior_s: float = 2.0):
+        if window_s <= 0 or not 0 < target_util <= 1:
+            raise ValueError("window_s > 0 and target_util in (0, 1] required")
+        if min_awake_per_model < 0 or idle_timeout_s < 0:
+            raise ValueError("min_awake_per_model and idle_timeout_s "
+                             "must be >= 0")
+        self.window_s = window_s
+        self.target_util = target_util
+        self.min_awake_per_model = min_awake_per_model
+        self.idle_timeout_s = idle_timeout_s
+        self.service_prior_s = service_prior_s
+
+    def attach(self, nodes):
+        super().attach(nodes)
+        self._model_nodes = self._replicas(self.nodes)
+        self._completions: dict[str, deque] = {
+            name: deque() for name in self._model_nodes}
+        self._service_sum: dict[str, float] = dict.fromkeys(
+            self._model_nodes, 0.0)
+        self._service_n: dict[str, int] = dict.fromkeys(self._model_nodes, 0)
+
+    # --- per-model estimates ------------------------------------------
+    def _rate(self, model: str, now: float) -> float:
+        dq = self._completions[model]
+        while dq and dq[0] < now - self.window_s:
+            dq.popleft()
+        span = min(self.window_s, max(now, 1e-9))
+        return len(dq) / span
+
+    def _service_s(self, model: str) -> float:
+        n = self._service_n[model]
+        return (self._service_sum[model] / n) if n else self.service_prior_s
+
+    def required_replicas(self, model: str, now: float) -> int:
+        demand = self._rate(model, now) * self._service_s(model) / \
+            self.target_util
+        return int(min(len(self._model_nodes[model]),
+                       max(self.min_awake_per_model, math.ceil(demand))))
+
+    # --- hooks --------------------------------------------------------
+    def on_arrival(self, req, nodes, now):
+        wake: list[int] = []
+        for model, peers in self._model_nodes.items():
+            need = self.required_replicas(model, now)
+            awake = self._awake(peers)
+            if awake >= need:
+                continue
+            gated = [n.node_id for n in peers if n.power_state == GATED]
+            wake.extend(gated[:need - awake])
+        return wake
+
+    def on_completion(self, completion, now):
+        model = completion.model
+        if model not in self._completions:   # unseen model: defensive
+            return
+        self._completions[model].append(now)
+        self._service_sum[model] += completion.finish_s - completion.start_s
+        self._service_n[model] += 1
+
+    def on_idle(self, node, now):
+        return now + self.idle_timeout_s
+
+    def should_gate(self, node, now):
+        model = node.profile.name
+        return (self._awake(self._model_nodes[model])
+                > self.required_replicas(model, now))

@@ -1,22 +1,41 @@
 """The discrete-event loop: streaming arrivals over a heterogeneous fleet.
 
-Five event kinds drive the simulation — request arrivals (from the trace),
-node phase completions (from the continuous-batching state machines), and
-the power-management triple: wake completions, gate completions, and idle
-timers (armed by the autoscaler when a node runs out of work).  Events are
-processed in (time, sequence) order; the sequence counter makes
-simultaneous events deterministic, so a fixed trace + policy (+ autoscaler)
-always yields a bit-identical ClusterReport.
+Six event kinds drive the simulation — request arrivals (from the trace),
+node phase completions (from the continuous-batching state machines),
+preemption settlements (a decode segment cut at its next step boundary),
+and the power-management triple: wake completions, gate completions, and
+idle timers (armed by the autoscaler when a node runs out of work).
+Events are processed in (time, sequence) order; the sequence counter makes
+simultaneous events deterministic, so a fixed trace + policy (+ autoscaler
++ preempter) always yields a bit-identical ClusterReport.
+
+Phase-shaped events (segment end, preemption settle) carry the node's
+*phase epoch* at scheduling time: preempting a segment bumps the epoch, so
+the stale segment-end event still sitting in the heap is recognized and
+dropped when popped — the only event-invalidation path in the loop.
 
 Without an `autoscaler=`, no idle timer is ever armed and no node ever
-leaves the ACTIVE/IDLE pair — the loop degenerates to the PR 1 two-event
-simulation, keeping the offline-oracle replay baseline and its gap numbers
-directly comparable across PRs.
+leaves the ACTIVE/IDLE pair; without a `preempter=`, no decode segment is
+ever cut — the loop degenerates to the PR 1/PR 4 simulation exactly (the
+differential tests in tests/test_preemption.py pin event-stream and
+energy identity), keeping the offline-oracle replay baseline and its gap
+numbers directly comparable across PRs.
+
+Resume is not a separate event kind: a suspended request rejoins the
+active set for free at the next phase start with a spare slot
+(`ClusterNode._start_phase`), so its RESUMING instant always coincides
+with an existing phase boundary.
+
+The loop also builds the per-model *replica registry* (`replica_registry`,
+shared with the policies module) — model name → node ids hosting a
+replica, in node order — which is what the replica-aware router, oracle,
+preemption policy, and autoscalers size against.
 
 Completions are echoed to `policy.observe_completion` (τout predictor
 feedback — the only causal channel through which a non-oracle router may
-learn output lengths) and `autoscaler.on_completion` (service-time
-feedback for predictive fleet sizing).
+learn output lengths), `autoscaler.on_completion` (service-time feedback
+for predictive fleet sizing), and `preempter.observe_completion` (the
+same τout channel for a predictor-equipped preemption policy).
 """
 
 from __future__ import annotations
@@ -27,16 +46,21 @@ from typing import Sequence
 from repro.cluster.metrics import ClusterReport, RequestRecord, per_node_stats
 from repro.cluster.node import ClusterNode
 from repro.cluster.policies import (
+    PreemptionPolicy,
     RoutingPolicy,
     objective_of_assignment,
+    replica_registry,
     unique_profiles,
 )
 from repro.cluster.power import GATED, IDLE, AutoscalePolicy
 from repro.cluster.trace import ArrivalTrace
 
-_ARRIVAL, _PHASE_END, _WAKE_END, _GATE_END, _IDLE_TIMER = range(5)
+(_ARRIVAL, _PHASE_END, _WAKE_END, _GATE_END, _IDLE_TIMER,
+ _PREEMPT_END) = range(6)
 
-_EVENT_CODE = {"phase": _PHASE_END, "wake": _WAKE_END, "gate": _GATE_END}
+_EVENT_CODE = {"phase": _PHASE_END, "wake": _WAKE_END, "gate": _GATE_END,
+               "preempt": _PREEMPT_END}
+_EPOCH_GUARDED = (_PHASE_END, _PREEMPT_END)   # payload carries (nid, epoch)
 
 
 def simulate_cluster(
@@ -46,6 +70,7 @@ def simulate_cluster(
     *,
     zeta: float = 0.5,
     autoscaler: AutoscalePolicy | None = None,
+    preempter: PreemptionPolicy | None = None,
 ) -> ClusterReport:
     """Serve the whole trace; returns the aggregate ClusterReport."""
     if not nodes:
@@ -53,9 +78,12 @@ def simulate_cluster(
     by_id = {n.node_id: n for n in nodes}
     if len(by_id) != len(nodes):
         raise ValueError("node_ids must be unique")
+    replicas = replica_registry(nodes)   # model -> node ids, in node order
     policy.attach(nodes, trace, zeta)
     if autoscaler is not None:
         autoscaler.attach(nodes)
+    if preempter is not None:
+        preempter.attach(nodes, trace, zeta)
 
     events: list[tuple[float, int, int, object]] = []
     seq = 0
@@ -71,8 +99,10 @@ def simulate_cluster(
         nonlocal seq
         if ev is not None:
             kind, end_s = ev
-            heapq.heappush(events, (end_s, seq, _EVENT_CODE[kind],
-                                    node.node_id))
+            code = _EVENT_CODE[kind]
+            payload = ((node.node_id, node.phase_epoch)
+                       if code in _EPOCH_GUARDED else node.node_id)
+            heapq.heappush(events, (end_s, seq, code, payload))
             seq += 1
 
     def arm_idle_timer(node: ClusterNode, now: float) -> None:
@@ -104,9 +134,19 @@ def simulate_cluster(
             nid = policy.select(req, nodes, now)
             if nid not in by_id:
                 raise ValueError(f"{policy.name} routed to unknown node {nid}")
-            push(by_id[nid], by_id[nid].enqueue(req, now))
+            node = by_id[nid]
+            push(node, node.enqueue(req, now))
+            if preempter is not None:
+                # the arrival is queued; the preempter may cut the routed
+                # node's decode segment to make room for it at the boundary
+                victim = preempter.consider(req, node, nodes, now)
+                if victim is not None:
+                    push(node, node.preempt_decode(victim, now))
         elif kind == _PHASE_END:
-            node = by_id[payload]
+            nid, epoch = payload
+            node = by_id[nid]
+            if epoch != node.phase_epoch:
+                continue   # segment was preempted; this end never happened
             completions, next_ev = node.on_phase_end(now)
             for c in completions:
                 makespan = max(makespan, c.finish_s)
@@ -121,11 +161,23 @@ def simulate_cluster(
                     finish_s=c.finish_s,
                     energy_j=c.energy_j,
                     isolated_runtime_s=c.isolated_runtime_s,
+                    preemptions=c.preemptions,
                 )
                 policy.observe_completion(rec, now)
                 if autoscaler is not None:
                     autoscaler.on_completion(rec, now)
+                if preempter is not None:
+                    preempter.observe_completion(rec, now)
                 records.append(rec)
+            push(node, next_ev)
+            if next_ev is None:
+                arm_idle_timer(node, now)
+        elif kind == _PREEMPT_END:
+            nid, epoch = payload
+            node = by_id[nid]
+            if epoch != node.phase_epoch:
+                continue   # defensive: nothing invalidates settles today
+            next_ev = node.on_preempt_end(now)
             push(node, next_ev)
             if next_ev is None:
                 arm_idle_timer(node, now)
@@ -157,6 +209,9 @@ def simulate_cluster(
     if len(records) != len(trace):
         raise RuntimeError(
             f"served {len(records)}/{len(trace)} requests — event loop bug")
+    if any(n.suspended for n in nodes):
+        raise RuntimeError("preempted requests left suspended at the end of "
+                           "the trace — resume logic bug")
     records.sort(key=lambda r: r.request_id)
     for n in nodes:   # close every node's books at the common horizon
         n.finalize(makespan)
@@ -178,6 +233,7 @@ def simulate_cluster(
         makespan_s=makespan,
         objective=objective,
         predicted_energy_j=predicted,
+        replicas=tuple((name, tuple(nids)) for name, nids in replicas.items()),
     )
 
 
@@ -194,14 +250,17 @@ def compare_policies(
     *,
     zeta: float = 0.5,
     autoscaler_builder=None,
+    preempter_builder=None,
 ) -> dict[str, ClusterReport]:
     """Run every policy on identical fresh clusters over the same trace.
-    `autoscaler_builder` is a zero-arg factory (autoscalers hold per-run
-    state, so they need the same fresh-per-run treatment as nodes)."""
+    `autoscaler_builder`/`preempter_builder` are zero-arg factories
+    (autoscalers and preemption policies hold per-run state, so they need
+    the same fresh-per-run treatment as nodes)."""
     out: dict[str, ClusterReport] = {}
     for pol in policies:
         nodes = fresh_nodes(node_builders)
         scaler = autoscaler_builder() if autoscaler_builder is not None else None
+        pre = preempter_builder() if preempter_builder is not None else None
         out[pol.name] = simulate_cluster(trace, nodes, pol, zeta=zeta,
-                                         autoscaler=scaler)
+                                         autoscaler=scaler, preempter=pre)
     return out

@@ -646,6 +646,126 @@ def schedule_capacitated(
 
 
 # ---------------------------------------------------------------------------
+# Replica-split capacities (multi-replica models over several nodes)
+# ---------------------------------------------------------------------------
+
+
+def replica_capacities(
+    caps: Sequence[int], replica_counts: Sequence[int],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Split per-model capacities into balanced per-replica capacities.
+
+    Model K's bin (capacity caps[K]) is mapped onto its replica_counts[K]
+    replicas: each gets ⌊caps[K]/R⌋ queries, the remainder going one each
+    to the first replicas — totals are preserved exactly, so the
+    replica-level transportation problem has the same model-level optimum
+    as the unsplit one (replica columns are duplicates).  Returns
+    (caps_rep (R_total,), model_of_replica (R_total,)) with replicas
+    flattened model-major in registry order."""
+    caps = np.asarray(caps, dtype=np.int64)
+    rc = np.asarray(replica_counts, dtype=np.int64)
+    if caps.shape != rc.shape:
+        raise ValueError("caps and replica_counts must align per model")
+    if (rc < 1).any():
+        raise ValueError("every model needs at least one replica")
+    if (caps < 0).any():
+        raise ValueError("capacities must be non-negative")
+    model_of = np.repeat(np.arange(len(caps)), rc)
+    caps_rep = np.empty(int(rc.sum()), dtype=np.int64)
+    pos = 0
+    for c, r in zip(caps.tolist(), rc.tolist()):
+        base, extra = divmod(c, r)
+        caps_rep[pos:pos + r] = base
+        caps_rep[pos:pos + extra] += 1
+        pos += r
+    return caps_rep, model_of
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaAssignment:
+    """A model-level Assignment plus the replica placement realizing it."""
+
+    assignment: Assignment      # model-level view (objective, totals)
+    replica_of: np.ndarray      # (m,) int — global replica index per query
+    model_of_replica: np.ndarray  # (R,) int — model index of each replica
+    replica_caps: np.ndarray    # (R,) int — per-replica capacity
+
+    def replica_counts(self) -> np.ndarray:
+        return np.bincount(self.replica_of,
+                           minlength=len(self.model_of_replica))
+
+
+def schedule_replicated(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    zeta: float,
+    replica_counts: Sequence[int],
+    *,
+    gamma: Sequence[float] | None = None,
+    caps: Sequence[int] | None = None,
+    costs: NormalizedCosts | None = None,
+) -> ReplicaAssignment:
+    """Replica-aware Eq. 2 optimum: each model's bin split over its
+    replicas as balanced γ-shares, solved exactly on the expanded
+    (duplicate-column) cost matrix with the chains solver.
+
+    Capacity source, in precedence order: explicit integer `caps` per
+    model; `gamma` shares of m (the paper's γ_K); or — the default — the
+    realized counts of the *unconstrained* optimum (`schedule` with
+    coverage/disjointness only), in which case the model-level objective
+    is bit-identical to the unconstrained one (the argmin is feasible for
+    its own counts) and only the placement across replicas is solved.
+    That default is what keeps a replica-aware oracle a true lower bound
+    on every online policy's objective.
+
+    Exactness without an expanded solve: replicas of one model are
+    duplicate columns of the cost matrix, so *any* caps-respecting
+    placement of the model-level optimum is a replica-level optimum.  The
+    model-level problem is solved once (schedule / schedule_capacitated —
+    both exact), then each model's queries are dealt over its replicas
+    round-robin in O(m); the resulting per-replica counts are the
+    balanced split of the realized count, componentwise ≤ the balanced
+    capacity split, so the caps always hold."""
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    m = len(costs.queries)
+    k = len(costs.model_names)
+    if len(replica_counts) != k:
+        raise ValueError("replica_counts must have one entry per model")
+    if gamma is not None and caps is not None:
+        raise ValueError("pass at most one of gamma= or caps=")
+    if caps is not None:
+        caps_model = np.asarray(caps, dtype=np.int64)
+        if caps_model.shape != (k,) or (caps_model < 0).any():
+            raise ValueError(f"caps must be a non-negative ({k},) vector")
+        if int(caps_model.sum()) < m:
+            raise ValueError(f"infeasible caps: sum {caps_model.sum()} < {m}")
+        base = schedule_capacitated(profiles, queries, zeta,
+                                    caps=caps_model, costs=costs)
+    elif gamma is not None:
+        caps_model = _capacities_from_gamma(gamma, m)
+        base = schedule_capacitated(profiles, queries, zeta, gamma,
+                                    costs=costs)
+    else:
+        base = schedule(profiles, queries, zeta,
+                        enforce_nonempty=False, costs=costs)
+        caps_model = base.counts()
+    caps_rep, model_of = replica_capacities(caps_model, replica_counts)
+    rc = np.asarray(replica_counts, dtype=np.int64)
+    rep_start = np.concatenate([[0], np.cumsum(rc)])
+    rep_assignee = np.empty(m, dtype=np.int64)
+    for j in range(k):
+        idx = np.nonzero(base.assignee == j)[0]
+        rep_assignee[idx] = rep_start[j] + np.arange(len(idx)) % rc[j]
+    return ReplicaAssignment(
+        assignment=base,
+        replica_of=rep_assignee,
+        model_of_replica=model_of,
+        replica_caps=caps_rep,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Baselines (paper Fig. 3 constant lines)
 # ---------------------------------------------------------------------------
 

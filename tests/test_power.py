@@ -330,6 +330,52 @@ class TestTauOutPredictor:
         with pytest.raises(ValueError):
             TauOutPredictor(window=0)
 
+    # --- cold-start edges (previously untested paths) ------------------
+    def test_empty_completion_window_returns_prior(self):
+        """No completion observed at all: every query — named model,
+        unknown model, pooled — answers the fixed prior, at any
+        quantile."""
+        for q in (0.1, 0.5, 0.9):
+            p = TauOutPredictor(quantile=q, prior=77.0)
+            assert p.predict() == 77.0
+            assert p.predict("never-seen") == 77.0
+            assert p.n_observed == 0
+
+    def test_single_completion(self):
+        """One observation: with min_obs=1 every quantile of a singleton
+        window is that value (pooled and per-model paths both); with the
+        default min_obs the single sample is not yet trusted and the
+        prior still answers."""
+        p = TauOutPredictor(quantile=0.7, prior=64.0, min_obs=1)
+        p.observe("a", 123)
+        assert p.predict("a") == 123.0         # per-model singleton
+        assert p.predict("b") == 123.0         # pooled singleton fallback
+        assert p.predict() == 123.0
+        p2 = TauOutPredictor(quantile=0.7, prior=64.0)   # min_obs=8
+        p2.observe("a", 123)
+        assert p2.predict("a") == 64.0         # one sample < min_obs: prior
+
+    def test_identical_values_window_is_quantile_degenerate(self):
+        """A window of identical τout values: every quantile collapses to
+        exactly that value (np.quantile's degenerate case — no
+        interpolation artifacts)."""
+        for q in (0.01, 0.5, 0.7, 0.99):
+            p = TauOutPredictor(quantile=q, window=16, min_obs=4)
+            for _ in range(12):
+                p.observe("m", 256)
+            assert p.predict("m") == 256.0
+            assert p.predict("other") == 256.0   # pooled is degenerate too
+
+    def test_cold_start_cache_invalidates_on_observe(self):
+        """The memoized prediction must not outlive an observation — the
+        cold-start prior answer may not stick once data arrives."""
+        p = TauOutPredictor(quantile=0.5, prior=64.0, min_obs=1)
+        assert p.predict("m") == 64.0          # cached prior path
+        p.observe("m", 8)
+        assert p.predict("m") == 8.0
+        p.reset()
+        assert p.predict("m") == 64.0
+
     def test_predictor_policy_never_reads_true_tau_out(self):
         """Bit-for-bit: routing decisions must be identical on two traces
         that differ only in τout values the router has not yet seen

@@ -1,0 +1,70 @@
+"""Property-based tests (hypothesis) for preemptive multi-replica serving.
+
+Randomized arrival traces with preemption enabled must uphold the PR 4
+conservation contract bucket by bucket — preempt/resume may only *move*
+joules between requests' attributed shares, never create or destroy them
+— and the SLO metrics must stay monotone in their thresholds.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.cluster import (  # noqa: E402
+    ReplicaEnergyPolicy,
+    SLOPreemptionPolicy,
+    ZetaOnlinePolicy,
+    bursty_trace,
+    poisson_trace,
+    simulate_cluster,
+)
+
+from test_preemption import assert_conserves, fresh, replica_builders  # noqa: E402
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(8, 40),
+       rate=st.floats(0.5, 10.0), slo=st.floats(1.0, 3.0),
+       burst=st.booleans())
+def test_preemption_never_creates_or_destroys_energy(seed, n, rate, slo,
+                                                     burst):
+    """Under randomized arrival traces with preemption enabled: every
+    request is served, every preemption has a matching resume, the four
+    buckets partition each node's horizon and sum to its total energy,
+    and the per-request attributed energies sum to the busy bucket — no
+    bucket gains or loses a joule to preempt/resume."""
+    trace = (bursty_trace(n, rate, burstiness=6.0, seed=seed) if burst
+             else poisson_trace(n, rate, seed=seed))
+    rep = simulate_cluster(
+        trace, fresh(replica_builders(max_batch=2)), ReplicaEnergyPolicy(),
+        zeta=0.5,
+        preempter=SLOPreemptionPolicy(slowdown_slo=slo, min_remaining=1))
+    assert len(rep.records) == len(trace)
+    assert rep.total_preemptions == rep.total_resumes
+    assert_conserves(rep)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(8, 40),
+       rate=st.floats(1.0, 10.0))
+def test_slo_metrics_monotone_under_preemption(seed, n, rate):
+    """SLO attainment is monotone non-decreasing in the threshold (both
+    the slowdown and the absolute-deadline form), and the latency
+    percentiles are monotone in q — preemption reshuffles who waits, but
+    can never make a looser SLO harder to meet."""
+    trace = poisson_trace(n, rate, seed=seed)
+    rep = simulate_cluster(
+        trace, fresh(replica_builders(max_batch=2)), ZetaOnlinePolicy(),
+        zeta=0.5,
+        preempter=SLOPreemptionPolicy(slowdown_slo=1.3, min_remaining=1))
+    slowdowns = [1.0, 1.5, 2.0, 3.0, 5.0, 10.0]
+    atts = [rep.slo_attainment(slowdown=s) for s in slowdowns]
+    assert all(a <= b + 1e-12 for a, b in zip(atts, atts[1:]))
+    deadlines = [0.5, 1.0, 2.0, 5.0, 20.0, 1e4]
+    atts_abs = [rep.slo_attainment(slo_s=t) for t in deadlines]
+    assert all(a <= b + 1e-12 for a, b in zip(atts_abs, atts_abs[1:]))
+    assert atts_abs[-1] == 1.0
+    qs = [10, 50, 90, 95, 99, 100]
+    lat = [rep.latency_percentile(q) for q in qs]
+    assert all(a <= b + 1e-12 for a, b in zip(lat, lat[1:]))

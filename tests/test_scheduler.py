@@ -118,6 +118,86 @@ class TestCapacitated:
             scheduler.schedule_capacitated(profs, qs, 0.5, (0.5, 0.2, 0.2))
 
 
+class TestReplicated:
+    """Replica-split capacities: one model's bin mapped over several
+    nodes, exactness preserved at the model level."""
+
+    def test_replica_capacities_balanced_and_total_preserving(self):
+        caps_rep, model_of = scheduler.replica_capacities(
+            [7, 3, 0], [3, 2, 1])
+        assert caps_rep.tolist() == [3, 2, 2, 2, 1, 0]
+        assert model_of.tolist() == [0, 0, 0, 1, 1, 2]
+        # totals preserved exactly, per-model
+        for j, cap in enumerate([7, 3, 0]):
+            assert caps_rep[model_of == j].sum() == cap
+        assert caps_rep.max() - caps_rep[model_of == 0].min() <= 1
+
+    def test_replica_capacities_validation(self):
+        with pytest.raises(ValueError):
+            scheduler.replica_capacities([5, 5], [1, 0])
+        with pytest.raises(ValueError):
+            scheduler.replica_capacities([5, -1], [1, 1])
+        with pytest.raises(ValueError):
+            scheduler.replica_capacities([5], [1, 1])
+
+    def test_default_matches_unconstrained_bit_identical(self):
+        """With no gamma/caps the model-level view must BE the
+        unconstrained optimum (the oracle-bound property): same objective,
+        same per-model counts — only the placement across replicas is
+        solved on top of it."""
+        profs, qs = make_profiles(), make_queries(80, seed=11)
+        for zeta in (0.0, 0.5, 1.0):
+            base = scheduler.schedule(profs, qs, zeta,
+                                      enforce_nonempty=False)
+            rasg = scheduler.schedule_replicated(profs, qs, zeta, [2, 3, 1])
+            assert rasg.assignment.objective == base.objective
+            assert rasg.assignment.counts().tolist() == base.counts().tolist()
+
+    def test_replica_caps_respected_and_model_view_consistent(self):
+        profs, qs = make_profiles(), make_queries(100, seed=12)
+        rasg = scheduler.schedule_replicated(profs, qs, 0.5, [2, 2, 2],
+                                             gamma=(0.2, 0.3, 0.5))
+        counts = rasg.replica_counts()
+        assert (counts <= rasg.replica_caps).all()
+        assert counts.sum() == 100
+        # the replica assignment collapses to the model assignment
+        model_assignee = rasg.model_of_replica[rasg.replica_of]
+        assert (model_assignee == rasg.assignment.assignee).all()
+
+    def test_gamma_matches_schedule_capacitated_objective(self):
+        """Splitting a model's bin over replicas must not change the
+        model-level optimum (replica columns are duplicates)."""
+        profs, qs = make_profiles(), make_queries(90, seed=13)
+        gamma = (0.1, 0.3, 0.6)
+        flat = scheduler.schedule_capacitated(profs, qs, 0.5, gamma)
+        rasg = scheduler.schedule_replicated(profs, qs, 0.5, [3, 1, 2],
+                                             gamma=gamma)
+        assert rasg.assignment.objective == pytest.approx(
+            flat.objective, rel=1e-12)
+
+    def test_single_replica_degenerates_to_capacitated(self):
+        profs, qs = make_profiles(), make_queries(50, seed=14)
+        gamma = (0.2, 0.3, 0.5)
+        flat = scheduler.schedule_capacitated(profs, qs, 0.5, gamma)
+        rasg = scheduler.schedule_replicated(profs, qs, 0.5, [1, 1, 1],
+                                             gamma=gamma)
+        assert rasg.assignment.objective == pytest.approx(
+            flat.objective, rel=1e-12)
+        assert (rasg.replica_of == rasg.assignment.assignee).all()
+
+    def test_replicated_validation(self):
+        profs, qs = make_profiles(), make_queries(10)
+        with pytest.raises(ValueError):
+            scheduler.schedule_replicated(profs, qs, 0.5, [1, 1])  # k=3
+        with pytest.raises(ValueError):
+            scheduler.schedule_replicated(profs, qs, 0.5, [1, 1, 1],
+                                          gamma=(0.3, 0.3, 0.4),
+                                          caps=[4, 3, 3])
+        with pytest.raises(ValueError):
+            scheduler.schedule_replicated(profs, qs, 0.5, [1, 1, 1],
+                                          caps=[1, 1, 1])   # sum < m
+
+
 class TestBaselines:
     def test_round_robin_counts(self):
         profs, qs = make_profiles(), make_queries(10)
