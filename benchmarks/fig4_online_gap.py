@@ -29,6 +29,9 @@ arrival rates, which is exactly the gap this subsystem exists to measure.
 
 from __future__ import annotations
 
+import json
+from pathlib import Path
+
 from benchmarks.common import emit, timed
 from repro.cluster import (
     ClusterNode,
@@ -53,6 +56,9 @@ from repro.configs import CASE_STUDY_MODELS, PAPER_ZOO, TABLE1
 from repro.core.energy_model import LLMProfile, fit_profile
 from repro.data import WorkloadSpec, alpaca_like_workload
 from repro.energy import AnalyticLLMSimulator, SWING_NODE
+from repro.obs import EventTracer, InvariantAuditor, Telemetry
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 N_REQUESTS = 200
 RATES_QPS = (0.5, 2.0, 8.0)
@@ -198,16 +204,50 @@ def predictor_cells(profiles):
     return out
 
 
+def telemetry_cell(profiles):
+    """Full telemetry on one seeded fig4 cell (the governed fleet with a
+    predictor router, autoscaler and preempter at 2 qps): asserts the
+    instrumented report is byte-identical to the uninstrumented one,
+    audits every settlement live at 1e-9, and dumps the Prometheus text
+    and Chrome trace artifacts next to BENCH_core.json."""
+    builders = node_builders(profiles, dvfs="per_phase")
+    trace = make_trace(2.0)
+
+    def cell(telemetry=None):
+        return simulate_cluster(
+            trace, fresh_nodes(builders),
+            ZetaOnlinePolicy(tau_out_predictor=TauOutPredictor()), zeta=0.5,
+            autoscaler=ReactiveIdlePolicy(idle_timeout_s=IDLE_TIMEOUT_S),
+            preempter=SLOPreemptionPolicy(slowdown_slo=2.0),
+            telemetry=telemetry)
+
+    bare = cell()
+    tel = Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                    sample_every_s=5.0)
+    instrumented = cell(tel)   # InvariantViolation here fails the benchmark
+    assert (bare.to_json(include_records=True)
+            == instrumented.to_json(include_records=True)), \
+        "telemetry-on fig4 cell diverged from telemetry-off"
+    rebuilt = type(instrumented).from_registry(tel.registry)
+    assert abs(rebuilt.total_energy_j - instrumented.total_energy_j) < 1e-6
+    prom_path = REPO_ROOT / "BENCH_fig4_telemetry.prom"
+    prom_path.write_text(tel.prometheus_text())
+    trace_path = tel.tracer.write(REPO_ROOT / "BENCH_fig4_trace.json")
+    return tel, instrumented, prom_path, trace_path
+
+
 def main() -> None:
     profiles = fit_fleet()
     us, results = timed(lambda: run(profiles), repeats=1)
     n_cells = len(results)
+    cell_dumps: dict[str, dict] = {}
     for (rate, zeta), reports in sorted(results.items()):
         oracle = reports["offline_oracle"]
         print(f"\n=== rate={rate:g} qps, zeta={zeta:g} "
               f"(n={N_REQUESTS}, fleet={list(CASE_STUDY_MODELS)}) ===")
         for name, rep in reports.items():
             print(rep.summary())
+            cell_dumps[f"rate_{rate:g}_zeta_{zeta:g}.{name}"] = rep.to_dict()
         for name, rep in reports.items():
             assert oracle.objective <= rep.objective + 1e-9, \
                 f"oracle beaten on objective by {name} at rate={rate} zeta={zeta}"
@@ -249,6 +289,7 @@ def main() -> None:
         total_cut_both = 1.0 - both.total_energy_j / base.total_energy_j
         for tag, rep in (("always-on", base), ("gated", gated),
                          ("dvfs", dvfs), ("gated+dvfs", both)):
+            cell_dumps[f"power_rate_{rate:g}.{tag}"] = rep.to_dict()
             print(f"  rate={rate:g} {tag:>10s}: "
                   f"E={rep.total_energy_j:9.0f}J "
                   f"(busy={rep.total_busy_energy_j:7.0f} "
@@ -279,6 +320,7 @@ def main() -> None:
         for tag, rep in (("offline_oracle", offline),
                          ("oracle_tau", oracle_tau),
                          ("predicted_tau", pred_tau)):
+            cell_dumps[f"gaps_rate_{rate:g}.{tag}"] = rep.to_dict()
             print(f"  rate={rate:g} {tag:>14s}: obj={rep.objective:+.4f} "
                   f"E={rep.total_energy_j:9.0f}J "
                   f"p95={rep.latency_p95:6.2f}s")
@@ -337,13 +379,34 @@ def main() -> None:
              f"wakes_blind={blind.total_wakes} "
              f"wakes_aware={aware.total_wakes}")
 
+    # --- (f): full telemetry on one seeded cell ------------------------
+    print("\n=== telemetry (tracer + live auditor, governed fleet, "
+          "2 qps) ===")
+    tel, instrumented, prom_path, trace_path = telemetry_cell(profiles)
+    cell_dumps["telemetry_rate_2.instrumented"] = instrumented.to_dict()
+    print(f"  auditor checks={tel.auditor.n_checks} "
+          f"trace events={len(tel.tracer.events)} "
+          f"prom -> {prom_path.name}, trace -> {trace_path.name}")
+    emit("fig4.telemetry", 0.0,
+         f"report_byte_identical=True "
+         f"auditor_checks={tel.auditor.n_checks} "
+         f"trace_events={len(tel.tracer.events)} "
+         f"registry_rebuild_matches=True")
+
+    # every cell's full ClusterReport as structured JSON — downstream
+    # tooling reads this instead of parsing the printed tables
+    cells_path = REPO_ROOT / "BENCH_fig4_cells.json"
+    cells_path.write_text(json.dumps(cell_dumps, sort_keys=True, indent=1))
+    print(f"\nwrote {len(cell_dumps)} cell reports -> {cells_path.name}")
+
     emit("fig4.claims", 0.0,
          "oracle_never_worse_on_objective=True "
          "energy_bound_at_zeta1=True "
          "dvfs_energy_leq_fixed_every_run=True "
          "gap_split=commitment_vs_information "
          "replica_oracle_bound_holds=True "
-         "preemption_energy_conserving=True")
+         "preemption_energy_conserving=True "
+         "telemetry_report_byte_identical=True")
 
 
 if __name__ == "__main__":

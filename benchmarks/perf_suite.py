@@ -494,6 +494,126 @@ def gate_power_conservation(failures: list[str]) -> dict:
             "wakes": rep.total_wakes}
 
 
+def gate_metrics_overhead(failures: list[str]) -> dict:
+    """Full telemetry (metrics + tracer + auditor + periodic sampling) on
+    the seeded fig4-style fleet: the ClusterReport must be byte-identical
+    to the uninstrumented run, the Prometheus dump must parse, the Chrome
+    trace must be valid JSON, every settlement must pass the live auditor
+    at 1e-9, and wall-clock overhead must stay ≤ 5%."""
+    from repro.cluster import (ClusterNode, ReactiveIdlePolicy,
+                               SLOPreemptionPolicy, TauOutPredictor,
+                               ZetaOnlinePolicy, replay_trace,
+                               simulate_cluster)
+    from repro.configs import CASE_STUDY_MODELS, TABLE1
+    from repro.core.energy_model import fit_profile
+    from repro.energy import SWING_NODE
+    from repro.obs import (EventTracer, InvariantAuditor, InvariantViolation,
+                           Telemetry)
+
+    profiles = {}
+    for name in CASE_STUDY_MODELS:
+        sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                                   kv_cache=True, noise_sigma=0.0)
+        pts = [(8, 8), (64, 64), (256, 128), (512, 512), (128, 32)]
+        pbs = [sim.simulate(a, b) for a, b in pts]
+        profiles[name] = fit_profile(
+            name, TABLE1[name]["a_k"],
+            [p[0] for p in pts], [p[1] for p in pts],
+            [pb.energy_j for pb in pbs], [pb.runtime_s for pb in pbs])
+
+    # the fig4 high-rate cell: 8 qps drives real batching and ~20
+    # preemption splits, so the auditor's split-energy path is exercised
+    # while the baseline per-event work (queue scans, batch scoring) is
+    # representative of a loaded fleet
+    queries = alpaca_like_workload(WorkloadSpec(n_queries=150, seed=7))
+    trace = replay_trace(queries, 8.0, seed=11, name="alpaca@8qps")
+
+    def run(telemetry=None):
+        nodes = [ClusterNode(i, PAPER_ZOO[name], profiles[name], SWING_NODE,
+                             max_batch=8, dvfs="per_phase")
+                 for i, name in enumerate(CASE_STUDY_MODELS)]
+        return simulate_cluster(
+            trace, nodes,
+            ZetaOnlinePolicy(tau_out_predictor=TauOutPredictor()), zeta=0.5,
+            autoscaler=ReactiveIdlePolicy(idle_timeout_s=30.0),
+            preempter=SLOPreemptionPolicy(slowdown_slo=2.0),
+            telemetry=telemetry)
+
+    def full_telemetry():
+        return Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                         sample_every_s=5.0)
+
+    # overhead first, on a clean heap (the export checks below allocate
+    # MB-scale JSON strings whose allocator churn would pollute the
+    # timing).  Interleaved best-of-N on *process* CPU time — a shared
+    # runner's wall clock measures the co-tenant, CPU time measures us —
+    # with GC paused so collection spikes don't land on one side.  On a
+    # steal-prone host even CPU time carries cache-refill noise of a few
+    # percent (an off-vs-off null comparison swings ±5%), so a miss is
+    # retried with backoff until a quiet window is found: a real
+    # regression fails every window, noise doesn't.
+    import gc
+    budget, rel = 0.05, float("inf")
+    run(); run(full_telemetry())   # warm both paths
+    for attempt in range(5):
+        if attempt:   # let a transient co-tenant burst pass before retrying
+            time.sleep(2 ** attempt)
+        reps = 5 + 3 * attempt
+        t_off = t_on = float("inf")
+        gc.collect()
+        gc.disable()
+        try:
+            for _ in range(reps):
+                start = time.process_time()
+                run()
+                t_off = min(t_off, time.process_time() - start)
+                start = time.process_time()
+                run(full_telemetry())
+                t_on = min(t_on, time.process_time() - start)
+        finally:
+            gc.enable()
+        rel = min(rel, (t_on - t_off) / t_off)
+        if rel <= budget:
+            break
+    if rel > budget:
+        failures.append(
+            f"telemetry overhead {rel:.1%} exceeds the {budget:.0%} budget")
+
+    base = run()
+    tel = full_telemetry()
+    try:
+        instr = run(tel)
+    except InvariantViolation as exc:
+        failures.append(f"live auditor tripped on a clean run: {exc}")
+        return {"auditor": "violated"}
+    byte_identical = (base.to_json(include_records=True)
+                      == instr.to_json(include_records=True))
+    if not byte_identical:
+        failures.append("telemetry-on report differs from telemetry-off")
+
+    prom = tel.prometheus_text()
+    (REPO_ROOT / "BENCH_telemetry.prom").write_text(prom)
+    try:
+        from prometheus_client.parser import text_string_to_metric_families
+        n_fams = len(list(text_string_to_metric_families(prom)))
+    except ImportError:   # minimal grammar check without the parser
+        n_fams = sum(1 for ln in prom.splitlines()
+                     if ln.startswith("# TYPE "))
+    if n_fams < 10:
+        failures.append(f"prometheus dump looks empty: {n_fams} families")
+    try:
+        chrome = json.loads(tel.tracer.to_json())
+        if not chrome["traceEvents"]:
+            failures.append("chrome trace has no events")
+    except (json.JSONDecodeError, KeyError) as exc:
+        failures.append(f"chrome trace export invalid: {exc}")
+    return {"overhead_rel": rel, "budget": budget,
+            "auditor_checks": tel.auditor.n_checks,
+            "trace_events": len(tel.tracer.events),
+            "prom_families": n_fams,
+            "report_byte_identical": byte_identical}
+
+
 def run_gates(quick: bool) -> tuple[dict, list[str]]:
     failures: list[str] = []
     out = {
@@ -508,6 +628,7 @@ def run_gates(quick: bool) -> tuple[dict, list[str]]:
         "dvfs_closed_form": gate_dvfs_closed_form(failures),
         "power_conservation": gate_power_conservation(failures),
         "preemption_split": gate_preemption_split(failures),
+        "metrics_overhead": gate_metrics_overhead(failures),
     }
     return out, failures
 

@@ -18,8 +18,16 @@
 #                            total to 1e-9, and decode-boundary preemption:
 #                            split additivity of the decode integral plus
 #                            end-to-end conservation and the replica-oracle
-#                            bound on a preempting multi-replica run);
-#                            fails on disagreement, never on wall-clock
+#                            bound on a preempting multi-replica run, and
+#                            the telemetry metrics_overhead gate: with full
+#                            telemetry on a governed fleet the ClusterReport
+#                            is byte-identical, the Prometheus dump parses,
+#                            the live auditor passes every settlement, and
+#                            instrumentation costs ≤5% CPU time — the one
+#                            timing-sensitive gate, measured min-of-N with
+#                            GC paused and retried with backoff so only a
+#                            real regression fails every window);
+#                            fails on disagreement, not on slow runners
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

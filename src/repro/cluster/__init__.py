@@ -79,25 +79,42 @@ Module map (the event model, and how the pieces plug together):
                     exactly to total energy), J/token, latency p50/p95/p99,
                     slowdown-SLO attainment, per-node utilization, and the
                     realized Eq. 2 objective used to measure the gap to
-                    the offline oracle.
+                    the offline oracle.  `from_registry` rebuilds the
+                    aggregate view from a telemetry registry — the
+                    reduction path for sharded runs.
+    ../obs/       — the observability layer (repro.obs): a Telemetry
+                    facade bundling a mergeable MetricsRegistry, an
+                    optional Chrome-trace EventTracer, and an optional
+                    live InvariantAuditor.  Pass telemetry= to
+                    simulate_cluster; hooks are read-only observers, so
+                    the ClusterReport is byte-identical on or off (the
+                    perf-suite `metrics_overhead` gate holds the cost
+                    ≤5% and the identity exact).
 
-Power-state lifecycle (driven by ClusterNode, timed by sim.py)::
+Power-state lifecycle (driven by ClusterNode, timed by sim.py).
+Telemetry hooks fire at the marked (*) edges: `on_power_begin` as a
+WAKING/GATING ramp starts, `on_power_span` as it completes, and the
+autoscaler's gate verdicts/pre-wakes via `on_gate_decision`/`on_prewake`::
 
         enqueue / next phase         idle timer + autoscaler ok
-    ACTIVE <────────────> IDLE ─────────────────────────────> GATING
+    ACTIVE <────────────> IDLE ─────────────────────────────> GATING*
        ^                   ^                                     │ gate_s
        │ wake done         │ wake done (no queued work)          v
-      (work waiting)      WAKING <─────────────────────────── GATED
+      (work waiting)      WAKING* <────────────────────────── GATED
                             on-demand (routed request) or pre-wake
 
-Request lifecycle (PREEMPTED/RESUMING added by the preemption layer)::
+Request lifecycle (PREEMPTED/RESUMING added by the preemption layer).
+Telemetry hooks: `on_arrival` at routing, `on_phase_settle` (plus the
+auditor's conservation checks) at every prefill/decode charge,
+`on_preempt_split` at a preemption settlement (auditing the split-energy
+identity), `on_completion` at DONE::
 
-              routed        joiner prefill          last token
+              routed*       joiner prefill*         last token*
     WAITING ──────────> QUEUED ─────────> DECODING ──────────> DONE
                                            │    ^
                    preempter picks victim; │    │ RESUMING: rejoins the
                    segment cut at the next │    │ active set at a phase
-                   decode step boundary    v    │ start with a free slot
+                   decode step boundary*   v    │ start with a free slot
                                           PREEMPTED (suspended: KV
                                            position intact, zero-cost
                                            resume — never re-prefilled)

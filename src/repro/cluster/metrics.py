@@ -22,6 +22,8 @@ savings from gating them).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import json
 from typing import Sequence
 
 import numpy as np
@@ -172,9 +174,21 @@ class ClusterReport:
         }
 
     # --- latency ----------------------------------------------------------
+    # The latency/slowdown vectors are materialized once per report
+    # (cached_property writes the instance __dict__ directly, so it works
+    # on a frozen dataclass); every percentile/SLO query reads the array
+    # instead of rebuilding a Python list per call.
+    @functools.cached_property
+    def _latencies(self) -> np.ndarray:
+        return np.array([r.latency_s for r in self.records], dtype=float)
+
+    @functools.cached_property
+    def _slowdowns(self) -> np.ndarray:
+        return np.array([r.slowdown for r in self.records], dtype=float)
+
     def latency_percentile(self, q: float) -> float:
-        lat = [r.latency_s for r in self.records]
-        return float(np.percentile(lat, q)) if lat else 0.0
+        lat = self._latencies
+        return float(np.percentile(lat, q)) if lat.size else 0.0
 
     @property
     def latency_p50(self) -> float:
@@ -190,8 +204,8 @@ class ClusterReport:
 
     @property
     def mean_latency_s(self) -> float:
-        lat = [r.latency_s for r in self.records]
-        return float(np.mean(lat)) if lat else 0.0
+        lat = self._latencies
+        return float(lat.mean()) if lat.size else 0.0
 
     def slo_attainment(self, *, slo_s: float | None = None,
                        slowdown: float = 3.0) -> float:
@@ -200,10 +214,102 @@ class ClusterReport:
         if not self.records:
             return 1.0
         if slo_s is not None:
-            ok = sum(r.latency_s <= slo_s for r in self.records)
+            ok = int((self._latencies <= slo_s).sum())
         else:
-            ok = sum(r.slowdown <= slowdown for r in self.records)
+            ok = int((self._slowdowns <= slowdown).sum())
         return ok / len(self.records)
+
+    # --- structured export ------------------------------------------------
+    def to_dict(self, *, include_records: bool = False) -> dict:
+        """JSON-able snapshot: run identity, totals, the four-bucket
+        energy split, latency summary, and per-node stats — what the
+        benchmarks dump instead of parsing `summary()` strings.  Request
+        records are bulky and off by default."""
+        out = {
+            "policy": self.policy,
+            "zeta": self.zeta,
+            "makespan_s": self.makespan_s,
+            "objective": self.objective,
+            "predicted_energy_j": self.predicted_energy_j,
+            "total_energy_j": self.total_energy_j,
+            "energy_breakdown_j": self.energy_breakdown(),
+            "total_tokens": self.total_tokens,
+            "j_per_token": self.j_per_token,
+            "n_requests": len(self.records),
+            "latency_s": {
+                "mean": self.mean_latency_s,
+                "p50": self.latency_p50,
+                "p95": self.latency_p95,
+                "p99": self.latency_p99,
+            },
+            "slo_attainment": self.slo_attainment(),
+            "total_wakes": self.total_wakes,
+            "total_gates": self.total_gates,
+            "total_preemptions": self.total_preemptions,
+            "total_resumes": self.total_resumes,
+            "replicas": {name: list(nids) for name, nids in self.replicas},
+            "node_stats": [dataclasses.asdict(s) for s in self.node_stats],
+        }
+        if include_records:
+            out["records"] = [dataclasses.asdict(r) for r in self.records]
+        return out
+
+    def to_json(self, *, include_records: bool = False) -> str:
+        return json.dumps(self.to_dict(include_records=include_records),
+                          sort_keys=True)
+
+    @classmethod
+    def from_registry(cls, registry) -> "ClusterReport":
+        """Rebuild the aggregate report view from a telemetry registry
+        (the end-of-run gauges `Telemetry.finalize` writes).  This is the
+        reduction path the actor-sharded simulator will use: per-partition
+        registries merge (`MetricsRegistry.merged`), then one report is
+        read off the merged registry.  Per-request `records` and the
+        replica registry are not representable as metrics, so they come
+        back empty — totals, buckets and node stats are exact."""
+        if "sim_run_info" not in registry:
+            raise ValueError(
+                "registry has no sim_run_info — was Telemetry.finalize run?")
+        (policy_key, _), = registry["sim_run_info"].sorted_children()
+        served_fam = registry["sim_node_served"]
+        stats = []
+        for (nid_s, model), child in served_fam.sorted_children():
+            nid = int(nid_s)
+            e = {b: registry.value("sim_node_energy_joules", nid, b)
+                 for b in ("busy", "idle", "gated", "transition")}
+            s = {b: registry.value("sim_node_seconds", nid, b)
+                 for b in ("busy", "idle", "gated", "transition")}
+            stats.append(NodeStats(
+                node_id=nid,
+                model=model,
+                n_served=int(child.value),
+                busy_s=s["busy"],
+                busy_energy_j=e["busy"],
+                idle_energy_j=e["idle"],
+                utilization=registry.value("sim_node_utilization",
+                                           nid, model),
+                idle_s=s["idle"],
+                gated_s=s["gated"],
+                gated_energy_j=e["gated"],
+                transition_s=s["transition"],
+                transition_energy_j=e["transition"],
+                horizon_s=registry.value("sim_node_horizon_seconds", nid),
+                n_wakes=int(registry.value("sim_node_wakes", nid)),
+                n_gates=int(registry.value("sim_node_gates", nid)),
+                n_preemptions=int(registry.value("sim_node_preemptions",
+                                                 nid)),
+                n_resumes=int(registry.value("sim_node_resumes", nid)),
+            ))
+        stats.sort(key=lambda st: st.node_id)
+        return cls(
+            policy=policy_key[0],
+            zeta=registry.value("sim_zeta"),
+            records=(),
+            node_stats=tuple(stats),
+            makespan_s=registry.value("sim_makespan_seconds"),
+            objective=registry.value("sim_objective"),
+            predicted_energy_j=registry.value("sim_predicted_energy_joules"),
+        )
 
     # --- display ----------------------------------------------------------
     def summary(self) -> str:
@@ -247,7 +353,7 @@ def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
             horizon_s=n.horizon_s,
             n_wakes=n.n_wakes,
             n_gates=n.n_gates,
-            n_preemptions=getattr(n, "n_preemptions", 0),
-            n_resumes=getattr(n, "n_resumes", 0),
+            n_preemptions=n.n_preemptions,
+            n_resumes=n.n_resumes,
         ))
     return tuple(out)

@@ -122,6 +122,7 @@ class ClusterNode:
         power: PowerConfig | None = None,
         dvfs: str = "off",         # "off" (pinned freq_scale) | "per_phase"
         freq_scale: float = 1.0,   # fixed operating point when dvfs="off"
+        telemetry=None,            # repro.obs.Telemetry (sim.py also sets it)
     ):
         if dvfs not in ("off", "per_phase"):
             raise ValueError(f"dvfs must be 'off' or 'per_phase', got {dvfs!r}")
@@ -132,6 +133,7 @@ class ClusterNode:
         self.power = power if power is not None else PowerConfig()
         self.dvfs = dvfs
         self.freq_scale = freq_scale
+        self.telemetry = telemetry
         self.sim = AnalyticLLMSimulator(
             model_cfg, hardware, batch=1, kv_cache=kv_cache,
             noise_sigma=0.0, decode_chunk=decode_chunk)
@@ -321,12 +323,17 @@ class ClusterNode:
         self._set_state(WAKING, now)
         self.transition_energy_j += self.power.wake_j
         self.n_wakes += 1
+        if self.telemetry is not None:
+            self.telemetry.on_power_begin(self, "wake", now)
         return now + self.power.wake_s
 
     def on_wake_end(self, now: float) -> tuple[str, float] | None:
         """Node is powered again: serve whatever queued during the wake."""
         assert self._pstate == WAKING, f"wake ended in {self._pstate}"
+        span_start = self._pstate_since
         self._set_state(IDLE, now)
+        if self.telemetry is not None:
+            self.telemetry.on_power_span(self, "wake", span_start, now)
         return self._phase_event(self._start_phase(now))
 
     def begin_gate(self, now: float) -> tuple[str, float]:
@@ -336,11 +343,16 @@ class ClusterNode:
         self._set_state(GATING, now)
         self.transition_energy_j += self.power.gate_j
         self.n_gates += 1
+        if self.telemetry is not None:
+            self.telemetry.on_power_begin(self, "gate", now)
         return (_GATE, now + self.power.gate_s)
 
     def on_gate_end(self, now: float) -> tuple[str, float] | None:
         assert self._pstate == GATING, f"gate ended in {self._pstate}"
+        span_start = self._pstate_since
         self._set_state(GATED, now)
+        if self.telemetry is not None:
+            self.telemetry.on_power_span(self, "gate", span_start, now)
         if self.waiting:   # something arrived mid-ramp: wake right back up
             return (_WAKE, self.begin_wake(now))
         return None
@@ -350,15 +362,19 @@ class ClusterNode:
     def _phase_event(end_s: float | None) -> tuple[str, float] | None:
         return None if end_s is None else (_PHASE, end_s)
 
-    def _charge(self, members: list[_InFlight], t: float, e_accel: float) -> None:
+    def _charge(self, members: list[_InFlight], t: float, e_accel: float, *,
+                kind: str, start_s: float, scale: float) -> None:
         e_total = e_accel + self.sim.host_power_w * t
         self.busy_s += t
         self.busy_energy_j += e_total
         share = e_total / len(members)
         for m in members:
             m.energy_j += share
+        if self.telemetry is not None:
+            self.telemetry.on_phase_settle(self, kind, start_s, t, e_total,
+                                           len(members), scale)
 
-    def _prefill(self, tau_in: int, batch: int) -> tuple[float, float]:
+    def _prefill(self, tau_in: int, batch: int) -> tuple[float, float, float]:
         if self.dvfs == "per_phase":
             s, t, e = self.sim.best_prefill_frequency(
                 tau_in, batch=batch, extra_w=self.sim.host_power_w)
@@ -366,7 +382,7 @@ class ClusterNode:
             s = self.freq_scale
             t, e = self.sim.prefill_cost(tau_in, batch=batch, freq_scale=s)
         self.freq_choices[("prefill", s)] += 1
-        return t, e
+        return s, t, e
 
     def _decode(self, base: int, n_steps: int, batch: int
                 ) -> tuple[float, float, float]:
@@ -401,14 +417,16 @@ class ClusterNode:
         if joiners:
             # (joiner) prefill for as many waiting requests as fit
             members = [_InFlight(r, start_s=now) for r in joiners]
-            t, e = self._prefill(max(r.tau_in for r in joiners), len(joiners))
+            s, t, e = self._prefill(max(r.tau_in for r in joiners),
+                                    len(joiners))
             self._set_state(ACTIVE, now)
-            self._charge(members, t, e)
+            self._charge(members, t, e, kind="prefill", start_s=now, scale=s)
             self.active.extend(members)
             self._phase_members = members
             self._phase_steps = 0
             self._phase_kind = "prefill"
             self._phase_start_s = now
+            self._phase_scale = s
             self._phase_end_s = now + t
             return self._phase_end_s
         if self.active:
@@ -444,7 +462,9 @@ class ClusterNode:
         phase event or None if the node went idle)."""
         assert self._phase_end_s is not None
         if self._phase_kind == "decode":   # settle the deferred charge
-            self._charge(self._phase_members, self._phase_t, self._phase_e)
+            self._charge(self._phase_members, self._phase_t, self._phase_e,
+                         kind="decode", start_s=self._phase_start_s,
+                         scale=self._phase_scale)
         done: list[Completion] = []
         for m in self._phase_members:
             m.generated += self._phase_steps
@@ -525,7 +545,12 @@ class ClusterNode:
         t_done, e_done = self.sim.decode_cost(
             self._phase_base, n_done, batch=len(self._phase_members),
             freq_scale=self._phase_scale)
-        self._charge(self._phase_members, t_done, e_done)
+        self._charge(self._phase_members, t_done, e_done, kind="decode",
+                     start_s=self._phase_start_s, scale=self._phase_scale)
+        if self.telemetry is not None:
+            self.telemetry.on_preempt_split(
+                self, self._phase_base, n_done, self._phase_steps,
+                len(self._phase_members), self._phase_scale)
         for m in self._phase_members:
             m.generated += n_done
         # n_done < n_steps = min remaining, so nobody can have completed

@@ -75,6 +75,7 @@ def unique_profiles(nodes: Sequence) -> list[LLMProfile]:
 
 class RoutingPolicy:
     name = "base"
+    telemetry = None   # repro.obs.Telemetry, set per-run by simulate_cluster
 
     def attach(self, nodes: Sequence, trace: ArrivalTrace, zeta: float) -> None:
         pass
@@ -161,6 +162,16 @@ class _TauOutMixin:
 
     def observe_completion(self, record, now):
         if self.predictor is not None:
+            if self.telemetry is not None:
+                # pre-update prediction vs truth: the error the router
+                # actually acted on when it placed this request (peek is
+                # O(1); None when no arrival priced this model since the
+                # last observation, in which case there is no acted-on
+                # prediction to score)
+                pred = self.predictor.peek(record.model)
+                if pred is not None:
+                    self.telemetry.on_prediction_error(
+                        self.name, record.model, pred, record.tau_out)
             self.predictor.observe(record.model, record.tau_out)
 
 
@@ -436,6 +447,7 @@ class PreemptionPolicy:
     without a preempter."""
 
     name = "no_preemption"
+    telemetry = None   # repro.obs.Telemetry, set per-run by simulate_cluster
 
     def attach(self, nodes: Sequence, trace: ArrivalTrace, zeta: float) -> None:
         self.zeta = zeta

@@ -101,6 +101,7 @@ class AutoscalePolicy:
     """Base autoscaler: never gates (the PR 1 always-on fleet)."""
 
     name = "always_on"
+    telemetry = None   # repro.obs.Telemetry, set per-run by simulate_cluster
 
     def attach(self, nodes: Sequence) -> None:
         self.nodes = list(nodes)

@@ -80,6 +80,13 @@ class TauOutPredictor:
         self._cache[model] = out
         return out
 
+    def peek(self, model: str | None = None) -> float | None:
+        """The memoized prediction for `model`, if one was computed since
+        the last observation — O(1), no quantile work.  Telemetry uses
+        this to report the error of predictions the router actually acted
+        on without adding quantile computations to the completion path."""
+        return self._cache.get(model)
+
     def reset(self) -> None:
         self._per_model.clear()
         self._pooled.clear()

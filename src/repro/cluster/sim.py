@@ -36,6 +36,14 @@ feedback — the only causal channel through which a non-oracle router may
 learn output lengths), `autoscaler.on_completion` (service-time feedback
 for predictive fleet sizing), and `preempter.observe_completion` (the
 same τout channel for a predictor-equipped preemption policy).
+
+Observability (`telemetry=`, a repro.obs.Telemetry): the loop reports
+arrivals/routing picks, preemption and autoscaler decisions, completions,
+and — when `sample_every_s` is set — periodic queue-depth / batch /
+bucket-energy samples; the nodes report phase settlements and power
+transitions directly (repro.cluster.node).  Hooks are read-only: the
+returned ClusterReport is byte-identical with telemetry on or off (the
+perf-suite `metrics_overhead` gate pins both that and ≤5% overhead).
 """
 
 from __future__ import annotations
@@ -71,6 +79,7 @@ def simulate_cluster(
     zeta: float = 0.5,
     autoscaler: AutoscalePolicy | None = None,
     preempter: PreemptionPolicy | None = None,
+    telemetry=None,
 ) -> ClusterReport:
     """Serve the whole trace; returns the aggregate ClusterReport."""
     if not nodes:
@@ -84,6 +93,19 @@ def simulate_cluster(
         autoscaler.attach(nodes)
     if preempter is not None:
         preempter.attach(nodes, trace, zeta)
+    # telemetry is per-run; assign unconditionally so reused nodes/policies
+    # never carry a stale reference from a previous instrumented run
+    for n in nodes:
+        n.telemetry = telemetry
+    policy.telemetry = telemetry
+    if autoscaler is not None:
+        autoscaler.telemetry = telemetry
+    if preempter is not None:
+        preempter.telemetry = telemetry
+    if telemetry is not None:
+        telemetry.attach(nodes, policy, trace, zeta)
+    sample_every = telemetry.sample_every_s if telemetry is not None else None
+    next_sample = 0.0
 
     events: list[tuple[float, int, int, object]] = []
     seq = 0
@@ -123,23 +145,39 @@ def simulate_cluster(
 
     while events:
         now, _, kind, payload = heapq.heappop(events)
+        if sample_every is not None:
+            # sample fleet state as of the previous event, stamped on the
+            # period grid, before this event mutates it
+            while next_sample <= now:
+                telemetry.sample(nodes, next_sample)
+                next_sample += sample_every
         if kind == _ARRIVAL:
             req = payload
             arrivals_left -= 1
             if autoscaler is not None:
+                prewoken = 0
                 for nid in autoscaler.on_arrival(req, nodes, now):
                     node = by_id[nid]
                     if node.power_state == GATED:   # proactive pre-wake
                         push(node, ("wake", node.begin_wake(now)))
+                        prewoken += 1
+                if telemetry is not None:
+                    telemetry.on_prewake(autoscaler.name, prewoken)
             nid = policy.select(req, nodes, now)
             if nid not in by_id:
                 raise ValueError(f"{policy.name} routed to unknown node {nid}")
             node = by_id[nid]
+            if telemetry is not None:
+                telemetry.on_arrival(req, policy.name, nid, node.model_name,
+                                     now)
             push(node, node.enqueue(req, now))
             if preempter is not None:
                 # the arrival is queued; the preempter may cut the routed
                 # node's decode segment to make room for it at the boundary
                 victim = preempter.consider(req, node, nodes, now)
+                if telemetry is not None:
+                    telemetry.on_preempt_decision(preempter.name,
+                                                  victim is not None)
                 if victim is not None:
                     push(node, node.preempt_decode(victim, now))
         elif kind == _PHASE_END:
@@ -168,6 +206,8 @@ def simulate_cluster(
                     autoscaler.on_completion(rec, now)
                 if preempter is not None:
                     preempter.observe_completion(rec, now)
+                if telemetry is not None:
+                    telemetry.on_completion(rec, now)
                 records.append(rec)
             push(node, next_ev)
             if next_ev is None:
@@ -197,7 +237,10 @@ def simulate_cluster(
                     and node.power_state_since == token
                     and node.can_gate
                     and autoscaler is not None):
-                if autoscaler.should_gate(node, now):
+                gate = autoscaler.should_gate(node, now)
+                if telemetry is not None:
+                    telemetry.on_gate_decision(autoscaler.name, gate)
+                if gate:
                     push(node, node.begin_gate(now))
                 elif arrivals_left > 0:
                     # declined (e.g. min_awake bound): re-check later — a
@@ -225,7 +268,7 @@ def simulate_cluster(
     predicted = sum(float(prof_of[r.model].energy(r.tau_in, r.tau_out))
                     for r in records)
 
-    return ClusterReport(
+    report = ClusterReport(
         policy=policy.name,
         zeta=zeta,
         records=tuple(records),
@@ -235,6 +278,9 @@ def simulate_cluster(
         predicted_energy_j=predicted,
         replicas=tuple((name, tuple(nids)) for name, nids in replicas.items()),
     )
+    if telemetry is not None:
+        telemetry.finalize(nodes, report)
+    return report
 
 
 def fresh_nodes(builders: Sequence) -> list[ClusterNode]:

@@ -1,0 +1,200 @@
+"""Live invariant auditing: conservation contracts checked as they accrue.
+
+The repo's two core accounting contracts — the four-bucket
+busy/idle/gated/transition energy partition and the split-energy
+preemption settlement — were previously gated only at *report* time (perf
+suite, tests).  The auditor checks them **incrementally at every
+settlement event**, so a violation surfaces at the first settle that
+breaks the books, with the recent event context attached, instead of as
+an end-of-run aggregate mismatch thousands of events later.
+
+What is re-derived independently (never read back from the quantity it
+checks):
+
+  * busy bucket    — the auditor accumulates its own Σ(t, e) over the
+    settlement stream and compares against the node's busy_s /
+    busy_energy_j after every settle;
+  * time partition — after a settle of phase [start, start+t], every
+    node second through start+t is accounted: busy_s + idle_s + gated_s
+    + transition_s == start + t (prefill charges at phase start, decode
+    at settle — both close the books exactly at the segment end);
+  * idle / gated / transition buckets — recomputed from first
+    principles: idle_s·idle_power_w, gated_s·gated_w, and
+    transition_s·transition_w + wakes·wake_j + gates·gate_j (the only
+    closed forms those buckets may follow);
+  * split-energy contract — at a preemption settlement, the truncated
+    charge must equal decode_cost(base, n_done) and the two halves must
+    sum to the unpreempted decode_cost(base, n_total), both to `tol`
+    (the closed-form additivity identity the perf suite gates).
+
+`on_finalize` re-checks the fleet-level books (per-request attributed
+energy == Σ busy buckets; horizon == accounted seconds) once the report
+exists.  All checks raise :class:`InvariantViolation` with the last few
+audited events formatted into the message."""
+
+from __future__ import annotations
+
+from collections import deque
+
+
+class InvariantViolation(AssertionError):
+    """An accounting contract broke; the message carries event context."""
+
+
+class InvariantAuditor:
+    """Incremental checker for the cluster accounting contracts.
+
+    One auditor per simulation run (it accumulates per-node settlement
+    totals).  `tol` is the relative tolerance of every check (default the
+    repo-wide 1e-9 conservation class)."""
+
+    def __init__(self, tol: float = 1e-9, *, context_events: int = 16):
+        if tol <= 0:
+            raise ValueError("tol must be > 0")
+        self.tol = tol
+        self.n_checks = 0
+        self._busy_t: dict[int, float] = {}
+        self._busy_e: dict[int, float] = {}
+        self._last_settle: dict[int, tuple[str, float, float, float]] = {}
+        self._context: deque = deque(maxlen=context_events)
+        # per-node power constants (idle_w, gated_w, transition_w, wake_j,
+        # gate_j), cached on first settle — they are fixed for a node's
+        # lifetime and the closed-form re-derivation reads them every event
+        self._const: dict[int, tuple[float, float, float, float, float]] = {}
+        # last-verified off-phase book signature per node: consecutive busy
+        # settles leave the idle/gated/transition buckets untouched, so the
+        # closed-form re-check can skip until the books actually move
+        self._off_sig: dict[int, tuple] = {}
+
+    # --- helpers ------------------------------------------------------
+    def _close(self, a: float, b: float) -> bool:
+        return abs(a - b) <= self.tol * max(1.0, abs(a), abs(b))
+
+    def _fail(self, what: str) -> None:
+        ctx = "\n  ".join(
+            c if isinstance(c, str) else " ".join(map(str, c))
+            for c in self._context) or "(no prior events)"
+        raise InvariantViolation(
+            f"{what}\nrecent audited events:\n  {ctx}")
+
+    def note(self, desc) -> None:
+        """Fold an event description into the context ring buffer: a
+        string, or a flat tuple of fields formatted lazily — the hot
+        settlement path stores tuples so no string work happens unless a
+        check actually fails."""
+        self._context.append(desc)
+
+    # --- settlement-time checks ---------------------------------------
+    def on_settle(self, node, kind: str, start_s: float, t: float,
+                  e_total: float) -> None:
+        """Audit one phase settlement (prefill charge at phase start,
+        decode charge at segment end or preemption boundary)."""
+        nid = node.node_id
+        self._context.append(("settle", nid, kind, "start", start_s,
+                              "t", t, "e", e_total))
+        self._busy_t[nid] = bt = self._busy_t.get(nid, 0.0) + t
+        self._busy_e[nid] = be = self._busy_e.get(nid, 0.0) + e_total
+        self._last_settle[nid] = (kind, start_s, t, e_total)
+        self.n_checks += 1
+        # inlined `_close` — this path runs at every settlement
+        tol, nb, ne = self.tol, node.busy_s, node.busy_energy_j
+        if abs(bt - nb) > tol * max(1.0, abs(bt), abs(nb)):
+            self._fail(f"busy-time drift on node {nid}: settlements sum to "
+                       f"{bt!r} s but node.busy_s == {nb!r}")
+        if abs(be - ne) > tol * max(1.0, abs(be), abs(ne)):
+            self._fail(f"busy-energy drift on node {nid}: settlements sum "
+                       f"to {be!r} J but node.busy_energy_j == {ne!r}")
+        # the time partition: every second through this settle's segment
+        # end lands in exactly one bucket
+        end_s = start_s + t
+        acc = node.accounted_s
+        if abs(acc - end_s) > tol * max(1.0, abs(acc), abs(end_s)):
+            self._fail(f"time-partition violation on node {nid} at "
+                       f"{kind} settle: accounted_s == {acc!r} but the "
+                       f"settled segment ends at {end_s!r}")
+        # off-phase books only move on power transitions; skip the
+        # closed-form re-derivation while the signature is unchanged
+        sig = (node.idle_s, node.idle_energy_j, node.gated_s,
+               node.gated_energy_j, node.transition_s,
+               node.transition_energy_j, node.n_wakes, node.n_gates)
+        if self._off_sig.get(nid) != sig:
+            self._check_offphase_buckets(node)
+            self._off_sig[nid] = sig
+
+    def _check_offphase_buckets(self, node) -> None:
+        """idle/gated/transition energies must follow their closed forms —
+        catches double-charging (e.g. gated seconds billed as idle)."""
+        nid = node.node_id
+        cst = self._const.get(nid)
+        if cst is None:
+            cst = self._const[nid] = (
+                node.idle_power_w, node.power.gated_w,
+                node.transition_power_w, node.power.wake_j,
+                node.power.gate_j)
+        idle_w, gated_w, trans_w, wake_j, gate_j = cst
+        if not self._close(node.idle_energy_j, node.idle_s * idle_w):
+            self._fail(f"idle bucket off closed form on node {nid}: "
+                       f"{node.idle_energy_j!r} J over {node.idle_s!r} s "
+                       f"at {idle_w!r} W")
+        if not self._close(node.gated_energy_j, node.gated_s * gated_w):
+            self._fail(f"gated bucket off closed form on node {nid}: "
+                       f"{node.gated_energy_j!r} J over {node.gated_s!r} s "
+                       f"at {gated_w!r} W")
+        expect_trans = (node.transition_s * trans_w
+                        + node.n_wakes * wake_j + node.n_gates * gate_j)
+        if not self._close(node.transition_energy_j, expect_trans):
+            self._fail(f"transition bucket off closed form on node {nid}: "
+                       f"{node.transition_energy_j!r} J vs expected "
+                       f"{expect_trans!r}")
+
+    def on_preempt_split(self, node, base: int, n_done: int, n_total: int,
+                         batch: int, scale: float) -> None:
+        """Audit the split-energy preemption contract right after the
+        truncated segment settled: the charge must equal the closed-form
+        integral over [0, n_done), and the two halves of the split must
+        sum to the unpreempted decode_cost."""
+        nid = node.node_id
+        self.note(("preempt-split", nid, "base", base, "n_done", n_done,
+                   "n_total", n_total, "batch", batch, "scale", scale))
+        self.n_checks += 1
+        last = self._last_settle.get(nid)
+        if last is None:
+            self._fail(f"preemption settled on node {nid} with no prior "
+                       f"settlement event")
+        _, _, t_charged, e_charged = last
+        t1, e1 = node.sim.decode_cost(base, n_done, batch=batch,
+                                      freq_scale=scale)
+        e1_total = e1 + node.sim.host_power_w * t1
+        if not (self._close(t_charged, t1)
+                and self._close(e_charged, e1_total)):
+            self._fail(
+                f"preemption charge mismatch on node {nid}: settled "
+                f"(t={t_charged!r}, e={e_charged!r}) but decode_cost"
+                f"({base}, {n_done}) gives (t={t1!r}, e={e1_total!r})")
+        t2, e2 = node.sim.decode_cost(base + n_done, n_total - n_done,
+                                      batch=batch, freq_scale=scale)
+        tf, ef = node.sim.decode_cost(base, n_total, batch=batch,
+                                      freq_scale=scale)
+        if not (self._close(t1 + t2, tf) and self._close(e1 + e2, ef)):
+            self._fail(
+                f"split-energy contract violated on node {nid}: "
+                f"decode_cost({base},{n_done}) + decode_cost"
+                f"({base + n_done},{n_total - n_done}) != decode_cost"
+                f"({base},{n_total}): t {t1 + t2!r} vs {tf!r}, "
+                f"e {e1 + e2!r} vs {ef!r}")
+
+    # --- end-of-run checks --------------------------------------------
+    def on_finalize(self, nodes, report) -> None:
+        """Close the audit: fleet-level conservation against the report."""
+        self.n_checks += 1
+        for n in nodes:
+            if not self._close(n.accounted_s, n.horizon_s):
+                self._fail(f"node {n.node_id} horizon not partitioned: "
+                           f"accounted {n.accounted_s!r} s of "
+                           f"{n.horizon_s!r} s")
+            self._check_offphase_buckets(n)
+        attributed = sum(r.energy_j for r in report.records)
+        busy = sum(s.busy_energy_j for s in report.node_stats)
+        if report.records and not self._close(attributed, busy):
+            self._fail(f"attributed per-request energy {attributed!r} J "
+                       f"does not sum to the fleet busy bucket {busy!r} J")

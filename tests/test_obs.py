@@ -1,0 +1,499 @@
+"""Observability subsystem: histogram quantile error bounds, registry
+merge algebra, tracer determinism, live invariant auditing, and the
+telemetry-on == telemetry-off report identity."""
+
+import json
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterNode,
+    SLOPreemptionPolicy,
+    ReactiveIdlePolicy,
+    ZetaOnlinePolicy,
+    poisson_trace,
+    simulate_cluster,
+)
+from repro.configs import PAPER_ZOO, TABLE1
+from repro.core.energy_model import fit_profile
+from repro.energy import AnalyticLLMSimulator, SWING_NODE
+from repro.obs import (
+    EventTracer,
+    Histogram,
+    InvariantAuditor,
+    InvariantViolation,
+    MetricsRegistry,
+    Telemetry,
+)
+from repro.obs.metrics import DEFAULT_BASE
+
+
+def make_profile(name):
+    sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                               kv_cache=True, noise_sigma=0.0)
+    pts = [(8, 8), (64, 64), (256, 128), (512, 512), (128, 32)]
+    pbs = [sim.simulate(a, b) for a, b in pts]
+    return fit_profile(name, TABLE1[name]["a_k"],
+                       [p[0] for p in pts], [p[1] for p in pts],
+                       [pb.energy_j for pb in pbs],
+                       [pb.runtime_s for pb in pbs])
+
+
+FLEET = ("llama2-7b", "llama2-13b")
+PROFILES = {name: make_profile(name) for name in FLEET}
+
+
+def fresh_nodes(max_batch=4, **kw):
+    return [ClusterNode(i, PAPER_ZOO[name], PROFILES[name], SWING_NODE,
+                        max_batch=max_batch, **kw)
+            for i, name in enumerate(FLEET)]
+
+
+def governed_run(telemetry=None, n=60, rate=4.0):
+    """A seeded run exercising batching, DVFS, gating and preemption."""
+    return simulate_cluster(
+        poisson_trace(n, rate, seed=5),
+        fresh_nodes(dvfs="per_phase"),
+        ZetaOnlinePolicy(),
+        zeta=0.5,
+        autoscaler=ReactiveIdlePolicy(idle_timeout_s=20.0),
+        preempter=SLOPreemptionPolicy(slowdown_slo=2.0),
+        telemetry=telemetry,
+    )
+
+
+# ---------------------------------------------------------------------------
+# histogram quantile error bounds
+# ---------------------------------------------------------------------------
+
+def exact_rank_value(values, q):
+    """The value the histogram's rank rule targets: the first sorted
+    sample whose cumulative count reaches q * n."""
+    s = np.sort(values)
+    k = max(1, math.ceil(q * len(s) - 1e-12))
+    return float(s[k - 1])
+
+
+ADVERSARIAL = {
+    # 9 orders of magnitude, log-uniform: every bucket sparsely hit
+    "log_uniform": 10.0 ** np.random.default_rng(0).uniform(-4, 5, 4000),
+    # heavy tail: p99 dominated by few huge samples
+    "pareto": (np.random.default_rng(1).pareto(1.1, 4000) + 1e-3),
+    # near-degenerate: all mass inside one bucket
+    "constant": np.full(1000, 3.7),
+    # exactly on bucket edges (the -1e-12 guard's worst case)
+    "edges": DEFAULT_BASE ** np.arange(-40, 40).astype(float),
+    # bimodal with a 6-decade gap between modes
+    "bimodal": np.concatenate([
+        np.random.default_rng(2).normal(1e-5, 1e-6, 2000).clip(1e-7),
+        np.random.default_rng(3).normal(50.0, 5.0, 2000).clip(1.0)]),
+    # zeros mixed in (queue_s of immediately-served requests)
+    "with_zeros": np.concatenate([
+        np.zeros(500), np.random.default_rng(4).exponential(2.0, 1500)]),
+}
+
+
+class TestHistogramQuantiles:
+
+    @pytest.mark.parametrize("name", sorted(ADVERSARIAL))
+    @pytest.mark.parametrize("q", [0.01, 0.5, 0.9, 0.95, 0.99, 1.0])
+    def test_within_one_bucket_of_exact(self, name, q):
+        values = ADVERSARIAL[name]
+        h = Histogram()
+        for v in values:
+            h.observe(v)
+        est = h.quantile(q)
+        exact = exact_rank_value(values, q)
+        if exact <= 0.0:
+            assert est == 0.0
+        else:
+            # upper bucket edge, clamped to the observed range: never
+            # below the exact rank value, never more than a factor of
+            # `base` above it
+            assert exact * (1 - 1e-9) <= est <= exact * h.base * (1 + 1e-9), \
+                f"{name} q={q}: est={est} exact={exact}"
+
+    def test_p100_is_exact_max(self):
+        values = ADVERSARIAL["pareto"]
+        h = Histogram()
+        for v in values:
+            h.observe(v)
+        assert h.quantile(1.0) == pytest.approx(float(values.max()))
+        assert h.min == pytest.approx(float(values.min()))
+        assert h.sum == pytest.approx(float(values.sum()), rel=1e-9)
+
+    def test_bounded_memory(self):
+        h = Histogram()
+        for v in ADVERSARIAL["log_uniform"]:
+            h.observe(v)
+        # 9 decades at ~8 buckets/octave: a few hundred buckets, not 4000
+        assert len(h.counts) < 300
+        assert h.count == 4000
+
+    def test_merge_equals_single_stream(self):
+        values = ADVERSARIAL["bimodal"]
+        whole = Histogram()
+        parts = [Histogram() for _ in range(3)]
+        for i, v in enumerate(values):
+            whole.observe(v)
+            parts[i % 3].observe(v)
+        merged = Histogram()
+        for p in parts:
+            merged.merge_from(p)
+        assert merged.counts == whole.counts
+        assert merged.count == whole.count
+        assert merged.sum == pytest.approx(whole.sum)
+        assert merged.min == whole.min and merged.max == whole.max
+        for q in (0.5, 0.95, 0.99):
+            assert merged.quantile(q) == whole.quantile(q)
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError):
+            Histogram(base=1.0)
+        h = Histogram()
+        with pytest.raises(ValueError):
+            h.quantile(1.5)
+        with pytest.raises(ValueError):
+            h.merge_from(Histogram(base=4.0))
+        assert h.quantile(0.5) == 0.0  # empty
+
+
+# ---------------------------------------------------------------------------
+# registry merge algebra
+# ---------------------------------------------------------------------------
+
+def populated_registry(seed):
+    """A registry shard with overlapping and disjoint children, all three
+    primitive kinds, both gauge merge rules."""
+    # integer-valued observations: integer float sums are exact under any
+    # addition order, so merge-order invariance can be asserted on bytes
+    # (float-valued metrics agree only to ulps across orders)
+    rng = np.random.default_rng(seed)
+    r = MetricsRegistry()
+    c = r.counter("events_total", "events", ("node", "kind"))
+    g = r.gauge("depth", "queue depth", ("node",))
+    hw = r.gauge("high_water", "max depth seen", ("node",), merge="max")
+    h = r.histogram("latency_seconds", "latency", ("model",))
+    for _ in range(200):
+        c.labels(int(rng.integers(0, 3)),
+                 ("a", "b")[int(rng.integers(0, 2))]).inc()
+        g.labels(int(rng.integers(0, 3))).inc(float(rng.integers(0, 4)))
+        hw.labels(int(rng.integers(0, 3))).set(float(rng.integers(0, 9)))
+        h.labels(("m1", "m2")[int(rng.integers(0, 2))]).observe(
+            float(rng.integers(1, 1_000_000)))
+    # a family only this shard has
+    r.counter(f"shard_{seed}_total").get().inc(seed)
+    return r
+
+
+class TestRegistryMerge:
+
+    def test_merge_associative_and_commutative(self):
+        def text(order):
+            regs = [populated_registry(s) for s in order]
+            return MetricsRegistry.merged(regs).prometheus_text()
+
+        baseline = text([1, 2, 3])
+        assert baseline == text([3, 1, 2])
+        assert baseline == text([2, 3, 1])
+        # associativity: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        a, b, c = (populated_registry(s) for s in (1, 2, 3))
+        left = a.merge(b).merge(c)
+        a2, b2, c2 = (populated_registry(s) for s in (1, 2, 3))
+        right = a2.merge(b2.merge(c2))
+        assert left.prometheus_text() == right.prometheus_text()
+        assert left.prometheus_text() == baseline
+
+    def test_gauge_max_merge(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.gauge("hw", merge="max").get().set(3.0)
+        b.gauge("hw", merge="max").get().set(7.0)
+        assert a.merge(b).value("hw") == 7.0
+
+    def test_schema_mismatch_rejected(self):
+        r = MetricsRegistry()
+        r.counter("x_total", labelnames=("node",))
+        with pytest.raises(ValueError):
+            r.gauge("x_total", labelnames=("node",))
+        other = MetricsRegistry()
+        other.counter("x_total", labelnames=("node", "model"))
+        with pytest.raises(ValueError):
+            r.merge(other)
+
+    def test_prometheus_text_parses(self):
+        prom = pytest.importorskip("prometheus_client.parser")
+        text = MetricsRegistry.merged(
+            [populated_registry(s) for s in (1, 2)]).prometheus_text()
+        families = list(prom.text_string_to_metric_families(text))
+        # prometheus_client strips the _total suffix from counter names
+        names = {f.name for f in families}
+        assert "events" in names and "latency_seconds" in names
+        hist = next(f for f in families if f.name == "latency_seconds")
+        # cumulative bucket counts must be monotone and end at count
+        by_model = {}
+        for s in hist.samples:
+            if s.name.endswith("_bucket"):
+                by_model.setdefault(s.labels["model"], []).append(s.value)
+        for counts in by_model.values():
+            assert counts == sorted(counts)
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+
+    def test_seeded_runs_trace_identically(self):
+        outputs = []
+        for _ in range(2):
+            tel = Telemetry(tracer=EventTracer(), sample_every_s=10.0)
+            governed_run(tel)
+            outputs.append((tel.tracer.to_json(),
+                            tel.registry.prometheus_text()))
+        assert outputs[0][0] == outputs[1][0]
+        assert outputs[0][1] == outputs[1][1]
+        assert len(json.loads(outputs[0][0])["traceEvents"]) > 50
+
+    def test_chrome_trace_shape(self):
+        tel = Telemetry(tracer=EventTracer(), sample_every_s=10.0)
+        governed_run(tel)
+        doc = json.loads(tel.tracer.to_json())
+        assert doc["otherData"]["dropped_events"] == 0
+        events = doc["traceEvents"]
+        phs = {e["ph"] for e in events}
+        assert {"M", "X", "i", "C"} <= phs
+        for e in events:
+            assert {"ph", "name", "pid", "tid"} <= e.keys()
+            if e["ph"] == "X":
+                assert e["dur"] >= 0 and e["ts"] >= 0
+        names = {e["args"]["name"] for e in events if e["ph"] == "M"}
+        assert "cluster" in names and any("node0" in n for n in names)
+
+    def test_max_events_cap_counts_drops(self):
+        tr = EventTracer(max_events=5)
+        for i in range(9):
+            tr.instant("e", float(i))
+        assert len(tr) == 5 and tr.dropped == 4
+        assert json.loads(tr.to_json())["otherData"]["dropped_events"] == 4
+        with pytest.raises(ValueError):
+            EventTracer(max_events=0)
+
+
+# ---------------------------------------------------------------------------
+# invariant auditor
+# ---------------------------------------------------------------------------
+
+def fake_node(nid=0, busy_s=0.0, busy_e=0.0, accounted=0.0):
+    return SimpleNamespace(
+        node_id=nid, busy_s=busy_s, busy_energy_j=busy_e,
+        accounted_s=accounted, idle_s=0.0, idle_energy_j=0.0,
+        gated_s=0.0, gated_energy_j=0.0, transition_s=0.0,
+        transition_energy_j=0.0, n_wakes=0, n_gates=0,
+        idle_power_w=100.0, transition_power_w=150.0,
+        power=SimpleNamespace(gated_w=10.0, wake_j=50.0, gate_j=20.0))
+
+
+class TestAuditorUnit:
+
+    def test_consistent_settle_passes(self):
+        aud = InvariantAuditor()
+        node = fake_node(busy_s=2.0, busy_e=900.0, accounted=3.0)
+        aud.on_settle(node, "decode", 1.0, 2.0, 900.0)
+        assert aud.n_checks == 1
+
+    def test_busy_energy_drift_caught_with_context(self):
+        aud = InvariantAuditor()
+        node = fake_node(busy_s=2.0, busy_e=901.0, accounted=3.0)
+        aud.note(("arrival", "req-7"))
+        with pytest.raises(InvariantViolation) as ei:
+            aud.on_settle(node, "decode", 1.0, 2.0, 900.0)
+        msg = str(ei.value)
+        assert "busy-energy drift" in msg and "req-7" in msg
+
+    def test_time_partition_violation_caught(self):
+        aud = InvariantAuditor()
+        node = fake_node(busy_s=2.0, busy_e=900.0, accounted=2.5)
+        with pytest.raises(InvariantViolation, match="time-partition"):
+            aud.on_settle(node, "decode", 1.0, 2.0, 900.0)
+
+    def test_offphase_closed_form_violation_caught(self):
+        aud = InvariantAuditor()
+        node = fake_node(busy_s=1.0, busy_e=10.0, accounted=6.0)
+        node.idle_s, node.idle_energy_j = 5.0, 123.0  # != 5.0 * 100 W
+        with pytest.raises(InvariantViolation, match="idle bucket"):
+            aud.on_settle(node, "prefill", 5.0, 1.0, 10.0)
+
+    def test_split_contract_violation_caught(self):
+        # a sim whose decode "cost" is superadditive in steps breaks the
+        # split-energy identity the preemption settlement relies on
+        def run_split(energy_fn):
+            aud = InvariantAuditor()
+            node = fake_node()
+            node.sim = SimpleNamespace(
+                host_power_w=2.0,
+                decode_cost=lambda base, n, batch, freq_scale:
+                    (n * 0.01, energy_fn(n)))
+            t1, e1 = 4 * 0.01, energy_fn(4)
+            node.busy_s, node.busy_energy_j = t1, e1 + 2.0 * t1
+            node.accounted_s = t1
+            aud.on_settle(node, "decode", 0.0, t1, e1 + 2.0 * t1)
+            aud.on_preempt_split(node, base=16, n_done=4, n_total=10,
+                                 batch=1, scale=1.0)
+
+        run_split(lambda n: n * 3.0)          # additive: passes
+        with pytest.raises(InvariantViolation, match="split-energy"):
+            run_split(lambda n: n * n * 3.0)  # superadditive: caught
+
+    def test_preempt_without_settle_caught(self):
+        aud = InvariantAuditor()
+        with pytest.raises(InvariantViolation, match="no prior settlement"):
+            aud.on_preempt_split(fake_node(), 1, 1, 2, 1, 1.0)
+
+    def test_rejects_bad_tol(self):
+        with pytest.raises(ValueError):
+            InvariantAuditor(tol=0.0)
+
+
+class LeakyNode(ClusterNode):
+    """Misaccounts a microjoule per settlement — the class of bug the
+    live auditor exists to catch at the *first* bad settle."""
+
+    def _charge(self, members, t, e_accel, **kw):
+        super()._charge(members, t, e_accel, **kw)
+        self.busy_energy_j += 1e-3
+
+
+class TestAuditorLive:
+
+    def test_clean_run_audits_every_settlement(self):
+        aud = InvariantAuditor()
+        rep = governed_run(Telemetry(auditor=aud))
+        assert aud.n_checks > 100
+        assert rep.total_preemptions >= 0  # finalized through the audit
+
+    def test_injected_leak_caught_in_flight(self):
+        name = FLEET[0]
+        leaky = LeakyNode(0, PAPER_ZOO[name], PROFILES[name], SWING_NODE,
+                          max_batch=4)
+        with pytest.raises(InvariantViolation, match="busy-energy drift"):
+            simulate_cluster(poisson_trace(10, 4.0, seed=5), [leaky],
+                             ZetaOnlinePolicy(),
+                             telemetry=Telemetry(auditor=InvariantAuditor()))
+
+
+# ---------------------------------------------------------------------------
+# telemetry identity + report reconstruction
+# ---------------------------------------------------------------------------
+
+class TestTelemetryIdentity:
+
+    def test_report_byte_identical_on_vs_off(self):
+        bare = governed_run()
+        tel = Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                        sample_every_s=10.0)
+        instrumented = governed_run(tel)
+        assert (bare.to_json(include_records=True)
+                == instrumented.to_json(include_records=True))
+
+    def test_from_registry_rebuilds_aggregates(self):
+        tel = Telemetry()
+        rep = governed_run(tel)
+        rebuilt = type(rep).from_registry(tel.registry)
+        assert rebuilt.policy == rep.policy
+        assert rebuilt.zeta == rep.zeta
+        assert rebuilt.total_energy_j == pytest.approx(rep.total_energy_j)
+        assert rebuilt.makespan_s == pytest.approx(rep.makespan_s)
+        assert rebuilt.objective == pytest.approx(rep.objective)
+        assert len(rebuilt.node_stats) == len(rep.node_stats)
+        for a, b in zip(rebuilt.node_stats, rep.node_stats):
+            assert a.n_served == b.n_served
+            assert a.busy_energy_j == pytest.approx(b.busy_energy_j)
+            assert a.horizon_s == pytest.approx(b.horizon_s)
+
+    def test_sharded_registries_merge_to_one_report(self):
+        # simulate the actor-sharded reduction: each "shard" re-declares
+        # the same run-level gauges (merge="max" makes the fold
+        # idempotent) plus its own node partition
+        tel = Telemetry()
+        rep = governed_run(tel)
+        shard = MetricsRegistry()
+        shard.gauge("sim_run_info", labelnames=("policy",),
+                    merge="max").labels(rep.policy).set(1)
+        shard.gauge("sim_zeta", merge="max").get().set(rep.zeta)
+        merged = MetricsRegistry.merged([tel.registry, shard])
+        rebuilt = type(rep).from_registry(merged)
+        assert rebuilt.total_energy_j == pytest.approx(rep.total_energy_j)
+
+    def test_telemetry_objects_are_single_run(self):
+        tel = Telemetry()
+        governed_run(tel)
+        with pytest.raises(ValueError, match="single-run"):
+            governed_run(tel)
+        with pytest.raises(ValueError):
+            Telemetry(sample_every_s=0.0)
+
+    def test_full_run_prometheus_text_parses(self):
+        prom = pytest.importorskip("prometheus_client.parser")
+        tel = Telemetry(sample_every_s=10.0)
+        governed_run(tel)
+        text = tel.prometheus_text()
+        families = {f.name: f
+                    for f in prom.text_string_to_metric_families(text)}
+        assert "sim_arrivals" in families  # counter, _total stripped
+        assert "sim_request_latency_seconds" in families
+        assert "sim_node_energy_joules" in families
+        arrivals = sum(s.value
+                       for s in families["sim_arrivals"].samples)
+        assert arrivals == 60  # every request routed exactly once
+
+
+# ---------------------------------------------------------------------------
+# property-based tightening (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis as hyp
+    from hypothesis import strategies as st
+except ImportError:
+    hyp = None
+
+if hyp is not None:
+
+    class TestHistogramProperties:
+
+        @hyp.given(st.lists(st.floats(min_value=1e-9, max_value=1e9,
+                                      allow_nan=False,
+                                      allow_infinity=False),
+                            min_size=1, max_size=300),
+                   st.floats(min_value=0.01, max_value=1.0))
+        @hyp.settings(deadline=None, max_examples=60)
+        def test_quantile_bound_holds_everywhere(self, values, q):
+            h = Histogram()
+            for v in values:
+                h.observe(v)
+            est = h.quantile(q)
+            exact = exact_rank_value(np.asarray(values), q)
+            assert (exact * (1 - 1e-9) <= est
+                    <= exact * h.base * (1 + 1e-9))
+
+        @hyp.given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                                      allow_nan=False), min_size=0,
+                            max_size=120),
+                   st.integers(min_value=2, max_value=4))
+        @hyp.settings(deadline=None, max_examples=40)
+        def test_any_sharding_merges_to_same_histogram(self, values, k):
+            whole = Histogram()
+            shards = [Histogram() for _ in range(k)]
+            for i, v in enumerate(values):
+                whole.observe(v)
+                shards[i % k].observe(v)
+            merged = Histogram()
+            for s in shards:
+                merged.merge_from(s)
+            assert merged.counts == whole.counts
+            assert merged.zero_count == whole.zero_count
+            assert merged.count == whole.count
