@@ -15,7 +15,15 @@ policy table, the three levers PR 4 added:
   * **per-phase DVFS**: decode segments underclock, prefills mostly
     don't; governed total energy must be ≤ the fixed-frequency run on
     every (rate, ζ) cell — asserted, since scale 1.0 is always in the
-    governor's candidate set.
+    governor's candidate set;
+  * **availability under faults** (cell g, `--availability-only`): a
+    replicated fleet under seeded crashes and stragglers across an MTTF
+    sweep — FailoverPolicy rescue (cross-node KV migration, retry,
+    straggler draining) vs the failure-aware oracle replay on the same
+    realized fault trace, with a live InvariantAuditor holding the
+    six-bucket energy partition to 1e-9.  Asserted: the oracle bound,
+    the exact partition, and ≥90% goodput recovery at MTTF = 10× mean
+    service time.
 
 Guarantee checked here (unchanged from PR 1, same oracle replay): the
 oracle is never worse than any online policy on the Eq. 2 objective (at
@@ -29,12 +37,16 @@ arrival rates, which is exactly the gap this subsystem exists to measure.
 
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
 from benchmarks.common import emit, timed
 from repro.cluster import (
     ClusterNode,
+    FailoverPolicy,
+    FailureAwareOraclePolicy,
+    FaultInjector,
     GreedyEnergyPolicy,
     LeastLoadedPolicy,
     OfflineOraclePolicy,
@@ -236,8 +248,138 @@ def telemetry_cell(profiles):
     return tel, instrumented, prom_path, trace_path
 
 
+AVAIL_FLEET = ("llama2-7b", "llama2-7b", "llama2-13b")
+AVAIL_N = 120
+AVAIL_RATE_QPS = 2.0
+AVAIL_MTTF_MULTS = (5.0, 10.0, 50.0)   # × mean isolated service time
+
+
+def availability_cells(profiles):
+    """(g) the availability axis: a 3-node fleet (two llama2-7b replicas
+    + one llama2-13b) under seeded crashes and stragglers, swept over
+    node MTTF expressed as a multiple of the fleet's mean isolated
+    service time.  Per MTTF point: FailoverPolicy rescue (with a live
+    InvariantAuditor — every settlement, waste booking and KV shipment
+    checked at 1e-9) vs the no-fault baseline vs the failure-aware
+    oracle replay on the *same realized fault trace*.  Asserted here:
+    the six-bucket energy partition is exact, the failure-aware oracle
+    is never worse than any online policy on the Eq. 2 objective, and
+    at MTTF = 10× mean service time the failover stack recovers ≥90%
+    of the no-fault goodput."""
+    by_name = {p.name: p for p in profiles}
+    builders = [
+        (lambda i=i, name=name: ClusterNode(
+            i, PAPER_ZOO[name], by_name[name], SWING_NODE, max_batch=4))
+        for i, name in enumerate(AVAIL_FLEET)
+    ]
+    queries = alpaca_like_workload(WorkloadSpec(n_queries=AVAIL_N, seed=7))
+    trace = replay_trace(queries, AVAIL_RATE_QPS, seed=11,
+                         name=f"alpaca@{AVAIL_RATE_QPS:g}qps")
+
+    base = simulate_cluster(trace, fresh_nodes(builders),
+                            FailoverPolicy(ZetaOnlinePolicy()), zeta=0.5)
+    assert not base.abandoned
+    mean_service_s = (sum(r.isolated_runtime_s for r in base.records)
+                      / len(base.records))
+
+    out = {"base": base, "mean_service_s": mean_service_s, "cells": {}}
+    for mult in AVAIL_MTTF_MULTS:
+        mttf = mult * mean_service_s
+        faults = FaultInjector(
+            mttf_s=mttf, mttr_s=2.0 * mean_service_s,
+            straggle_mttf_s=mttf, straggle_mttr_s=2.0 * mean_service_s,
+            slowdown_range=(1.5, 2.5), seed=13,
+        ).generate(range(len(AVAIL_FLEET)), trace.duration_s)
+
+        tel = Telemetry(auditor=InvariantAuditor())
+        failover = simulate_cluster(
+            trace, fresh_nodes(builders), FailoverPolicy(ZetaOnlinePolicy()),
+            zeta=0.5, faults=faults, telemetry=tel)
+        naive = simulate_cluster(
+            trace, fresh_nodes(builders),
+            FailoverPolicy(LeastLoadedPolicy()), zeta=0.5, faults=faults)
+        oracle = simulate_cluster(
+            trace, fresh_nodes(builders), FailureAwareOraclePolicy(faults),
+            zeta=0.5, faults=faults)
+
+        for tag, rep in (("failover", failover), ("least_loaded", naive),
+                         ("oracle", oracle)):
+            buckets = rep.energy_breakdown()
+            residual = abs(sum(buckets.values()) - rep.total_energy_j)
+            assert residual <= 1e-9 * max(1.0, rep.total_energy_j), \
+                f"six-bucket partition leaked {residual} J ({tag}, {mult}x)"
+        for tag, rep in (("failover", failover), ("least_loaded", naive)):
+            if len(rep.records) == len(oracle.records):
+                assert oracle.objective <= rep.objective + 1e-9, \
+                    f"failure-aware oracle beaten by {tag} at MTTF {mult}x"
+        out["cells"][mult] = {
+            "mttf_s": mttf, "n_faults": len(faults),
+            "failover": failover, "least_loaded": naive, "oracle": oracle,
+            "auditor_checks": tel.auditor.n_checks,
+        }
+    recovery = (out["cells"][10.0]["failover"].goodput()
+                / max(base.goodput(), 1e-12))
+    assert recovery >= 0.9, \
+        f"failover recovered only {recovery:.1%} of no-fault goodput"
+    out["recovery_at_10x"] = recovery
+    return out
+
+
+def run_availability(profiles, cell_dumps):
+    print("\n=== availability under faults (2x llama2-7b + llama2-13b, "
+          f"{AVAIL_RATE_QPS:g} qps) ===")
+    avail = availability_cells(profiles)
+    base = avail["base"]
+    cell_dumps["availability.base"] = base.to_dict()
+    print(f"  no-fault baseline: goodput={base.goodput():5.1%} "
+          f"E={base.total_energy_j:9.0f}J "
+          f"(mean service {avail['mean_service_s']:.2f}s)")
+    for mult, cell in sorted(avail["cells"].items()):
+        for tag in ("failover", "least_loaded", "oracle"):
+            rep = cell[tag]
+            cell_dumps[f"availability.mttf_{mult:g}x.{tag}"] = rep.to_dict()
+            print(f"  mttf={mult:4g}x {tag:>12s}: "
+                  f"goodput={rep.goodput():5.1%} "
+                  f"obj={rep.objective:+.4f} "
+                  f"E={rep.total_energy_j:9.0f}J "
+                  f"(wasted={rep.total_wasted_energy_j:6.0f} "
+                  f"ship={rep.total_shipping_energy_j:4.1f}) "
+                  f"crash={rep.total_crashes} "
+                  f"migr={rep.total_migrations} "
+                  f"aband={len(rep.abandoned)}")
+        fo = cell["failover"]
+        emit(f"fig4.availability_mttf_{mult:g}x", 0.0,
+             f"n_faults={cell['n_faults']} "
+             f"goodput_failover={fo.goodput():.4f} "
+             f"goodput_oracle={cell['oracle'].goodput():.4f} "
+             f"crashes={fo.total_crashes} "
+             f"migrations={fo.total_migrations} "
+             f"wasted_j={fo.total_wasted_energy_j:.1f} "
+             f"auditor_checks={cell['auditor_checks']} "
+             f"partition_exact=True oracle_bound_holds=True")
+    print(f"  goodput recovery at mttf=10x: {avail['recovery_at_10x']:.1%}")
+    emit("fig4.availability", 0.0,
+         f"recovery_at_10x={avail['recovery_at_10x']:.4f} "
+         f"recovery_geq_0.9=True "
+         f"baseline_goodput={base.goodput():.4f}")
+    avail_path = REPO_ROOT / "BENCH_fig4_availability.json"
+    avail_path.write_text(json.dumps(
+        {k: v for k, v in cell_dumps.items()
+         if k.startswith("availability.")},
+        sort_keys=True, indent=1))
+    print(f"  wrote availability cells -> {avail_path.name}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--availability-only", action="store_true",
+                    help="run just the fault/availability cell (g)")
+    opts = ap.parse_args()
     profiles = fit_fleet()
+    if opts.availability_only:
+        cell_dumps: dict[str, dict] = {}
+        run_availability(profiles, cell_dumps)
+        return
     us, results = timed(lambda: run(profiles), repeats=1)
     n_cells = len(results)
     cell_dumps: dict[str, dict] = {}
@@ -393,6 +535,9 @@ def main() -> None:
          f"trace_events={len(tel.tracer.events)} "
          f"registry_rebuild_matches=True")
 
+    # --- (g): availability under injected faults -----------------------
+    run_availability(profiles, cell_dumps)
+
     # every cell's full ClusterReport as structured JSON — downstream
     # tooling reads this instead of parsing the printed tables
     cells_path = REPO_ROOT / "BENCH_fig4_cells.json"
@@ -406,7 +551,10 @@ def main() -> None:
          "gap_split=commitment_vs_information "
          "replica_oracle_bound_holds=True "
          "preemption_energy_conserving=True "
-         "telemetry_report_byte_identical=True")
+         "telemetry_report_byte_identical=True "
+         "failure_aware_oracle_bound_holds=True "
+         "six_bucket_partition_exact=True "
+         "failover_recovery_geq_0.9_at_10x_mttf=True")
 
 
 if __name__ == "__main__":

@@ -436,6 +436,132 @@ def gate_preemption_split(failures: list[str]) -> dict:
             "resumes": rep.total_resumes}
 
 
+def gate_migration_settlement(failures: list[str]) -> dict:
+    """Cross-node migration rescue must settle exactly, end to end.
+
+    (a) A scripted crash storm over a 2-replica fleet, run under a live
+        InvariantAuditor (every donor truncated charge, waste move and
+        KV shipment checked at 1e-9 as it happens): migrations must
+        actually fire, the six energy buckets must partition each node's
+        horizon exactly, and per-request attributed energy must still
+        sum to the fleet busy bucket — the cross-node split contract.
+    (b) The shipping bucket must follow the interconnect closed form in
+        aggregate: Σ shipped KV bytes × j_per_byte_ici == the fleet
+        shipping energy, and bytes / ici_bw == the shipping seconds
+        (uniform hardware, so the totals close without per-event state).
+    (c) A crash with no same-model survivor books the refugees'
+        accrued joules as wasted and their requests as abandoned —
+        conservation closes through the waste bucket, never a leak."""
+    from repro.cluster import (ClusterNode, FailoverPolicy, FaultEvent,
+                               FaultTrace, LeastLoadedPolicy,
+                               ZetaOnlinePolicy, poisson_trace,
+                               simulate_cluster)
+    from repro.cluster.faults import CRASH, RECOVER
+    from repro.configs import TABLE1
+    from repro.core.energy_model import fit_profile
+    from repro.energy import SWING_NODE
+    from repro.energy.costs import kv_bytes_per_token
+    from repro.obs import InvariantAuditor, InvariantViolation, Telemetry
+
+    fleet = ("llama2-7b", "llama2-7b", "llama2-13b")
+    profiles = {}
+    for name in set(fleet):
+        sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                                   kv_cache=True, noise_sigma=0.0)
+        pts = [(8, 8), (64, 64), (256, 128), (512, 512), (128, 32)]
+        pbs = [sim.simulate(a, b) for a, b in pts]
+        profiles[name] = fit_profile(
+            name, TABLE1[name]["a_k"],
+            [p[0] for p in pts], [p[1] for p in pts],
+            [pb.energy_j for pb in pbs], [pb.runtime_s for pb in pbs])
+
+    def nodes(names=fleet):
+        return [ClusterNode(i, PAPER_ZOO[name], profiles[name], SWING_NODE,
+                            max_batch=2)
+                for i, name in enumerate(names)]
+
+    # (a)+(b): alternate crashing each 7b replica so refugees ship to the
+    # surviving one; high rate keeps decodes in flight at crash time
+    trace = poisson_trace(60, 6.0, seed=3)
+    storm = FaultTrace("storm", tuple(
+        FaultEvent(t, nid, kind)
+        for t, nid, kind in ((1.5, 0, CRASH), (4.0, 0, RECOVER),
+                             (5.0, 1, CRASH), (8.0, 1, RECOVER),
+                             (9.0, 0, CRASH), (12.0, 0, RECOVER))))
+    tel = Telemetry(auditor=InvariantAuditor())
+    try:
+        rep = simulate_cluster(trace, nodes(), FailoverPolicy(
+            ZetaOnlinePolicy()), zeta=0.5, faults=storm, telemetry=tel)
+    except InvariantViolation as e:
+        failures.append(f"migration gate tripped the live auditor: {e}")
+        return {"auditor": "violated"}
+    if rep.total_migrations == 0:
+        failures.append("migration gate saw no migrations")
+    if rep.total_crashes == 0:
+        failures.append("migration gate saw no crashes")
+    worst_e = worst_t = 0.0
+    for s in rep.node_stats:
+        e_sum = (s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
+                 + s.transition_energy_j + s.shipping_energy_j
+                 + s.wasted_energy_j)
+        worst_e = max(worst_e, abs(e_sum - s.total_energy_j)
+                      / max(1.0, s.total_energy_j))
+        worst_t = max(worst_t, abs(s.accounted_s - s.horizon_s)
+                      / max(1.0, s.horizon_s))
+    attributed = sum(r.energy_j for r in rep.records)
+    busy = sum(s.busy_energy_j for s in rep.node_stats)
+    worst_e = max(worst_e, abs(attributed - busy) / max(1.0, busy))
+    if worst_e > 1e-9 or worst_t > 1e-9:
+        failures.append(
+            f"faulted run violates six-bucket conservation: energy rel "
+            f"{worst_e:.3e}, time rel {worst_t:.3e}")
+    # (b): aggregate interconnect closed form (uniform SWING hardware)
+    accel = SWING_NODE.accel
+    shipped = sum(r.shipped_bytes for r in rep.records)
+    ship_j = sum(s.shipping_energy_j for s in rep.node_stats)
+    ship_s = sum(s.shipping_s for s in rep.node_stats)
+    rel_j = (abs(ship_j - shipped * accel.j_per_byte_ici)
+             / max(1.0, ship_j))
+    rel_s = (abs(ship_s - shipped / accel.ici_bw) / max(1.0, ship_s))
+    if shipped <= 0.0:
+        failures.append("migration gate shipped no KV bytes")
+    if rel_j > 1e-9 or rel_s > 1e-9:
+        failures.append(
+            f"shipping bucket off the interconnect closed form: energy "
+            f"rel {rel_j:.3e}, time rel {rel_s:.3e}")
+    # (c): lone node crashes mid-run and never recovers — no survivor,
+    # so in-flight work is wasted and the rest abandoned, books closed
+    lone_trace = poisson_trace(10, 4.0, seed=5)
+    lone = simulate_cluster(
+        lone_trace, nodes(("llama2-7b",)),
+        FailoverPolicy(LeastLoadedPolicy(), max_retries=2), zeta=0.5,
+        faults=FaultTrace("lone", (FaultEvent(0.8, 0, CRASH),)))
+    if not lone.abandoned:
+        failures.append("no-survivor crash abandoned nothing")
+    if len(lone.records) + len(lone.abandoned) != len(lone_trace):
+        failures.append("no-survivor crash lost requests")
+    wasted = sum(s.wasted_energy_j for s in lone.node_stats)
+    if wasted <= 0.0:
+        failures.append("no-survivor crash booked no wasted energy")
+    lone_rel = max(
+        abs((s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
+             + s.transition_energy_j + s.shipping_energy_j
+             + s.wasted_energy_j) - s.total_energy_j)
+        / max(1.0, s.total_energy_j)
+        for s in lone.node_stats)
+    if lone_rel > 1e-9:
+        failures.append(
+            f"no-survivor waste leaks energy: rel {lone_rel:.3e}")
+    return {"worst_energy_rel": worst_e, "worst_time_rel": worst_t,
+            "shipping_energy_rel": rel_j, "shipping_time_rel": rel_s,
+            "tolerance": 1e-9, "crashes": rep.total_crashes,
+            "migrations": rep.total_migrations,
+            "shipped_bytes": shipped,
+            "auditor_checks": tel.auditor.n_checks,
+            "no_survivor_abandoned": len(lone.abandoned),
+            "no_survivor_wasted_j": wasted}
+
+
 def gate_power_conservation(failures: list[str]) -> dict:
     """Gated-sim energy accounting: the busy/idle/gated/transition buckets
     must sum to the total to 1e-9 and partition every node's horizon —
@@ -628,6 +754,7 @@ def run_gates(quick: bool) -> tuple[dict, list[str]]:
         "dvfs_closed_form": gate_dvfs_closed_form(failures),
         "power_conservation": gate_power_conservation(failures),
         "preemption_split": gate_preemption_split(failures),
+        "migration_settlement": gate_migration_settlement(failures),
         "metrics_overhead": gate_metrics_overhead(failures),
     }
     return out, failures

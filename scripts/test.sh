@@ -5,7 +5,10 @@
 #                            (the ROADMAP command, run before every PR)
 #   scripts/test.sh fast     fast tier: skips @pytest.mark.slow
 #                            (compile dry-runs, end-to-end pipelines);
-#                            finishes in well under a minute
+#                            includes the fault/migration suite
+#                            (tests/test_faults.py — fault replay
+#                            determinism, cross-node settlement, rescue
+#                            policies); finishes in well under a minute
 #   scripts/test.sh perf     perf tier: benchmarks/perf_suite.py --quick —
 #                            correctness gates for the vectorized hot paths
 #                            (closed-form decode vs chunked reference, fast
@@ -18,8 +21,14 @@
 #                            total to 1e-9, and decode-boundary preemption:
 #                            split additivity of the decode integral plus
 #                            end-to-end conservation and the replica-oracle
-#                            bound on a preempting multi-replica run, and
-#                            the telemetry metrics_overhead gate: with full
+#                            bound on a preempting multi-replica run, the
+#                            migration_settlement gate: a scripted crash
+#                            storm under the live auditor — six-bucket
+#                            busy+idle+gated+transition+shipping+wasted ==
+#                            total to 1e-9, the shipping bucket on the
+#                            interconnect closed form, and no-survivor
+#                            crashes booking waste instead of leaking —
+#                            and the telemetry metrics_overhead gate: with full
 #                            telemetry on a governed fleet the ClusterReport
 #                            is byte-identical, the Prometheus dump parses,
 #                            the live auditor passes every settlement, and

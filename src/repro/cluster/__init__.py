@@ -11,7 +11,14 @@ hosting one model, with a replica registry, a wake-cost-aware replica-set
 router, per-model replica-count autoscaling, and a replica-aware offline
 oracle) and *decode-boundary preemption* (suspend a decode at its next
 step boundary with the KV position intact, resume for free when a slot
-opens — energy split exactly by the closed-form decode integral).
+opens — energy split exactly by the closed-form decode integral).  This
+PR adds *failure realism*: seeded fault injection (crashes, recoveries,
+stragglers — faults.py), cross-node migration rescue (a crashed node's
+refugees ship their KV to a healthy replica under an explicit
+interconnect cost model), straggler governance and retry/abandon
+policies (FailoverPolicy), and a failure-aware offline oracle
+(FailureAwareOraclePolicy) that re-solves the paper's assignment against
+the realized fault trace.
 
 Module map (the event model, and how the pieces plug together):
 
@@ -20,6 +27,14 @@ Module map (the event model, and how the pieces plug together):
                     churn, replay of the offline Alpaca-like case-study
                     workload).  A trace is the only stochastic input;
                     everything downstream is deterministic.
+    faults.py     — FaultEvent / FaultTrace / FaultInjector: seeded node
+                    crash–recovery and straggler onset–clear processes
+                    (exponential MTTF/MTTR alternating renewals, per-node,
+                    from data.workloads.fault_trace).  A FaultTrace is the
+                    second stochastic input; replaying the same trace over
+                    the same arrival trace is byte-identical, and passing
+                    faults=None (the default) leaves the loop bit-identical
+                    to the pre-fault simulator.
     node.py       — ClusterNode: one model replica on one hardware Node.
                     Continuous batching at phase granularity (batched
                     prefill, decode segments to the next completion
@@ -58,29 +73,49 @@ Module map (the event model, and how the pieces plug together):
                     causally, under an optional tau_out_predictor.  The
                     energy-aware policies accept tau_out_predictor= to
                     downgrade their information model from oracle to
-                    learned.  New policies subclass RoutingPolicy and
+                    learned.  Failure handling: FailoverPolicy wraps any
+                    inner router with capped-exponential-backoff retry,
+                    deadline-aware abandonment, crash re-run consent, and
+                    EWMA-latency straggler detection that drains chronic
+                    stragglers (never a model's last accepting replica)
+                    and undrains them on recovery or cooldown;
+                    FailureAwareOraclePolicy extends the offline oracle
+                    with a liveness mask — the assignment argmin excludes
+                    models whose every host is down forever from a
+                    query's arrival, so the bound stays meaningful under
+                    faults.  New policies subclass RoutingPolicy and
                     implement select(req, nodes, now); attach() gives them
                     the fleet and (for oracle-grade information models)
                     the trace; observe_completion() is their causal
-                    feedback channel.
-    sim.py        — the discrete-event loop.  Six event kinds: arrivals,
+                    feedback channel, and the fault hooks (retry_delay,
+                    on_fault, drain_updates, allow_rerun) have safe
+                    defaults so existing policies run unchanged under
+                    fault injection.
+    sim.py        — the discrete-event loop.  Ten event kinds: arrivals,
                     node phase completions, preemption settlements,
-                    wake/gate completions, and autoscaler idle timers,
-                    processed in (time, seq) order so ties are
-                    deterministic; phase-shaped events carry the node's
-                    phase epoch so a preempted segment's stale end event
-                    is dropped.  Builds the per-model replica registry
-                    (replica_registry).  compare_policies() reruns a trace
-                    over fresh fleets (and fresh autoscalers/preempters)
-                    for an apples-to-apples policy table.
-    metrics.py    — ClusterReport: the busy/idle/gated/transition energy
-                    split (the buckets partition each node's horizon —
-                    gated time is never double-charged as idle — and sum
-                    exactly to total energy), J/token, latency p50/p95/p99,
-                    slowdown-SLO attainment, per-node utilization, and the
-                    realized Eq. 2 objective used to measure the gap to
-                    the offline oracle.  `from_registry` rebuilds the
-                    aggregate view from a telemetry registry — the
+                    wake/gate completions, autoscaler idle timers, fault
+                    events, crash-quantization settlements, KV-shipment
+                    completions, and retry re-submissions, processed in
+                    (time, seq) order so ties are deterministic;
+                    phase-shaped events carry the node's phase epoch so a
+                    preempted (or crashed) segment's stale end event is
+                    dropped.  Builds the per-model replica registry
+                    (replica_registry) and orchestrates the rescue path:
+                    a crashed node's refugees migrate, re-run, or are
+                    abandoned with their joules booked as wasted.
+                    compare_policies() reruns a trace (and fault trace)
+                    over fresh fleets for an apples-to-apples policy
+                    table.
+    metrics.py    — ClusterReport: the six-bucket busy/idle/gated/
+                    transition/shipping/wasted energy split (the buckets
+                    partition each node's horizon — FAILED time draws
+                    exactly 0 W, shipping is background NIC DMA — and sum
+                    exactly to total energy), J/token, latency p50/p95/
+                    p99, slowdown-SLO attainment, goodput under
+                    abandonment, per-node utilization, AbandonedRecords,
+                    and the realized Eq. 2 objective used to measure the
+                    gap to the offline oracle.  `from_registry` rebuilds
+                    the aggregate view from a telemetry registry — the
                     reduction path for sharded runs.
     ../obs/       — the observability layer (repro.obs): a Telemetry
                     facade bundling a mergeable MetricsRegistry, an
@@ -93,37 +128,77 @@ Module map (the event model, and how the pieces plug together):
 
 Power-state lifecycle (driven by ClusterNode, timed by sim.py).
 Telemetry hooks fire at the marked (*) edges: `on_power_begin` as a
-WAKING/GATING ramp starts, `on_power_span` as it completes, and the
-autoscaler's gate verdicts/pre-wakes via `on_gate_decision`/`on_prewake`::
+WAKING/GATING ramp starts, `on_power_span` as it completes, the
+autoscaler's gate verdicts/pre-wakes via `on_gate_decision`/`on_prewake`,
+and `on_fault` as a fault event lands::
 
         enqueue / next phase         idle timer + autoscaler ok
     ACTIVE <────────────> IDLE ─────────────────────────────> GATING*
-       ^                   ^                                     │ gate_s
-       │ wake done         │ wake done (no queued work)          v
-      (work waiting)      WAKING* <────────────────────────── GATED
-                            on-demand (routed request) or pre-wake
+       ^  │                ^  │                                  │ gate_s
+       │  │ wake done      │  │ wake done (no queued work)       v
+       │  │ (work waiting) │ WAKING* <──────────────────────── GATED
+       │  │                │    on-demand (routed request,       │
+       │  │                │    landed migrant) or pre-wake      │
+       │  v                │                                     v
+       │ FAILED* <─────────┴─(crash fault event, from any state)─┘
+       │   │  crash quantized to the next exact charge boundary:
+       │   │  mid-decode settles the truncated segment first (the
+       │   │  donor half of the cross-node split), then 0 W while
+       │   │  down; active members become suspended *refugees*
+       │   └──────> recovery fault event: FAILED → IDLE, rejoins
+       └──────────  the eligible set (serves anything queued)
 
-Request lifecycle (PREEMPTED/RESUMING added by the preemption layer).
-Telemetry hooks: `on_arrival` at routing, `on_phase_settle` (plus the
-auditor's conservation checks) at every prefill/decode charge,
-`on_preempt_split` at a preemption settlement (auditing the split-energy
-identity), `on_completion` at DONE::
+    Two governance overlays are orthogonal to the power state:
+    DRAINING (FailoverPolicy flagged a chronic straggler: the node
+    finishes in-flight work but accepts no new routing; suspended work
+    migrates off; cleared on recovery/cooldown) and SLOW (a straggler
+    fault stretches every phase by σ — same work, σ× the wall time, the
+    stalled extra seconds at accelerator static draw).
+
+Request lifecycle (PREEMPTED/RESUMING added by the preemption layer;
+MIGRATING/RETRY/ABANDONED by the fault layer).  Telemetry hooks:
+`on_arrival` at routing, `on_phase_settle` (plus the auditor's
+conservation checks) at every prefill/decode charge, `on_preempt_split`
+at a preemption or crash settlement (auditing the split-energy
+identity), `on_migration` as a KV shipment starts, `on_retry`/
+`on_abandon` on the failover path, `on_completion` at DONE::
 
               routed*       joiner prefill*         last token*
     WAITING ──────────> QUEUED ─────────> DECODING ──────────> DONE
-                                           │    ^
-                   preempter picks victim; │    │ RESUMING: rejoins the
-                   segment cut at the next │    │ active set at a phase
-                   decode step boundary*   v    │ start with a free slot
-                                          PREEMPTED (suspended: KV
-                                           position intact, zero-cost
-                                           resume — never re-prefilled)
+       ^  ^                                │    ^
+       │  │        preempter picks victim; │    │ RESUMING: rejoins the
+       │  │        segment cut at the next │    │ active set at a phase
+       │  │        decode step boundary*   v    │ start with a free slot
+       │  │                               PREEMPTED (suspended: KV
+       │  │                                position intact, zero-cost
+       │  │                                resume — never re-prefilled)
+       │  │                                │ host node crashes (or is
+       │  │                                │ drained off a straggler)
+       │  │                                v
+       │  │  KV landed on the recipient  MIGRATING* — refugee's KV ships
+       │  ├──────────────────────────────  to an accepting same-model
+       │  │                                node: bytes/ici_bw seconds,
+       │  │                                bytes·j_per_byte_ici joules on
+       │  │                                the recipient's meter; resumes
+       │  │                                via the PREEMPTED path
+       │  │  re-run from scratch (crash   │ no accepting same-model node
+       │  └─────────────────────────────  v
+       │     mid-prefill, or rerun=True) RESCUE FAILED → accrued joules
+       │ retry* (capped exponential       move busy → wasted* and the
+       └── backoff while no node          request books an
+           accepts; deadline/attempts     AbandonedRecord (reason:
+           exhausted → abandoned*)        no_survivor/no_capacity/
+                                          deadline)
 
     A preempted request keeps everything it has generated; the truncated
     decode segment is charged for exactly the steps it ran (the closed-
     form integral split at the boundary — the two halves sum to the
     unpreempted decode_cost to 1e-9), and the slot it frees admits the
-    queue-head request the preemption policy cut it for.
+    queue-head request the preemption policy cut it for.  A crash is the
+    same split crossing nodes: the donor's truncated charge + the
+    shipping energy + the recipient's resumed charge reconcile against
+    the unfaulted closed form to 1e-9, and un-rescuable work is booked
+    as wasted so conservation still closes.
 
 DVFS operating-point semantics: an AcceleratorSpec exposes discrete
 `dvfs_scales`; at scale s, peak_flops ∝ s, hbm_bw keeps its `dvfs_bw_floor`
@@ -141,16 +216,32 @@ Gap definitions measured by benchmarks/fig4_online_gap.py:
     information gap — predicted-τout router vs the same router with
                       oracle τout: the cost of *not knowing* output
                       lengths, isolated from the commitment gap.
+    availability    — the fault axis: energy, SLO attainment, and
+                      goodput vs node MTTF, FailoverPolicy rescue vs
+                      no-fault baseline vs the failure-aware oracle
+                      bound on the realized fault trace.
 
 Entry points: benchmarks/fig4_online_gap.py (arrival-rate × ζ sweep,
 power-gating and DVFS columns, the two-gap split) and
 examples/cluster_sim.py (a narrated single run).
 """
 
-from repro.cluster.metrics import ClusterReport, NodeStats, RequestRecord  # noqa: F401
+from repro.cluster.faults import (  # noqa: F401
+    FaultEvent,
+    FaultInjector,
+    FaultTrace,
+)
+from repro.cluster.metrics import (  # noqa: F401
+    AbandonedRecord,
+    ClusterReport,
+    NodeStats,
+    RequestRecord,
+)
 from repro.cluster.node import ClusterNode  # noqa: F401
 from repro.cluster.policies import (  # noqa: F401
     DEFAULT_POLICIES,
+    FailoverPolicy,
+    FailureAwareOraclePolicy,
     GreedyEnergyPolicy,
     LeastLoadedPolicy,
     OfflineOraclePolicy,

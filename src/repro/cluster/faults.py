@@ -1,0 +1,148 @@
+"""Fault injection: seeded node crashes, recoveries, and stragglers.
+
+The cluster simulator assumed every node survives the horizon; this
+module supplies the disruption stream that breaks that assumption in a
+*replayable* way.  A :class:`FaultTrace` is the failure-side counterpart
+of an :class:`~repro.cluster.trace.ArrivalTrace` — an immutable,
+time-sorted tuple of :class:`FaultEvent`\\ s that, together with the
+arrival trace, fully determines a faulted run (same traces + policy →
+bit-identical ClusterReport; an *empty* fault trace is bit-identical to
+running with no faults at all — both invariants are pinned in
+tests/test_faults.py).
+
+Four event kinds:
+
+  * ``crash``   — the node fails.  Takes effect at the next decode step
+                  boundary (the in-flight token finishes) or prefill end,
+                  immediately when off-phase — so every energy charge
+                  stays an exact closed-form boundary charge.  Active and
+                  suspended decodes become *refugees*: the sim ships their
+                  KV to a healthy replica (``node.py``/``sim.py``
+                  migration) or books their accrued joules as wasted.
+  * ``recover`` — the node powers back up into IDLE and rejoins the
+                  eligible set.
+  * ``slow``    — a sustained straggler begins: every subsequent phase is
+                  stretched by ``value`` (σ ≥ 1) in wall time, with the
+                  extra seconds burning static power (see
+                  ``ClusterNode._stretched``).
+  * ``normal``  — the straggler ends (σ back to 1).
+
+:class:`FaultInjector` draws the stream from configurable exponential
+MTTF/MTTR holding times (delegating to
+:func:`repro.data.workloads.fault_trace`, the seeded generator exported
+next to the arrival-time generators), mapping generator node indexes onto
+real fleet node ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Sequence
+
+from repro.data.workloads import fault_trace as _raw_fault_trace
+
+CRASH = "crash"
+RECOVER = "recover"
+SLOW = "slow"
+NORMAL = "normal"
+FAULT_KINDS = (CRASH, RECOVER, SLOW, NORMAL)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One disruption: at `time_s`, `node_id` crashes / recovers /
+    starts straggling at factor `value` / returns to normal."""
+
+    time_s: float
+    node_id: int
+    kind: str
+    value: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == SLOW and self.value < 1.0:
+            raise ValueError("straggler slowdown must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTrace:
+    """Immutable, time-sorted fault stream (replayable alongside the
+    arrival trace)."""
+
+    name: str
+    events: tuple[FaultEvent, ...]
+
+    def __post_init__(self):
+        times = [ev.time_s for ev in self.events]
+        if times != sorted(times):
+            raise ValueError("fault events must be time-sorted")
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[FaultEvent]:
+        return iter(self.events)
+
+    def down_intervals(self, node_id: int) -> list[tuple[float, float]]:
+        """[crash, recover) spans for one node; an unrecovered crash
+        yields an interval open to +inf."""
+        out: list[tuple[float, float]] = []
+        start: float | None = None
+        for ev in self.events:
+            if ev.node_id != node_id:
+                continue
+            if ev.kind == CRASH and start is None:
+                start = ev.time_s
+            elif ev.kind == RECOVER and start is not None:
+                out.append((start, ev.time_s))
+                start = None
+        if start is not None:
+            out.append((start, math.inf))
+        return out
+
+    def is_down(self, node_id: int, t: float) -> bool:
+        return any(a <= t < b for a, b in self.down_intervals(node_id))
+
+    def down_forever_from(self, node_id: int, t: float) -> bool:
+        """True when the node is down at `t` and never recovers — the
+        liveness notion the failure-aware oracle excludes capacity by
+        (a model is only *lost* to a request if every host is gone for
+        good; anything that recovers is still reachable via retry)."""
+        spans = self.down_intervals(node_id)
+        return bool(spans) and spans[-1][1] == math.inf and spans[-1][0] <= t
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjector:
+    """Seeded crash/recovery + straggler event source.
+
+    Holding times are exponential: nodes stay up for Exp(`mttf_s`) and
+    down for Exp(`mttr_s`); independently, they run healthy for
+    Exp(`straggle_mttf_s`) and straggle for Exp(`straggle_mttr_s`) at a
+    slowdown drawn uniformly from `slowdown_range`.  A None MTTF disables
+    that process.  `generate` is deterministic in (seed, node_ids,
+    horizon_s) — the replayable-trace contract."""
+
+    mttf_s: float | None = None
+    mttr_s: float = 60.0
+    straggle_mttf_s: float | None = None
+    straggle_mttr_s: float = 30.0
+    slowdown_range: tuple[float, float] = (1.5, 3.0)
+    seed: int = 0
+
+    def generate(self, node_ids: Sequence[int],
+                 horizon_s: float) -> FaultTrace:
+        raw = _raw_fault_trace(
+            len(node_ids), horizon_s,
+            mttf_s=self.mttf_s, mttr_s=self.mttr_s,
+            straggle_mttf_s=self.straggle_mttf_s,
+            straggle_mttr_s=self.straggle_mttr_s,
+            slowdown_range=self.slowdown_range, seed=self.seed)
+        ids = list(node_ids)
+        events = tuple(FaultEvent(t, ids[idx], kind, value)
+                       for t, idx, kind, value in raw)
+        return FaultTrace(
+            name=f"faults@mttf={self.mttf_s}/seed={self.seed}",
+            events=events)

@@ -1,6 +1,6 @@
 """Aggregate metrics for a cluster run.
 
-Energy accounting is split into four buckets per node:
+Energy accounting is split into six buckets per node:
 
   * *busy*       — accelerator dynamic+idle during phases plus the host
                    serving draw (exactly what the per-request
@@ -8,16 +8,22 @@ Energy accounting is split into four buckets per node:
   * *idle*       — node idle power over powered-but-workless seconds;
   * *gated*      — the residual draw while powered down;
   * *transition* — gate/wake ramps (latency at transition power plus any
-                   fixed per-transition joules).
+                   fixed per-transition joules);
+  * *shipping*   — cross-node KV migration: bytes over the interconnect
+                   at J/byte, on the recipient's meter (faulted runs only);
+  * *wasted*     — work lost to un-rescuable crashes, *moved* out of busy
+                   (never double-counted) so re-run joules are visible.
 
-The buckets partition each node's horizon exactly — one second lands in
+The time buckets (busy/idle/gated/transition/failed — a crashed node
+draws 0 W, so FAILED seconds carry no energy bucket; shipping is
+background NIC DMA concurrent with serving and stays outside the horizon
+partition) partition each node's horizon exactly — one second lands in
 exactly one bucket, so gated time is never double-charged as idle — and
-their sum IS the total energy (the conservation invariant gated in the
-perf suite at 1e-9).  The busy bucket alone carries the conservation
-invariant against the offline simulator, while fleet-level J/token still
-includes the cost of keeping under-utilized replicas powered (or the
-savings from gating them).
-"""
+the sum of the six energy buckets IS the total energy (the conservation
+invariant gated in the perf suite at 1e-9).  The busy bucket alone
+carries the conservation invariant against the offline simulator, while
+fleet-level J/token still includes the cost of keeping under-utilized
+replicas powered (or the savings from gating them)."""
 
 from __future__ import annotations
 
@@ -53,6 +59,8 @@ class RequestRecord:
     energy_j: float             # attributed busy-energy share
     isolated_runtime_s: float   # uncontended batch-1 service time
     preemptions: int = 0        # suspend/resume round-trips en route
+    migrations: int = 0         # cross-node KV shipments en route
+    shipped_bytes: float = 0.0  # KV bytes moved across the interconnect
 
     @property
     def latency_s(self) -> float:
@@ -67,6 +75,25 @@ class RequestRecord:
         if self.isolated_runtime_s <= 0:
             return 1.0
         return self.latency_s / self.isolated_runtime_s
+
+
+@dataclasses.dataclass(frozen=True)
+class AbandonedRecord:
+    """A request the fleet gave up on (faulted runs only): the retry
+    budget ran out, the deadline passed, or a crash stranded its decode
+    with no surviving replica.  Any joules it had already accrued were
+    moved to the wasted bucket (`wasted_j` here), so conservation still
+    closes over completed + abandoned work."""
+
+    request_id: int
+    model: str                  # last host's model ("" if never served)
+    tau_in: int
+    tau_out: int
+    arrival_s: float
+    abandoned_s: float          # when the fleet gave up
+    reason: str                 # "no_capacity" | "deadline" | "no_survivor"
+    attempts: int = 0           # routing attempts before giving up
+    wasted_j: float = 0.0       # accrued joules moved to the wasted bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,15 +117,26 @@ class NodeStats:
     # --- preemption counters (zero when no preempter is installed) ----
     n_preemptions: int = 0
     n_resumes: int = 0
+    # --- fault buckets/counters (zero when no faults are injected) ----
+    failed_s: float = 0.0           # crashed: 0 W, partitions the horizon
+    shipping_s: float = 0.0         # background NIC DMA (outside horizon)
+    shipping_energy_j: float = 0.0  # inbound KV migration joules
+    wasted_energy_j: float = 0.0    # lost work, moved out of busy
+    n_crashes: int = 0
+    n_recoveries: int = 0
+    n_migrations_in: int = 0
+    n_migrations_out: int = 0
 
     @property
     def total_energy_j(self) -> float:
         return (self.busy_energy_j + self.idle_energy_j
-                + self.gated_energy_j + self.transition_energy_j)
+                + self.gated_energy_j + self.transition_energy_j
+                + self.shipping_energy_j + self.wasted_energy_j)
 
     @property
     def accounted_s(self) -> float:
-        return self.busy_s + self.idle_s + self.gated_s + self.transition_s
+        return (self.busy_s + self.idle_s + self.gated_s
+                + self.transition_s + self.failed_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +150,8 @@ class ClusterReport:
     predicted_energy_j: float   # Σ e_K(q) under the fitted profiles
     # model name -> node ids hosting a replica (the sim's replica registry)
     replicas: tuple[tuple[str, tuple[int, ...]], ...] = ()
+    # requests the fleet gave up on (faulted runs only; empty otherwise)
+    abandoned: tuple[AbandonedRecord, ...] = ()
 
     # --- totals -----------------------------------------------------------
     @property
@@ -131,9 +171,18 @@ class ClusterReport:
         return sum(s.transition_energy_j for s in self.node_stats)
 
     @property
+    def total_shipping_energy_j(self) -> float:
+        return sum(s.shipping_energy_j for s in self.node_stats)
+
+    @property
+    def total_wasted_energy_j(self) -> float:
+        return sum(s.wasted_energy_j for s in self.node_stats)
+
+    @property
     def total_energy_j(self) -> float:
         return (self.total_busy_energy_j + self.total_idle_energy_j
-                + self.total_gated_energy_j + self.total_transition_energy_j)
+                + self.total_gated_energy_j + self.total_transition_energy_j
+                + self.total_shipping_energy_j + self.total_wasted_energy_j)
 
     @property
     def total_wakes(self) -> int:
@@ -151,6 +200,14 @@ class ClusterReport:
     def total_resumes(self) -> int:
         return sum(s.n_resumes for s in self.node_stats)
 
+    @property
+    def total_crashes(self) -> int:
+        return sum(s.n_crashes for s in self.node_stats)
+
+    @property
+    def total_migrations(self) -> int:
+        return sum(s.n_migrations_in for s in self.node_stats)
+
     def replica_counts(self) -> dict[str, int]:
         """Replicas hosted per model (from the sim's replica registry)."""
         return {name: len(nids) for name, nids in self.replicas}
@@ -165,12 +222,14 @@ class ClusterReport:
         return self.total_energy_j / tok if tok else 0.0
 
     def energy_breakdown(self) -> dict[str, float]:
-        """The four-bucket split (joules) — sums to total_energy_j."""
+        """The six-bucket split (joules) — sums to total_energy_j."""
         return {
             "busy": self.total_busy_energy_j,
             "idle": self.total_idle_energy_j,
             "gated": self.total_gated_energy_j,
             "transition": self.total_transition_energy_j,
+            "shipping": self.total_shipping_energy_j,
+            "wasted": self.total_wasted_energy_j,
         }
 
     # --- latency ----------------------------------------------------------
@@ -219,6 +278,17 @@ class ClusterReport:
             ok = int((self._slowdowns <= slowdown).sum())
         return ok / len(self.records)
 
+    def goodput(self, *, slo_s: float | None = None,
+                slowdown: float = 3.0) -> float:
+        """Fraction of *offered* requests (completed + abandoned) that
+        completed within the SLO — the availability metric: unlike
+        `slo_attainment`, giving up on a request hurts this number."""
+        offered = len(self.records) + len(self.abandoned)
+        if offered == 0:
+            return 1.0
+        return self.slo_attainment(slo_s=slo_s,
+                                   slowdown=slowdown) * len(self.records) / offered
+
     # --- structured export ------------------------------------------------
     def to_dict(self, *, include_records: bool = False) -> dict:
         """JSON-able snapshot: run identity, totals, the four-bucket
@@ -243,12 +313,17 @@ class ClusterReport:
                 "p99": self.latency_p99,
             },
             "slo_attainment": self.slo_attainment(),
+            "goodput": self.goodput(),
             "total_wakes": self.total_wakes,
             "total_gates": self.total_gates,
             "total_preemptions": self.total_preemptions,
             "total_resumes": self.total_resumes,
+            "total_crashes": self.total_crashes,
+            "total_migrations": self.total_migrations,
+            "n_abandoned": len(self.abandoned),
             "replicas": {name: list(nids) for name, nids in self.replicas},
             "node_stats": [dataclasses.asdict(s) for s in self.node_stats],
+            "abandoned": [dataclasses.asdict(a) for a in self.abandoned],
         }
         if include_records:
             out["records"] = [dataclasses.asdict(r) for r in self.records]
@@ -276,9 +351,11 @@ class ClusterReport:
         for (nid_s, model), child in served_fam.sorted_children():
             nid = int(nid_s)
             e = {b: registry.value("sim_node_energy_joules", nid, b)
-                 for b in ("busy", "idle", "gated", "transition")}
+                 for b in ("busy", "idle", "gated", "transition",
+                           "shipping", "wasted")}
             s = {b: registry.value("sim_node_seconds", nid, b)
-                 for b in ("busy", "idle", "gated", "transition")}
+                 for b in ("busy", "idle", "gated", "transition",
+                           "failed", "shipping")}
             stats.append(NodeStats(
                 node_id=nid,
                 model=model,
@@ -299,6 +376,16 @@ class ClusterReport:
                 n_preemptions=int(registry.value("sim_node_preemptions",
                                                  nid)),
                 n_resumes=int(registry.value("sim_node_resumes", nid)),
+                failed_s=s["failed"],
+                shipping_s=s["shipping"],
+                shipping_energy_j=e["shipping"],
+                wasted_energy_j=e["wasted"],
+                n_crashes=int(registry.value("sim_node_crashes", nid)),
+                n_recoveries=int(registry.value("sim_node_recoveries", nid)),
+                n_migrations_in=int(
+                    registry.value("sim_node_migrations_in", nid)),
+                n_migrations_out=int(
+                    registry.value("sim_node_migrations_out", nid)),
             ))
         stats.sort(key=lambda st: st.node_id)
         return cls(
@@ -321,6 +408,11 @@ class ClusterReport:
         if self.total_preemptions:
             power += (f"preempt={self.total_preemptions} "
                       f"resume={self.total_resumes} ")
+        if self.total_crashes or self.abandoned:
+            power += (f"crash={self.total_crashes} "
+                      f"migrate={self.total_migrations} "
+                      f"abandon={len(self.abandoned)} "
+                      f"wasted={self.total_wasted_energy_j:.0f}J ")
         return (f"{self.policy:>15s}: E={self.total_energy_j:12.0f}J "
                 f"(busy={self.total_busy_energy_j:.0f} idle={self.total_idle_energy_j:.0f}) "
                 f"{power}"
@@ -355,5 +447,13 @@ def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
             n_gates=n.n_gates,
             n_preemptions=n.n_preemptions,
             n_resumes=n.n_resumes,
+            failed_s=n.failed_s,
+            shipping_s=n.shipping_s,
+            shipping_energy_j=n.shipping_energy_j,
+            wasted_energy_j=n.wasted_energy_j,
+            n_crashes=n.n_crashes,
+            n_recoveries=n.n_recoveries,
+            n_migrations_in=n.n_migrations_in,
+            n_migrations_out=n.n_migrations_out,
         ))
     return tuple(out)

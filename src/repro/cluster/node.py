@@ -50,6 +50,36 @@ free: no re-prefill, the Fernandez-et-al observation that decode
 interruption is cheap while prefill re-work is not.  Decode segments are
 charged when they settle (segment end or preemption boundary), never up
 front, so a truncated segment is only ever charged once.
+
+Faults (repro.cluster.faults) extend the lifecycle with a FAILED state
+and two extra energy buckets:
+
+  * crash — quantized to the same decode step boundary preemption uses
+    (the in-flight token finishes; a prefill completes first; off-phase
+    crashes are immediate), so the dying node's last charge is still an
+    exact closed-form boundary charge.  Every active/suspended member
+    becomes a *refugee* with its KV position and accrued joules intact;
+    the sim loop ships refugees to a healthy replica (`receive_migrant`)
+    or books their joules as wasted (`book_waste`).  FAILED time draws
+    0 W into the `failed_s` bucket until the recovery event.
+  * shipping — a migrated member's KV bytes cross the interconnect on
+    the *recipient's* meter (`book_shipping`: bytes/ici_bw seconds at
+    j_per_byte_ici — a pull over the NIC, which still works when the
+    donor is dead).  Shipping runs as background DMA concurrent with
+    serving, so `shipping_s` is tracked but excluded from the horizon
+    partition; `shipping_energy_j` joins the energy total.
+  * wasted — work lost to an un-rescuable crash *moves* from the busy
+    bucket to `wasted_energy_j` (never double-counted), so the fleet
+    invariant "per-request attributed energy == Σ busy" and the full
+    partition busy+idle+gated+transition+shipping+wasted == total both
+    stay exact to 1e-9.
+
+Stragglers: a `slow` fault sets `self.slowdown = σ`; each phase fixes
+the factor at its start (`phase_stretch`) and is charged the *stretch
+transform* (t, e) → (σ·t, e + (σ−1)·t·accel_static_w): the same work at
+σ× the wall time, with the extra seconds burning accelerator static
+power.  The transform is linear in t, so the preemption split identity
+survives stretching exactly.
 """
 
 from __future__ import annotations
@@ -64,6 +94,7 @@ from repro.models.common import ModelConfig
 
 from repro.cluster.power import (
     ACTIVE,
+    FAILED,
     GATED,
     GATING,
     IDLE,
@@ -73,7 +104,8 @@ from repro.cluster.power import (
 from repro.cluster.trace import TracedRequest
 
 # event hints returned to the sim loop: (kind, absolute time)
-_PHASE, _WAKE, _GATE, _PREEMPT = "phase", "wake", "gate", "preempt"
+_PHASE, _WAKE, _GATE, _PREEMPT, _CRASH = ("phase", "wake", "gate",
+                                          "preempt", "crash")
 
 
 @dataclasses.dataclass
@@ -83,6 +115,12 @@ class _InFlight:
     generated: int = 0          # decode tokens produced so far
     energy_j: float = 0.0       # attributed share of phase energy
     preemptions: int = 0        # times this request was suspended
+    migrations: int = 0         # cross-node KV shipments en route
+    shipped_bytes: float = 0.0  # KV bytes moved across the interconnect
+    # per-node slice of energy_j: where each accrued joule's busy bucket
+    # lives, so an abandoned refugee's waste can be booked back on the
+    # node(s) that actually spent the energy (conservation stays per-node)
+    energy_on: dict = dataclasses.field(default_factory=dict)
 
     @property
     def remaining(self) -> int:
@@ -101,6 +139,8 @@ class Completion:
     energy_j: float             # attributed accelerator+host joules
     isolated_runtime_s: float   # batch-1 uncontended service time (slowdown SLO)
     preemptions: int = 0        # suspend/resume round-trips en route
+    migrations: int = 0         # cross-node KV shipments en route
+    shipped_bytes: float = 0.0  # KV bytes moved across the interconnect
 
 
 class ClusterNode:
@@ -156,11 +196,22 @@ class ClusterNode:
         self._preempt_steps: int | None = None   # pending truncation point
         self._preempt_victims: list[_InFlight] = []
 
+        # fault state (repro.cluster.faults drives the transitions)
+        self.slowdown = 1.0          # current straggler factor (σ >= 1)
+        self.draining = False        # governance: accept no new routes
+        self._phase_stretch = 1.0    # σ fixed at the running phase's start
+        self._crash_pending = False  # crash lands at the next boundary
+        self._crash_steps: int | None = None   # decode truncation point
+
         # power-state machine (starts powered and idle at t = 0)
         self._pstate = IDLE
         self._pstate_since = 0.0
 
-        # aggregate accounting: the four time/energy buckets
+        # aggregate accounting: time and energy buckets.  failed_s draws
+        # exactly 0 W (a crashed node is off the PDU), so it partitions
+        # the horizon without an energy bucket of its own; shipping_s is
+        # background NIC DMA concurrent with serving and stays *outside*
+        # the horizon partition while shipping_energy_j joins the total.
         self.busy_s = 0.0
         self.busy_energy_j = 0.0
         self.idle_s = 0.0
@@ -169,12 +220,20 @@ class ClusterNode:
         self.gated_energy_j = 0.0
         self.transition_s = 0.0
         self.transition_energy_j = 0.0
+        self.failed_s = 0.0
+        self.shipping_s = 0.0
+        self.shipping_energy_j = 0.0
+        self.wasted_energy_j = 0.0
         self.horizon_s = 0.0       # set by finalize()
         self.n_served = 0
         self.n_wakes = 0
         self.n_gates = 0
         self.n_preemptions = 0
         self.n_resumes = 0
+        self.n_crashes = 0
+        self.n_recoveries = 0
+        self.n_migrations_in = 0
+        self.n_migrations_out = 0
         self.freq_choices: Counter = Counter()   # (phase_kind, scale) -> count
 
     # ------------------------------------------------------------------
@@ -213,6 +272,38 @@ class ClusterNode:
     @property
     def awake(self) -> bool:
         return self._pstate in (ACTIVE, IDLE)
+
+    @property
+    def failed(self) -> bool:
+        return self._pstate == FAILED
+
+    @property
+    def accepting(self) -> bool:
+        """Routable: not crashed (nor about to be — a pending crash is
+        already fatal) and not being drained by governance."""
+        return (self._pstate != FAILED and not self.draining
+                and not self._crash_pending)
+
+    @property
+    def crash_pending(self) -> bool:
+        """A crash is quantizing to its charge boundary (the node is
+        still finishing the in-flight work before going FAILED).  The
+        sim loop defers a recovery event that pops in this window — a
+        node cannot recover from a failure that has not landed yet."""
+        return self._crash_pending
+
+    @property
+    def phase_stretch(self) -> float:
+        """Straggler factor σ of the running (or just-settled) phase —
+        fixed at phase start, read by the auditor's split-charge check."""
+        return self._phase_stretch
+
+    @property
+    def accel_static_w(self) -> float:
+        """Accelerator static draw — what a straggler's stalled extra
+        seconds burn (the host serving draw is charged on wall time
+        separately in `_charge`)."""
+        return self.hardware.accel.idle_w * self.hardware.n_accel
 
     @property
     def can_gate(self) -> bool:
@@ -255,8 +346,10 @@ class ClusterNode:
     def power_rank(self) -> int:
         """Tie-break key for routing: who serves a fresh request soonest.
         0 = powered (idle/active), 1 = waking, 2 = gated (one wake away),
-        3 = gating (must finish ramping down, then wake)."""
-        return {ACTIVE: 0, IDLE: 0, WAKING: 1, GATED: 2, GATING: 3}[self._pstate]
+        3 = gating (must finish ramping down, then wake), 4 = failed
+        (serves nothing until its recovery event)."""
+        return {ACTIVE: 0, IDLE: 0, WAKING: 1, GATED: 2, GATING: 3,
+                FAILED: 4}[self._pstate]
 
     # --- time/energy bucket accounting ---------------------------------
     def _accrue(self, now: float) -> None:
@@ -275,6 +368,8 @@ class ClusterNode:
         elif self._pstate in (GATING, WAKING):
             self.transition_s += dt
             self.transition_energy_j += dt * self.transition_power_w
+        elif self._pstate == FAILED:
+            self.failed_s += dt   # off the PDU: 0 W by definition
 
     def _set_state(self, state: str, now: float) -> None:
         if state == self._pstate:
@@ -296,11 +391,13 @@ class ClusterNode:
     @property
     def total_energy_j(self) -> float:
         return (self.busy_energy_j + self.idle_energy_j
-                + self.gated_energy_j + self.transition_energy_j)
+                + self.gated_energy_j + self.transition_energy_j
+                + self.shipping_energy_j + self.wasted_energy_j)
 
     @property
     def accounted_s(self) -> float:
-        return self.busy_s + self.idle_s + self.gated_s + self.transition_s
+        return (self.busy_s + self.idle_s + self.gated_s
+                + self.transition_s + self.failed_s)
 
     # ------------------------------------------------------------------
     def enqueue(self, req: TracedRequest, now: float
@@ -309,6 +406,10 @@ class ClusterNode:
         creates — ("phase", end_s) if an idle node starts serving,
         ("wake", end_s) if a gated node begins its on-demand wake — or
         None when the request just queues (node busy or mid-transition)."""
+        if self._pstate == FAILED:
+            raise RuntimeError(
+                f"request routed to failed node {self.node_id} — the sim "
+                f"loop must filter to accepting nodes")
         self.waiting.append(req)
         if self._pstate == GATED:
             return (_WAKE, self.begin_wake(now))
@@ -353,7 +454,9 @@ class ClusterNode:
         self._set_state(GATED, now)
         if self.telemetry is not None:
             self.telemetry.on_power_span(self, "gate", span_start, now)
-        if self.waiting:   # something arrived mid-ramp: wake right back up
+        if self.waiting or self.suspended:
+            # something arrived mid-ramp (a queued request, or a migrant
+            # whose KV landed during the ramp): wake right back up
             return (_WAKE, self.begin_wake(now))
         return None
 
@@ -368,11 +471,23 @@ class ClusterNode:
         self.busy_s += t
         self.busy_energy_j += e_total
         share = e_total / len(members)
+        nid = self.node_id
         for m in members:
             m.energy_j += share
+            m.energy_on[nid] = m.energy_on.get(nid, 0.0) + share
         if self.telemetry is not None:
             self.telemetry.on_phase_settle(self, kind, start_s, t, e_total,
                                            len(members), scale)
+
+    def _stretched(self, t: float, e_accel: float) -> tuple[float, float]:
+        """Apply the running phase's straggler factor: same work, σ× the
+        wall time, the extra (σ−1)·t seconds at accelerator static draw.
+        Exactly the identity transform at σ == 1, and linear in t, so the
+        decode split additivity survives stretching to 1e-9."""
+        s = self._phase_stretch
+        if s == 1.0:
+            return t, e_accel
+        return s * t, e_accel + (s - 1.0) * t * self.accel_static_w
 
     def _prefill(self, tau_in: int, batch: int) -> tuple[float, float, float]:
         if self.dvfs == "per_phase":
@@ -405,6 +520,7 @@ class ClusterNode:
         remain — a resume is free (KV position intact, no re-prefill), the
         member simply rejoins the active set for the coming segments."""
         self._phase_epoch += 1
+        self._phase_stretch = self.slowdown   # σ fixed for this phase
         slots = self.max_batch - len(self.active)
         joiners = [self.waiting.popleft()
                    for _ in range(min(slots, len(self.waiting)))]
@@ -419,6 +535,7 @@ class ClusterNode:
             members = [_InFlight(r, start_s=now) for r in joiners]
             s, t, e = self._prefill(max(r.tau_in for r in joiners),
                                     len(joiners))
+            t, e = self._stretched(t, e)
             self._set_state(ACTIVE, now)
             self._charge(members, t, e, kind="prefill", start_s=now, scale=s)
             self.active.extend(members)
@@ -440,6 +557,7 @@ class ClusterNode:
             n_steps = min(m.remaining for m in self.active)
             base = max(m.context for m in self.active)
             s, t, e = self._decode(base, n_steps, len(self.active))
+            t, e = self._stretched(t, e)
             self._set_state(ACTIVE, now)
             self._phase_members = list(self.active)
             self._phase_steps = n_steps
@@ -483,11 +601,20 @@ class ClusterNode:
                     isolated_runtime_s=self.sim.simulate(
                         m.req.tau_in, m.req.tau_out).runtime_s,
                     preemptions=m.preemptions,
+                    migrations=m.migrations,
+                    shipped_bytes=m.shipped_bytes,
                 ))
         self._phase_members = []
         self._phase_steps = 0
         self._phase_kind = None
         self._phase_end_s = None
+        if self._crash_pending:
+            # the crash was quantized to this settle (prefill end, or a
+            # decode that reached its natural boundary first): members
+            # finishing exactly here completed legitimately — the
+            # in-flight work is never re-run — and the rest are refugees
+            self._complete_crash(now)
+            return done, None
         return done, self._phase_event(self._start_phase(now))
 
     # --- decode-boundary preemption ------------------------------------
@@ -498,6 +625,12 @@ class ClusterNode:
                                     batch=len(self._phase_members),
                                     freq_scale=self._phase_scale)
         return t
+
+    def _segment_time_at(self, n_steps: int) -> float:
+        """Wall time of the running segment truncated to n_steps — the
+        closed form under the phase's straggler stretch (what elapsed
+        simulation time actually compares against)."""
+        return self._phase_stretch * self._decode_time_at(n_steps)
 
     def preempt_decode(self, request_id: int, now: float
                        ) -> tuple[str, float] | None:
@@ -515,23 +648,28 @@ class ClusterNode:
                        if m.req.request_id == request_id), None)
         if member is None:
             return None
-        elapsed = now - self._phase_start_s
-        # smallest n with time(n) >= elapsed: the boundary of the token in
-        # flight at `now` (never in the past — causality holds exactly)
-        lo, hi = 0, self._phase_steps
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if self._decode_time_at(mid) >= elapsed:
-                hi = mid
-            else:
-                lo = mid + 1
+        lo = self._boundary_at(now)
         if lo >= self._phase_steps:
             return None                    # segment finishing anyway
         self._preempt_steps = lo
         self._preempt_victims = [member]
         self._phase_epoch += 1             # stale segment-end event dies
-        self._phase_end_s = self._phase_start_s + self._decode_time_at(lo)
+        self._phase_end_s = self._phase_start_s + self._segment_time_at(lo)
         return (_PREEMPT, self._phase_end_s)
+
+    def _boundary_at(self, now: float) -> int:
+        """Smallest n with wall-time(n) >= now − phase start: the boundary
+        of the token in flight at `now` (never in the past — causality
+        holds exactly; stretched segments search the stretched clock)."""
+        elapsed = now - self._phase_start_s
+        lo, hi = 0, self._phase_steps
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self._segment_time_at(mid) >= elapsed:
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo
 
     def on_preempt_end(self, now: float) -> tuple[str, float] | None:
         """Settle a truncated decode segment at its preemption boundary:
@@ -545,6 +683,7 @@ class ClusterNode:
         t_done, e_done = self.sim.decode_cost(
             self._phase_base, n_done, batch=len(self._phase_members),
             freq_scale=self._phase_scale)
+        t_done, e_done = self._stretched(t_done, e_done)
         self._charge(self._phase_members, t_done, e_done, kind="decode",
                      start_s=self._phase_start_s, scale=self._phase_scale)
         if self.telemetry is not None:
@@ -566,4 +705,128 @@ class ClusterNode:
         self._phase_steps = 0
         self._phase_kind = None
         self._phase_end_s = None
+        if self._crash_pending:   # crash arrived while the settle was due
+            self._complete_crash(now)
+            return None
+        return self._phase_event(self._start_phase(now))
+
+    # --- faults: crash, recovery, migration, waste ---------------------
+    def begin_crash(self, now: float) -> tuple[str, float] | None:
+        """The node fails at `now`, quantized to the next exact charge
+        boundary so the dying node's last settlement stays a closed-form
+        charge:
+
+          * off-phase — immediate (nothing in flight; state goes FAILED
+            right here and the caller rescues `suspended`/`waiting`);
+          * mid-decode — the in-flight token finishes: returns a
+            ("crash", settle_s) event for the truncated-segment boundary
+            (the same binary search preemption uses), invalidating the
+            scheduled segment end via the phase epoch;
+          * mid-prefill, with a preemption already pending, or with the
+            decode at its natural boundary anyway — the crash lands at
+            the already-scheduled settle (`on_phase_end`/`on_preempt_end`
+            complete it), so no new event is needed.
+
+        Callers detect the immediate case via `self.failed`."""
+        if self._pstate == FAILED or self._crash_pending:
+            return None
+        self._crash_pending = True
+        if not self.busy:
+            self._complete_crash(now)
+            return None
+        if self._phase_kind == "decode" and not self.preempt_pending:
+            lo = self._boundary_at(now)
+            if lo < self._phase_steps:
+                self._crash_steps = lo
+                self._phase_epoch += 1     # stale segment-end event dies
+                self._phase_end_s = (self._phase_start_s
+                                     + self._segment_time_at(lo))
+                return (_CRASH, self._phase_end_s)
+        return None
+
+    def on_crash_settle(self, now: float) -> None:
+        """Settle the truncated decode segment at the crash boundary —
+        the donor's half of the cross-node split contract: charged via
+        the same closed-form split as a preemption (audited through the
+        same `on_preempt_split` hook) — then complete the crash."""
+        assert self._crash_steps is not None and self.in_decode
+        n_done = self._crash_steps
+        t_done, e_done = self.sim.decode_cost(
+            self._phase_base, n_done, batch=len(self._phase_members),
+            freq_scale=self._phase_scale)
+        t_done, e_done = self._stretched(t_done, e_done)
+        self._charge(self._phase_members, t_done, e_done, kind="decode",
+                     start_s=self._phase_start_s, scale=self._phase_scale)
+        if self.telemetry is not None:
+            self.telemetry.on_preempt_split(
+                self, self._phase_base, n_done, self._phase_steps,
+                len(self._phase_members), self._phase_scale)
+        for m in self._phase_members:
+            m.generated += n_done
+        assert all(m.remaining > 0 for m in self._phase_members)
+        self._crash_steps = None
+        self._complete_crash(now)
+
+    def _complete_crash(self, now: float) -> None:
+        """The quantized crash instant: every active member joins the
+        suspended set (KV position and accrued energy intact — they are
+        the refugees the sim loop migrates or abandons), all phase state
+        clears, every stale heap event for this node dies with the epoch
+        bump, and the node draws 0 W until its recovery event."""
+        for m in self.active:
+            self.suspended.append(m)
+        self.active = []
+        self._phase_members = []
+        self._phase_steps = 0
+        self._phase_kind = None
+        self._phase_end_s = None
+        self._preempt_steps = None
+        self._preempt_victims = []
+        self._phase_epoch += 1
+        self._crash_pending = False
+        self._set_state(FAILED, now)
+        self.n_crashes += 1
+
+    def recover(self, now: float) -> tuple[str, float] | None:
+        """The recovery event: FAILED → IDLE, serving whatever queued
+        (the sim drains waiting/suspended at crash time, so normally
+        nothing — the node simply rejoins the eligible set)."""
+        assert self._pstate == FAILED, f"recover from {self._pstate}"
+        self._set_state(IDLE, now)
+        self.n_recoveries += 1
+        return self._phase_event(self._start_phase(now))
+
+    def book_waste(self, e_j: float) -> None:
+        """Move `e_j` joules of lost work from the busy bucket to the
+        wasted bucket (a *move*, not a new charge: total energy is
+        unchanged and the fleet invariant 'attributed energy of completed
+        requests == Σ busy' stays exact)."""
+        self.busy_energy_j -= e_j
+        self.wasted_energy_j += e_j
+        if self.telemetry is not None:
+            self.telemetry.on_waste(self, e_j)
+
+    def book_shipping(self, ship_s: float, ship_j: float) -> None:
+        """Meter an inbound KV shipment (the recipient pulls over its
+        interconnect: bytes/ici_bw seconds at j_per_byte_ici, billed by
+        the sim loop).  Background NIC DMA — concurrent with serving, so
+        the seconds stay outside the horizon partition."""
+        self.shipping_s += ship_s
+        self.shipping_energy_j += ship_j
+
+    def receive_migrant(self, member: _InFlight, now: float
+                        ) -> tuple[str, float] | None:
+        """A shipped refugee lands (its KV just finished transferring):
+        it joins the suspended set and resumes for free at the next phase
+        start with a spare slot — exactly the preemption resume path, now
+        crossing nodes.  Mirrors `enqueue`'s power handling: a gated
+        recipient wakes on demand."""
+        assert self._pstate != FAILED, "migrant shipped to a failed node"
+        self.suspended.append(member)
+        member.migrations += 1
+        self.n_migrations_in += 1
+        if self._pstate == GATED:
+            return (_WAKE, self.begin_wake(now))
+        if self._pstate in (WAKING, GATING) or self.busy:
+            return None
         return self._phase_event(self._start_phase(now))

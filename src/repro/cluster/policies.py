@@ -57,9 +57,14 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.energy_model import LLMProfile, normalized_costs, objective_matrix
-from repro.core.scheduler import schedule, schedule_replicated
+from repro.core.scheduler import (
+    schedule,
+    schedule_replicated,
+    schedule_with_liveness,
+)
 from repro.core.sweep import IncrementalScheduler
 
+from repro.cluster.faults import NORMAL, RECOVER, FaultTrace
 from repro.cluster.metrics import replica_registry  # noqa: F401  (re-export)
 from repro.cluster.predictors import TauOutPredictor
 from repro.cluster.trace import ArrivalTrace, TracedRequest
@@ -87,15 +92,43 @@ class RoutingPolicy:
         """Causal completion feedback (a metrics.RequestRecord): the only
         channel through which a non-oracle policy learns true τout."""
 
+    # --- rescue hooks (consulted by the event loop on fault runs only) --
+    def retry_delay(self, req: TracedRequest, attempts: int,
+                    now: float) -> float | None:
+        """Backoff before re-routing a request no node would accept:
+        capped exponential (1, 2, 4, ... up to 60 s), giving up — return
+        None to abandon — after 8 attempts.  Policies override for
+        deadline-aware abandonment."""
+        if attempts >= 8:
+            return None
+        return min(float(2 ** attempts), 60.0)
+
+    def allow_rerun(self, req: TracedRequest, now: float) -> bool:
+        """Whether a refugee decode with no surviving same-model replica
+        may re-run from scratch on a different model (its accrued joules
+        are wasted either way).  Default: abandon instead."""
+        return False
+
+    def on_fault(self, event, nodes: Sequence, now: float) -> None:
+        """Fault-stream notification (a faults.FaultEvent, after the sim
+        applied it) — the governance channel for failover policies."""
+
+    def drain_updates(self, nodes: Sequence,
+                      now: float) -> list[tuple[int, bool]] | None:
+        """Straggler governance, polled at completion boundaries: return
+        [(node_id, drain?), ...] to start/stop draining nodes (a draining
+        node takes no new routes and ships its parked refugees off; its
+        running decodes finish naturally).  Default: never drains."""
+        return None
+
     # ------------------------------------------------------------------
     @staticmethod
     def _least_loaded(candidates: Sequence) -> int:
         # equal load breaks toward the node that can serve soonest
-        # (powered < waking < gated < gating); always-on fleets have
-        # power_rank 0 everywhere, so the PR 1 ordering is unchanged
+        # (powered < waking < gated < gating < failed); always-on fleets
+        # have power_rank 0 everywhere, so the PR 1 ordering is unchanged
         best = min(candidates,
-                   key=lambda n: (n.load(), getattr(n, "power_rank", 0),
-                                  n.node_id))
+                   key=lambda n: (n.load(), n.power_rank, n.node_id))
         return best.node_id
 
     @staticmethod
@@ -389,7 +422,7 @@ class ReplicaEnergyPolicy(ZetaOnlinePolicy):
 
     def select(self, req, nodes, now):
         e, a = self._observe(req, nodes)
-        wake = np.array([getattr(n, "pending_wake_j", 0.0) for n in nodes])
+        wake = np.array([n.pending_wake_j for n in nodes])
         obj = (self.zeta * (e + wake / self.wake_amortize) / self._e_max
                - (1.0 - self.zeta) * a / self._a_max)
         order = np.argsort(obj, kind="stable")
@@ -433,6 +466,194 @@ class ReplicaOraclePolicy(OfflineOraclePolicy):
 
     def select(self, req, nodes, now):
         return self._node_of[req.request_id]
+
+
+class FailoverPolicy(RoutingPolicy):
+    """Fault-tolerant wrapper: any routing policy, plus rescue governance.
+
+    Routing delegates to the wrapped `inner` policy (the sim already
+    filters the candidate list to accepting nodes on fault runs), and the
+    wrapper supplies the fault-run hooks:
+
+      * *retry* — capped exponential backoff (`base_delay_s` doubling to
+        `max_delay_s`) when no node accepts, up to `max_retries` attempts;
+        deadline-aware: with `abandon_after_s` set, a request whose age
+        exceeds it is abandoned instead of retried again.
+      * *re-run* — `rerun=True` (default) lets a refugee with no
+        surviving same-model replica restart from scratch on another
+        model rather than be abandoned.
+      * *straggler mitigation* — a causal per-node EWMA of realized
+        service stretch ((finish − start) / isolated runtime, fed only by
+        the `observe_completion` channel, never by telemetry or the fault
+        trace) is compared against the fleet median at every completion;
+        a node exceeding `straggle_threshold` × median (after
+        `min_observations` samples, and never the last accepting replica
+        of its model) is *drained* — it finishes its running work, ships
+        parked refugees off, and takes no new routes.  A drained node is
+        probed again after `drain_cooldown_s` (its EWMA resets), and a
+        `normal`/`recover` fault event un-drains it immediately — the
+        drain-before-gate loop of the straggler-governance design."""
+
+    def __init__(self, inner: RoutingPolicy, *,
+                 max_retries: int = 8, base_delay_s: float = 1.0,
+                 max_delay_s: float = 60.0,
+                 abandon_after_s: float | None = None,
+                 rerun: bool = True,
+                 straggle_threshold: float = 1.75,
+                 min_observations: int = 4,
+                 drain_cooldown_s: float = 120.0,
+                 ewma_alpha: float = 0.3):
+        if max_retries < 0 or base_delay_s <= 0 or max_delay_s < base_delay_s:
+            raise ValueError("need max_retries >= 0 and "
+                             "0 < base_delay_s <= max_delay_s")
+        if straggle_threshold <= 1.0:
+            raise ValueError("straggle_threshold must be > 1")
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        self.inner = inner
+        self.name = f"failover({inner.name})"
+        self.max_retries = max_retries
+        self.base_delay_s = base_delay_s
+        self.max_delay_s = max_delay_s
+        self.abandon_after_s = abandon_after_s
+        self.rerun = rerun
+        self.straggle_threshold = straggle_threshold
+        self.min_observations = min_observations
+        self.drain_cooldown_s = drain_cooldown_s
+        self.ewma_alpha = ewma_alpha
+        self._stretch: dict[int, tuple[int, float]] = {}  # nid -> (n, ewma)
+        self._drained: dict[int, float] = {}              # nid -> drained_at
+        self._undrain_now: set[int] = set()
+        self._telemetry = None
+
+    # simulate_cluster assigns `policy.telemetry` per run; forward it so
+    # the wrapped policy's own hooks (e.g. prediction-error gauges) fire
+    @property
+    def telemetry(self):
+        return self._telemetry
+
+    @telemetry.setter
+    def telemetry(self, value):
+        self._telemetry = value
+        self.inner.telemetry = value
+
+    def attach(self, nodes, trace, zeta):
+        self.inner.attach(nodes, trace, zeta)
+        self._stretch = {}
+        self._drained = {}
+        self._undrain_now = set()
+
+    def select(self, req, nodes, now):
+        return self.inner.select(req, nodes, now)
+
+    def observe_completion(self, record, now):
+        self.inner.observe_completion(record, now)
+        if record.isolated_runtime_s > 0:
+            stretch = ((record.finish_s - record.start_s)
+                       / record.isolated_runtime_s)
+            n, ew = self._stretch.get(record.node_id, (0, 0.0))
+            ew = (stretch if n == 0
+                  else (1.0 - self.ewma_alpha) * ew
+                  + self.ewma_alpha * stretch)
+            self._stretch[record.node_id] = (n + 1, ew)
+
+    def retry_delay(self, req, attempts, now):
+        if (self.abandon_after_s is not None
+                and now - req.arrival_s >= self.abandon_after_s):
+            return None   # deadline-aware abandon: too old to keep trying
+        if attempts >= self.max_retries:
+            return None
+        return min(self.base_delay_s * (2.0 ** attempts), self.max_delay_s)
+
+    def allow_rerun(self, req, now):
+        return self.rerun
+
+    def on_fault(self, event, nodes, now):
+        if event.kind in (RECOVER, NORMAL):
+            # the disruption this node was drained (or suspect) for is
+            # over: fresh slate, and un-drain at the next governance poll
+            self._stretch.pop(event.node_id, None)
+            if event.node_id in self._drained:
+                self._undrain_now.add(event.node_id)
+
+    def drain_updates(self, nodes, now):
+        updates: list[tuple[int, bool]] = []
+        for nid in sorted(self._drained):
+            if (nid in self._undrain_now
+                    or now - self._drained[nid] >= self.drain_cooldown_s):
+                del self._drained[nid]
+                self._undrain_now.discard(nid)
+                self._stretch.pop(nid, None)   # probe with a fresh EWMA
+                updates.append((nid, False))
+        seasoned = {nid: ew for nid, (n, ew) in self._stretch.items()
+                    if n >= self.min_observations}
+        if len(seasoned) >= 2:
+            med = float(np.median(list(seasoned.values())))
+            if med > 0:
+                for node in nodes:
+                    nid = node.node_id
+                    ew = seasoned.get(nid)
+                    if (ew is None or nid in self._drained
+                            or not node.accepting):
+                        continue
+                    if ew > self.straggle_threshold * med:
+                        peers = [n for n in nodes
+                                 if n.model_name == node.model_name
+                                 and n.accepting and n.node_id != nid]
+                        if peers:   # never drain the last replica standing
+                            self._drained[nid] = now
+                            updates.append((nid, True))
+        return updates or None
+
+
+class FailureAwareOraclePolicy(OfflineOraclePolicy):
+    """Offline oracle re-solved against the realized fault trace: the
+    Eq. 2 per-query argmin restricted to models that remain *reachable*
+    on that trace (``core.scheduler.schedule_with_liveness``).
+
+    Liveness notions:
+
+      * ``"ever_after"`` (default) — a model is excluded for a query only
+        when every hosting node is down at the query's arrival *and never
+        recovers* (``FaultTrace.down_forever_from``).  Any capacity an
+        online policy could reach via retry/backoff stays priced in, so
+        the oracle objective is a provable lower bound on every online
+        policy's realized objective over the same trace — the bound the
+        fig4 availability cell asserts.
+      * ``"at_arrival"`` — stricter realism: excluded when every host is
+        down at the arrival instant (no waiting for recovery).
+
+    At serving time the planned model's hosts may all be dead or draining
+    (the plan only guards against *permanent* loss): routing then falls
+    back over whatever accepts, and `allow_rerun` keeps refugees alive
+    across models — the oracle never abandons recoverable work."""
+
+    name = "failure_oracle"
+
+    def __init__(self, faults: FaultTrace, *, liveness: str = "ever_after"):
+        super().__init__()
+        if liveness not in ("ever_after", "at_arrival"):
+            raise ValueError(f"unknown liveness {liveness!r}")
+        self.faults = faults
+        self.liveness = liveness
+
+    def attach(self, nodes, trace, zeta):
+        profiles = unique_profiles(nodes)
+        registry = replica_registry(nodes)
+        down = (self.faults.is_down if self.liveness == "at_arrival"
+                else self.faults.down_forever_from)
+        live = np.ones((len(trace), len(profiles)), dtype=bool)
+        for i, r in enumerate(trace.requests):
+            for j, p in enumerate(profiles):
+                live[i, j] = any(not down(nid, r.arrival_s)
+                                 for nid in registry[p.name])
+        asg = schedule_with_liveness(profiles, trace.queries(), zeta, live)
+        self._model_of = {
+            r.request_id: asg.model_names[int(k)]
+            for r, k in zip(trace.requests, asg.assignee)}
+
+    def allow_rerun(self, req, now):
+        return True
 
 
 # ---------------------------------------------------------------------------
@@ -542,7 +763,7 @@ class SLOPreemptionPolicy(_TauOutMixin, PreemptionPolicy):
     def consider(self, req, node, nodes, now):
         model = node.profile.name
         self._fold(self._waiting_query(req, model))  # every arrival feeds
-        if (not getattr(node, "in_decode", False) or node.preempt_pending
+        if (not node.in_decode or node.preempt_pending
                 or len(node.active) < node.max_batch or not node.waiting):
             return None
         # the request the freed slot will actually admit: the FIFO head

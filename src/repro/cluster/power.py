@@ -73,6 +73,11 @@ IDLE = "idle"
 GATED = "gated"
 GATING = "gating"
 WAKING = "waking"
+# a crashed node (repro.cluster.faults): draws 0 W, serves nothing, and
+# rejoins at IDLE on its recovery event.  Not an autoscaler state — a
+# failed node is neither awake nor gateable, and `_awake` counting it
+# would let the predictive policies size phantom capacity.
+FAILED = "failed"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,18 +1,41 @@
 """The discrete-event loop: streaming arrivals over a heterogeneous fleet.
 
-Six event kinds drive the simulation — request arrivals (from the trace),
+Ten event kinds drive the simulation — request arrivals (from the trace),
 node phase completions (from the continuous-batching state machines),
 preemption settlements (a decode segment cut at its next step boundary),
-and the power-management triple: wake completions, gate completions, and
-idle timers (armed by the autoscaler when a node runs out of work).
-Events are processed in (time, sequence) order; the sequence counter makes
-simultaneous events deterministic, so a fixed trace + policy (+ autoscaler
-+ preempter) always yields a bit-identical ClusterReport.
+the power-management triple: wake completions, gate completions, and
+idle timers (armed by the autoscaler when a node runs out of work) — and,
+when a `faults=` FaultTrace is supplied, the disruption quartet: fault
+events (crash/recover/slow/normal from the trace), crash settlements (a
+dying node's final decode truncation, quantized to the same step boundary
+preemption uses), KV-shipping completions (a refugee's state landing on a
+healthy replica), and routing retries (capped-backoff re-routes when no
+node is accepting).  Events are processed in (time, sequence) order; the
+sequence counter makes simultaneous events deterministic, so a fixed
+trace + policy (+ autoscaler + preempter + fault trace) always yields a
+bit-identical ClusterReport.
 
-Phase-shaped events (segment end, preemption settle) carry the node's
-*phase epoch* at scheduling time: preempting a segment bumps the epoch, so
-the stale segment-end event still sitting in the heap is recognized and
-dropped when popped — the only event-invalidation path in the loop.
+Phase-shaped events (segment end, preemption/crash settle) and the power
+transitions carry the node's *phase epoch* at scheduling time: preempting
+a segment — or crashing the node — bumps the epoch, so stale events still
+sitting in the heap are recognized and dropped when popped, the only
+event-invalidation path in the loop.
+
+Rescue orchestration (fault runs only): when a node fails, its waiting
+requests re-route through the policy over the *accepting* sub-fleet (with
+capped exponential backoff via `policy.retry_delay` when nobody accepts,
+abandoning when the policy gives up), and its suspended/active decodes
+become refugees — each ships its KV to the least-loaded accepting replica
+of the same model (bytes = context × KV-bytes/token, at the recipient's
+interconnect bandwidth and J/byte, metered by `book_shipping`), resuming
+for free at the recipient's next phase start.  With no surviving replica
+the refugee is either re-run from scratch elsewhere (`policy.allow_rerun`)
+or abandoned; either way its accrued joules move to the wasted bucket so
+the cross-node settlement contract (donor's truncated charge + shipping +
+recipient's resumed charge, or waste) closes to 1e-9.  `faults=None`
+skips every fault code path exactly — the no-fault loop is bit-identical
+to previous PRs — and an *empty* FaultTrace differs only by the eligible-
+node filter, which is the identity on a healthy fleet.
 
 Without an `autoscaler=`, no idle timer is ever armed and no node ever
 leaves the ACTIVE/IDLE pair; without a `preempter=`, no decode segment is
@@ -48,10 +71,17 @@ perf-suite `metrics_overhead` gate pins both that and ≤5% overhead).
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from typing import Sequence
 
-from repro.cluster.metrics import ClusterReport, RequestRecord, per_node_stats
+from repro.cluster.faults import CRASH, RECOVER, SLOW, FaultTrace
+from repro.cluster.metrics import (
+    AbandonedRecord,
+    ClusterReport,
+    RequestRecord,
+    per_node_stats,
+)
 from repro.cluster.node import ClusterNode
 from repro.cluster.policies import (
     PreemptionPolicy,
@@ -62,13 +92,18 @@ from repro.cluster.policies import (
 )
 from repro.cluster.power import GATED, IDLE, AutoscalePolicy
 from repro.cluster.trace import ArrivalTrace
+from repro.energy.costs import kv_bytes_per_token
 
 (_ARRIVAL, _PHASE_END, _WAKE_END, _GATE_END, _IDLE_TIMER,
- _PREEMPT_END) = range(6)
+ _PREEMPT_END, _FAULT, _CRASH_END, _SHIP_END, _RETRY) = range(10)
 
 _EVENT_CODE = {"phase": _PHASE_END, "wake": _WAKE_END, "gate": _GATE_END,
-               "preempt": _PREEMPT_END}
-_EPOCH_GUARDED = (_PHASE_END, _PREEMPT_END)   # payload carries (nid, epoch)
+               "preempt": _PREEMPT_END, "crash": _CRASH_END}
+# payload carries (nid, epoch); a crash bumps the epoch, so stale
+# wake/gate completions on a crashed node die in the heap too (nothing
+# else can bump the epoch mid-transition, so guarding them is free)
+_EPOCH_GUARDED = (_PHASE_END, _PREEMPT_END, _WAKE_END, _GATE_END,
+                  _CRASH_END)
 
 
 def simulate_cluster(
@@ -79,6 +114,7 @@ def simulate_cluster(
     zeta: float = 0.5,
     autoscaler: AutoscalePolicy | None = None,
     preempter: PreemptionPolicy | None = None,
+    faults: FaultTrace | None = None,
     telemetry=None,
 ) -> ClusterReport:
     """Serve the whole trace; returns the aggregate ClusterReport."""
@@ -107,13 +143,22 @@ def simulate_cluster(
     sample_every = telemetry.sample_every_s if telemetry is not None else None
     next_sample = 0.0
 
+    fault_mode = faults is not None
     events: list[tuple[float, int, int, object]] = []
     seq = 0
     for req in trace:
         heapq.heappush(events, (req.arrival_s, seq, _ARRIVAL, req))
         seq += 1
+    if fault_mode:
+        for fev in faults:
+            if fev.node_id not in by_id:
+                raise ValueError(f"fault trace names unknown node "
+                                 f"{fev.node_id}")
+            heapq.heappush(events, (fev.time_s, seq, _FAULT, fev))
+            seq += 1
 
     records: list[RequestRecord] = []
+    abandoned: list[AbandonedRecord] = []
     makespan = trace.duration_s
     arrivals_left = len(trace)
 
@@ -140,6 +185,132 @@ def simulate_cluster(
                                     (node.node_id, node.power_state_since)))
             seq += 1
 
+    # --- rescue orchestration (fault runs only) ------------------------
+    def fallback_node(eligible: list[ClusterNode]) -> ClusterNode:
+        """Deterministic stand-in when the policy's pick is not accepting
+        (e.g. a static oracle routing onto a crashed replica)."""
+        return min(eligible,
+                   key=lambda n: (n.load(), n.power_rank, n.node_id))
+
+    def abandon_request(req, now: float, reason: str, attempts: int, *,
+                        member=None, model: str = "") -> None:
+        """Give up on a request; any joules a stranded refugee already
+        accrued *move* to the wasted bucket on the node(s) that spent
+        them, so conservation closes over completed + abandoned work."""
+        nonlocal makespan
+        wasted = 0.0
+        if member is not None:
+            for w_nid, e in sorted(member.energy_on.items()):
+                by_id[w_nid].book_waste(e)
+                wasted += e
+            member.energy_on.clear()
+        rec = AbandonedRecord(
+            request_id=req.request_id, model=model,
+            tau_in=req.tau_in, tau_out=req.tau_out,
+            arrival_s=req.arrival_s, abandoned_s=now, reason=reason,
+            attempts=attempts, wasted_j=wasted)
+        abandoned.append(rec)
+        makespan = max(makespan, now)
+        if telemetry is not None:
+            telemetry.on_abandon(rec, now)
+
+    def schedule_retry(req, attempts: int, now: float) -> None:
+        """No accepting node right now: ask the policy when (whether) to
+        try again."""
+        nonlocal seq
+        delay = policy.retry_delay(req, attempts, now)
+        if delay is None:
+            abandon_request(req, now, "no_capacity", attempts)
+            return
+        heapq.heappush(events, (now + delay, seq, _RETRY,
+                                (req, attempts + 1)))
+        seq += 1
+
+    def route_or_retry(req, attempts: int, now: float) -> None:
+        """Re-route a displaced (or backed-off) request over the
+        accepting sub-fleet; park it in the retry loop when empty."""
+        eligible = [n for n in nodes if n.accepting]
+        if not eligible:
+            schedule_retry(req, attempts, now)
+            return
+        nid = policy.select(req, eligible, now)
+        node = by_id.get(nid)
+        if node is None or not node.accepting:
+            node = fallback_node(eligible)
+        if telemetry is not None:
+            telemetry.on_retry(req, node.node_id, attempts, now)
+        push(node, node.enqueue(req, now))
+
+    def dispatch_refugee(member, home: ClusterNode, now: float) -> None:
+        """Rescue one suspended decode stranded on `home` (crashed or
+        draining): ship its KV to the least-loaded accepting replica of
+        the same model — bytes = context × KV-bytes/token, pulled at the
+        recipient's interconnect bandwidth and J/byte (a pull still works
+        when the donor is dead) — or, with no surviving replica, re-run
+        it from scratch elsewhere / abandon it, wasting the accrued
+        joules either way."""
+        nonlocal seq
+        candidates = [n for n in nodes
+                      if n.accepting and n.model_name == home.model_name
+                      and n.node_id != home.node_id]
+        if candidates:
+            recipient = fallback_node(candidates)
+            n_bytes = member.context * kv_bytes_per_token(home.sim.cfg)
+            ship_s = n_bytes / recipient.hardware.accel.ici_bw
+            ship_j = n_bytes * recipient.hardware.accel.j_per_byte_ici
+            recipient.book_shipping(ship_s, ship_j)
+            member.shipped_bytes += n_bytes
+            home.n_migrations_out += 1
+            if telemetry is not None:
+                telemetry.on_migration(home, recipient, member.context,
+                                       n_bytes, ship_s, ship_j, now)
+            heapq.heappush(events, (now + ship_s, seq, _SHIP_END,
+                                    (recipient.node_id, member)))
+            seq += 1
+        elif (policy.allow_rerun(member.req, now)
+              and any(n.accepting for n in nodes)):
+            # no same-model survivor, but the policy would rather re-run
+            # from scratch on another model than give up: the decode done
+            # so far is lost — move its joules to the wasted bucket
+            for w_nid, e in sorted(member.energy_on.items()):
+                by_id[w_nid].book_waste(e)
+            member.energy_on.clear()
+            route_or_retry(member.req, 0, now)
+        else:
+            abandon_request(member.req, now, "no_survivor", 0,
+                            member=member, model=home.model_name)
+
+    def handle_failed(node: ClusterNode, now: float) -> None:
+        """A node just went FAILED: every suspended decode becomes a
+        refugee to rescue, every queued request re-routes."""
+        while node.suspended:
+            dispatch_refugee(node.suspended.popleft(), node, now)
+        while node.waiting:
+            route_or_retry(node.waiting.popleft(), 0, now)
+
+    def apply_drains(now: float) -> None:
+        """Straggler governance: let the policy drain (or un-drain)
+        nodes.  Draining stops new routes, ships parked refugees off,
+        and re-routes the queue; running decodes finish naturally —
+        drain-before-gate, never mid-flight abandonment."""
+        updates = policy.drain_updates(nodes, now)
+        if not updates:
+            return
+        for d_nid, drain in updates:
+            dnode = by_id[d_nid]
+            if drain and not dnode.draining and not dnode.failed:
+                dnode.draining = True
+                if telemetry is not None:
+                    telemetry.on_drain(dnode, True, now)
+                while dnode.suspended:
+                    dispatch_refugee(dnode.suspended.popleft(), dnode, now)
+                while dnode.waiting:
+                    route_or_retry(dnode.waiting.popleft(), 0, now)
+            elif not drain and dnode.draining:
+                dnode.draining = False
+                if telemetry is not None:
+                    telemetry.on_drain(dnode, False, now)
+
     for n in nodes:   # the fleet starts idle: give the autoscaler a shot
         arm_idle_timer(n, 0.0)
 
@@ -163,10 +334,22 @@ def simulate_cluster(
                         prewoken += 1
                 if telemetry is not None:
                     telemetry.on_prewake(autoscaler.name, prewoken)
-            nid = policy.select(req, nodes, now)
-            if nid not in by_id:
-                raise ValueError(f"{policy.name} routed to unknown node {nid}")
-            node = by_id[nid]
+            if fault_mode:
+                eligible = [n for n in nodes if n.accepting]
+                if not eligible:   # whole fleet down/draining: back off
+                    schedule_retry(req, 0, now)
+                    continue
+                nid = policy.select(req, eligible, now)
+                node = by_id.get(nid)
+                if node is None or not node.accepting:
+                    node = fallback_node(eligible)
+                    nid = node.node_id
+            else:
+                nid = policy.select(req, nodes, now)
+                if nid not in by_id:
+                    raise ValueError(
+                        f"{policy.name} routed to unknown node {nid}")
+                node = by_id[nid]
             if telemetry is not None:
                 telemetry.on_arrival(req, policy.name, nid, node.model_name,
                                      now)
@@ -200,6 +383,8 @@ def simulate_cluster(
                     energy_j=c.energy_j,
                     isolated_runtime_s=c.isolated_runtime_s,
                     preemptions=c.preemptions,
+                    migrations=c.migrations,
+                    shipped_bytes=c.shipped_bytes,
                 )
                 policy.observe_completion(rec, now)
                 if autoscaler is not None:
@@ -211,25 +396,94 @@ def simulate_cluster(
                 records.append(rec)
             push(node, next_ev)
             if next_ev is None:
-                arm_idle_timer(node, now)
+                if fault_mode and node.failed:
+                    # crash quantized to this settle: rescue the refugees
+                    handle_failed(node, now)
+                else:
+                    arm_idle_timer(node, now)
+            if fault_mode and completions:
+                apply_drains(now)   # fed by the observe_completion EWMA
         elif kind == _PREEMPT_END:
             nid, epoch = payload
             node = by_id[nid]
             if epoch != node.phase_epoch:
-                continue   # defensive: nothing invalidates settles today
+                continue   # a crash got there first: this settle is void
             next_ev = node.on_preempt_end(now)
             push(node, next_ev)
             if next_ev is None:
-                arm_idle_timer(node, now)
+                if fault_mode and node.failed:
+                    handle_failed(node, now)
+                else:
+                    arm_idle_timer(node, now)
         elif kind == _WAKE_END:
-            node = by_id[payload]
+            nid, epoch = payload
+            node = by_id[nid]
+            if epoch != node.phase_epoch:
+                continue   # node crashed mid-wake
             next_ev = node.on_wake_end(now)
             push(node, next_ev)
             if next_ev is None:   # pre-woken with nothing to do (yet)
                 arm_idle_timer(node, now)
         elif kind == _GATE_END:
-            node = by_id[payload]
+            nid, epoch = payload
+            node = by_id[nid]
+            if epoch != node.phase_epoch:
+                continue   # node crashed mid-gate
             push(node, node.on_gate_end(now))
+        elif kind == _FAULT:
+            fev = payload
+            node = by_id[fev.node_id]
+            if telemetry is not None:
+                telemetry.on_fault(fev, node, now)
+            if fev.kind == CRASH:
+                crash_ev = node.begin_crash(now)
+                if crash_ev is not None:
+                    push(node, crash_ev)   # truncation settle scheduled
+                elif node.failed:          # off-phase: crashed right here
+                    handle_failed(node, now)
+                # else: pending at an already-scheduled settle — the
+                # _PHASE_END/_PREEMPT_END handler completes it
+            elif fev.kind == RECOVER:
+                if node.failed:
+                    next_ev = node.recover(now)
+                    push(node, next_ev)
+                    if next_ev is None:
+                        arm_idle_timer(node, now)
+                elif node.crash_pending:
+                    # the crash is still quantizing to its boundary: a
+                    # node cannot recover before its failure lands —
+                    # re-deliver the recovery at the settle instant (the
+                    # settle event pops first there: earlier sequence)
+                    heapq.heappush(
+                        events,
+                        (node.phase_end_s, seq, _FAULT,
+                         dataclasses.replace(fev,
+                                             time_s=node.phase_end_s)))
+                    seq += 1
+            elif fev.kind == SLOW:
+                node.slowdown = fev.value
+            else:   # NORMAL: straggler episode over
+                node.slowdown = 1.0
+            policy.on_fault(fev, nodes, now)
+        elif kind == _CRASH_END:
+            nid, epoch = payload
+            node = by_id[nid]
+            if epoch != node.phase_epoch:
+                continue
+            node.on_crash_settle(now)
+            handle_failed(node, now)
+        elif kind == _SHIP_END:
+            nid, member = payload
+            node = by_id[nid]
+            if not node.accepting:
+                # the recipient died (or started draining) while the KV
+                # was in flight: ship onward from its books
+                dispatch_refugee(member, node, now)
+            else:
+                push(node, node.receive_migrant(member, now))
+        elif kind == _RETRY:
+            req, attempts = payload
+            route_or_retry(req, attempts, now)
         else:  # _IDLE_TIMER
             nid, token = payload
             node = by_id[nid]
@@ -249,18 +503,25 @@ def simulate_cluster(
                     # stops with the last arrival so the loop terminates.
                     arm_idle_timer(node, now)
 
-    if len(records) != len(trace):
+    if len(records) + len(abandoned) != len(trace):
         raise RuntimeError(
-            f"served {len(records)}/{len(trace)} requests — event loop bug")
+            f"served {len(records)} + abandoned {len(abandoned)} != "
+            f"{len(trace)} requests — event loop bug")
     if any(n.suspended for n in nodes):
         raise RuntimeError("preempted requests left suspended at the end of "
-                           "the trace — resume logic bug")
+                           "the trace — resume/rescue logic bug")
     records.sort(key=lambda r: r.request_id)
+    abandoned.sort(key=lambda r: r.request_id)
     for n in nodes:   # close every node's books at the common horizon
         n.finalize(makespan)
 
     profiles = unique_profiles(nodes)
-    queries = trace.queries()
+    # abandoned requests have no realized assignment: the objective is
+    # evaluated over the completed records' own queries (identical to the
+    # full trace when nothing was abandoned — record order is request_id
+    # order, which is trace order)
+    queries = (trace.queries() if not abandoned
+               else [(r.tau_in, r.tau_out) for r in records])
     assigned = [r.model for r in records]
     objective = (objective_of_assignment(profiles, queries, assigned, zeta)
                  if records else 0.0)
@@ -277,6 +538,7 @@ def simulate_cluster(
         objective=objective,
         predicted_energy_j=predicted,
         replicas=tuple((name, tuple(nids)) for name, nids in replicas.items()),
+        abandoned=tuple(abandoned),
     )
     if telemetry is not None:
         telemetry.finalize(nodes, report)
@@ -297,16 +559,20 @@ def compare_policies(
     zeta: float = 0.5,
     autoscaler_builder=None,
     preempter_builder=None,
+    faults: FaultTrace | None = None,
 ) -> dict[str, ClusterReport]:
     """Run every policy on identical fresh clusters over the same trace.
     `autoscaler_builder`/`preempter_builder` are zero-arg factories
     (autoscalers and preemption policies hold per-run state, so they need
-    the same fresh-per-run treatment as nodes)."""
+    the same fresh-per-run treatment as nodes).  A `faults=` trace is
+    replayed identically against every policy — the apples-to-apples
+    availability comparison fig4's MTTF sweep plots."""
     out: dict[str, ClusterReport] = {}
     for pol in policies:
         nodes = fresh_nodes(node_builders)
         scaler = autoscaler_builder() if autoscaler_builder is not None else None
         pre = preempter_builder() if preempter_builder is not None else None
         out[pol.name] = simulate_cluster(trace, nodes, pol, zeta=zeta,
-                                         autoscaler=scaler, preempter=pre)
+                                         autoscaler=scaler, preempter=pre,
+                                         faults=faults)
     return out

@@ -162,6 +162,40 @@ def schedule(
     return _evaluate(costs, assignee, zeta, C=C)
 
 
+def schedule_with_liveness(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    zeta: float,
+    live: np.ndarray,
+    *,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    """Failure-aware Eq. 2 optimum: per-query argmin restricted to *live*
+    model columns.
+
+    `live` is an (m, k) boolean mask — live[i, j] == False means model j
+    cannot serve query i on the realized fault trace (every hosting node
+    permanently down from the query's arrival; see
+    ``FaultTrace.down_forever_from``).  The unconstrained Eq. 2 separates
+    per query, so masking columns keeps the solve an exact argmin — this
+    is the offline bound replayed against the *same* fault trace the
+    online policies faced, so the offline→online gap stays a true bound
+    under failures.  A query with no live column falls back to the full
+    row (the online fleet would abandon it; pricing it at its best model
+    keeps the bound conservative)."""
+    if costs is None:
+        costs = normalized_costs(profiles, queries)
+    C = objective_matrix(costs, zeta)
+    if live.shape != C.shape:
+        raise ValueError(f"live mask shape {live.shape} != {C.shape}")
+    masked = np.where(live, C, np.inf)
+    dead_rows = ~live.any(axis=1)
+    if dead_rows.any():
+        masked[dead_rows] = C[dead_rows]
+    assignee = masked.argmin(axis=1)
+    return _evaluate(costs, assignee, zeta, C=C)
+
+
 # ---------------------------------------------------------------------------
 # Capacity-constrained (γ partition) scheduler
 # ---------------------------------------------------------------------------

@@ -107,6 +107,73 @@ def arrival_times(
     raise ValueError(f"unknown arrival pattern: {pattern!r}")
 
 
+def fault_trace(
+    n_nodes: int,
+    horizon_s: float,
+    *,
+    mttf_s: float | None = None,
+    mttr_s: float = 60.0,
+    straggle_mttf_s: float | None = None,
+    straggle_mttr_s: float = 30.0,
+    slowdown_range: tuple[float, float] = (1.5, 3.0),
+    seed: int = 0,
+) -> list[tuple[float, int, str, float]]:
+    """Seeded fault-event stream for a fleet of `n_nodes` nodes: the
+    failure-side counterpart of `arrival_times`.
+
+    Two independent alternating-renewal processes per node, both with
+    exponential holding times (the classic MTTF/MTTR availability model):
+
+      * crash/recovery — up for Exp(mttf_s), down for Exp(mttr_s):
+        emits ("crash", 1.0) then ("recover", 1.0) pairs;
+      * straggle/normal — healthy for Exp(straggle_mttf_s), degraded for
+        Exp(straggle_mttr_s) at a slowdown factor drawn uniformly from
+        `slowdown_range`: emits ("slow", σ) then ("normal", 1.0) pairs.
+
+    Passing None for a process's MTTF disables it.  Events are returned
+    as (time_s, node_index, kind, value) tuples sorted by time (ties
+    break by node index then emission order), truncated to `horizon_s`.
+    The same seed always replays the identical stream — fault traces are
+    first-class replayable inputs, like arrival traces.
+    """
+    if n_nodes <= 0:
+        raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+    if horizon_s <= 0:
+        raise ValueError(f"horizon_s must be > 0, got {horizon_s}")
+    if mttf_s is not None and (mttf_s <= 0 or mttr_s <= 0):
+        raise ValueError("mttf_s and mttr_s must be > 0")
+    if straggle_mttf_s is not None and (straggle_mttf_s <= 0
+                                        or straggle_mttr_s <= 0):
+        raise ValueError("straggle_mttf_s and straggle_mttr_s must be > 0")
+    lo, hi = slowdown_range
+    if not (1.0 <= lo <= hi):
+        raise ValueError("slowdown_range must satisfy 1 <= lo <= hi")
+    rng = np.random.default_rng(seed)
+    events: list[tuple[float, int, str, float]] = []
+
+    def alternating(node: int, up_s: float, down_s: float,
+                    down_kind: str, up_kind: str, draw_value) -> None:
+        t = float(rng.exponential(up_s))
+        while t < horizon_s:
+            events.append((t, node, down_kind, draw_value()))
+            t += float(rng.exponential(down_s))
+            if t >= horizon_s:
+                break
+            events.append((t, node, up_kind, 1.0))
+            t += float(rng.exponential(up_s))
+
+    for node in range(n_nodes):
+        if mttf_s is not None:
+            alternating(node, mttf_s, mttr_s, "crash", "recover",
+                        lambda: 1.0)
+        if straggle_mttf_s is not None:
+            alternating(node, straggle_mttf_s, straggle_mttr_s,
+                        "slow", "normal",
+                        lambda: float(rng.uniform(lo, hi)))
+    events.sort(key=lambda ev: (ev[0], ev[1]))
+    return events
+
+
 def timestamped_workload(
     spec: WorkloadSpec = WorkloadSpec(),
     *,

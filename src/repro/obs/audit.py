@@ -22,15 +22,28 @@ checks):
     principles: idle_s·idle_power_w, gated_s·gated_w, and
     transition_s·transition_w + wakes·wake_j + gates·gate_j (the only
     closed forms those buckets may follow);
-  * split-energy contract — at a preemption settlement, the truncated
-    charge must equal decode_cost(base, n_done) and the two halves must
-    sum to the unpreempted decode_cost(base, n_total), both to `tol`
-    (the closed-form additivity identity the perf suite gates).
+  * split-energy contract — at a preemption (or crash-quantization)
+    settlement, the truncated charge must equal decode_cost(base,
+    n_done) under the phase's straggler stretch transform, and the two
+    raw halves must sum to the unpreempted decode_cost(base, n_total),
+    both to `tol` (the closed-form additivity identity the perf suite
+    gates — linear in t, so it survives stretching);
+  * wasted bucket  — `book_waste` is a *move* (busy → wasted), never a
+    new charge: the auditor mirrors every booking, checks the node's
+    wasted bucket against its own Σ, and keeps the busy drift check
+    exact by moving its accumulator in lockstep (gross settlements ==
+    busy + wasted at all times);
+  * shipping bucket — every KV migration must follow the interconnect
+    closed form (bytes == context · kv_bytes_per_token; seconds ==
+    bytes / ici_bw; joules == bytes · j_per_byte_ici, all on the
+    *recipient's* spec and meter).
 
 `on_finalize` re-checks the fleet-level books (per-request attributed
-energy == Σ busy buckets; horizon == accounted seconds) once the report
-exists.  All checks raise :class:`InvariantViolation` with the last few
-audited events formatted into the message."""
+energy == Σ busy buckets; horizon == accounted seconds including FAILED
+time; wasted and shipping buckets == the audited migration/waste
+streams; gross settlements == busy + wasted) once the report exists.
+All checks raise :class:`InvariantViolation` with the last few audited
+events formatted into the message."""
 
 from __future__ import annotations
 
@@ -55,6 +68,12 @@ class InvariantAuditor:
         self.n_checks = 0
         self._busy_t: dict[int, float] = {}
         self._busy_e: dict[int, float] = {}
+        # gross settled joules: never decremented by waste moves, so at
+        # any instant gross == busy + wasted per node (leak detector)
+        self._gross_e: dict[int, float] = {}
+        self._waste_e: dict[int, float] = {}
+        self._ship_t: dict[int, float] = {}
+        self._ship_e: dict[int, float] = {}
         self._last_settle: dict[int, tuple[str, float, float, float]] = {}
         self._context: deque = deque(maxlen=context_events)
         # per-node power constants (idle_w, gated_w, transition_w, wake_j,
@@ -94,6 +113,7 @@ class InvariantAuditor:
                               "t", t, "e", e_total))
         self._busy_t[nid] = bt = self._busy_t.get(nid, 0.0) + t
         self._busy_e[nid] = be = self._busy_e.get(nid, 0.0) + e_total
+        self._gross_e[nid] = self._gross_e.get(nid, 0.0) + e_total
         self._last_settle[nid] = (kind, start_s, t, e_total)
         self.n_checks += 1
         # inlined `_close` — this path runs at every settlement
@@ -149,10 +169,12 @@ class InvariantAuditor:
 
     def on_preempt_split(self, node, base: int, n_done: int, n_total: int,
                          batch: int, scale: float) -> None:
-        """Audit the split-energy preemption contract right after the
-        truncated segment settled: the charge must equal the closed-form
-        integral over [0, n_done), and the two halves of the split must
-        sum to the unpreempted decode_cost."""
+        """Audit the split-energy contract right after a truncated decode
+        settled (a preemption boundary or a crash quantization — both
+        charge through the same path): the charge must equal the
+        closed-form integral over [0, n_done) under the phase's straggler
+        stretch, and the two raw halves of the split must sum to the
+        unpreempted decode_cost."""
         nid = node.node_id
         self.note(("preempt-split", nid, "base", base, "n_done", n_done,
                    "n_total", n_total, "batch", batch, "scale", scale))
@@ -164,13 +186,19 @@ class InvariantAuditor:
         _, _, t_charged, e_charged = last
         t1, e1 = node.sim.decode_cost(base, n_done, batch=batch,
                                       freq_scale=scale)
-        e1_total = e1 + node.sim.host_power_w * t1
-        if not (self._close(t_charged, t1)
+        # the stretch transform (t, e) → (σ·t, e + (σ−1)·t·static) the
+        # node applied to the truncated charge, re-derived independently
+        sigma = node.phase_stretch
+        t1s = sigma * t1
+        e1s = e1 + (sigma - 1.0) * t1 * node.accel_static_w
+        e1_total = e1s + node.sim.host_power_w * t1s
+        if not (self._close(t_charged, t1s)
                 and self._close(e_charged, e1_total)):
             self._fail(
                 f"preemption charge mismatch on node {nid}: settled "
                 f"(t={t_charged!r}, e={e_charged!r}) but decode_cost"
-                f"({base}, {n_done}) gives (t={t1!r}, e={e1_total!r})")
+                f"({base}, {n_done}) at stretch {sigma!r} gives "
+                f"(t={t1s!r}, e={e1_total!r})")
         t2, e2 = node.sim.decode_cost(base + n_done, n_total - n_done,
                                       batch=batch, freq_scale=scale)
         tf, ef = node.sim.decode_cost(base, n_total, batch=batch,
@@ -183,6 +211,65 @@ class InvariantAuditor:
                 f"({base},{n_total}): t {t1 + t2!r} vs {tf!r}, "
                 f"e {e1 + e2!r} vs {ef!r}")
 
+    # --- fault-path checks --------------------------------------------
+    def on_waste(self, node, e_j: float) -> None:
+        """Audit a `book_waste` move (busy → wasted, booked on the node
+        that actually spent the joules): mirror it into the auditor's
+        accumulators — the busy drift check stays exact because the move
+        is applied to both sides — and re-check the node's wasted bucket
+        against the audited stream."""
+        nid = node.node_id
+        self.note(("waste", nid, "e", e_j))
+        self.n_checks += 1
+        if e_j < 0.0:
+            self._fail(f"negative waste booking on node {nid}: {e_j!r} J")
+        self._busy_e[nid] = self._busy_e.get(nid, 0.0) - e_j
+        self._waste_e[nid] = we = self._waste_e.get(nid, 0.0) + e_j
+        nw = node.wasted_energy_j
+        if not self._close(we, nw):
+            self._fail(f"wasted-energy drift on node {nid}: bookings sum "
+                       f"to {we!r} J but node.wasted_energy_j == {nw!r}")
+        nb, be = node.busy_energy_j, self._busy_e[nid]
+        if not self._close(be, nb):
+            self._fail(f"waste booking on node {nid} broke the busy "
+                       f"bucket: settlements − wastes == {be!r} J but "
+                       f"node.busy_energy_j == {nb!r}")
+
+    def on_migration(self, home, recipient, context: int, n_bytes: float,
+                     ship_s: float, ship_j: float) -> None:
+        """Audit one cross-node KV shipment against the interconnect
+        closed form — bytes from the *donor's* KV layout at the decode
+        boundary, seconds and joules from the *recipient's* spec — and
+        the recipient's running shipping meter."""
+        from repro.energy.costs import kv_bytes_per_token
+
+        rid = recipient.node_id
+        self.note(("migrate", home.node_id, "->", rid, "ctx", context,
+                   "bytes", n_bytes, "s", ship_s, "j", ship_j))
+        self.n_checks += 1
+        expect_bytes = context * kv_bytes_per_token(home.sim.cfg)
+        if not self._close(n_bytes, expect_bytes):
+            self._fail(f"KV shipment size off closed form: {n_bytes!r} B "
+                       f"for {context} tokens but kv_bytes_per_token "
+                       f"gives {expect_bytes!r} B")
+        accel = recipient.hardware.accel
+        if not self._close(ship_s, n_bytes / accel.ici_bw):
+            self._fail(f"KV shipping time off closed form on node {rid}: "
+                       f"{ship_s!r} s for {n_bytes!r} B over "
+                       f"{accel.ici_bw!r} B/s")
+        if not self._close(ship_j, n_bytes * accel.j_per_byte_ici):
+            self._fail(f"KV shipping energy off closed form on node "
+                       f"{rid}: {ship_j!r} J for {n_bytes!r} B at "
+                       f"{accel.j_per_byte_ici!r} J/B")
+        self._ship_t[rid] = st = self._ship_t.get(rid, 0.0) + ship_s
+        self._ship_e[rid] = se = self._ship_e.get(rid, 0.0) + ship_j
+        if not (self._close(st, recipient.shipping_s)
+                and self._close(se, recipient.shipping_energy_j)):
+            self._fail(f"shipping-meter drift on node {rid}: audited "
+                       f"(t={st!r}, e={se!r}) but node books "
+                       f"(t={recipient.shipping_s!r}, "
+                       f"e={recipient.shipping_energy_j!r})")
+
     # --- end-of-run checks --------------------------------------------
     def on_finalize(self, nodes, report) -> None:
         """Close the audit: fleet-level conservation against the report."""
@@ -193,8 +280,27 @@ class InvariantAuditor:
                            f"accounted {n.accounted_s!r} s of "
                            f"{n.horizon_s!r} s")
             self._check_offphase_buckets(n)
+            nid = n.node_id
+            # waste is a move, never a leak: the gross settlement stream
+            # must reappear exactly as busy + wasted
+            gross = self._gross_e.get(nid, 0.0)
+            split = n.busy_energy_j + n.wasted_energy_j
+            if not self._close(gross, split):
+                self._fail(f"energy leak on node {nid}: settlements sum "
+                           f"to {gross!r} J but busy + wasted == "
+                           f"{split!r} J")
         attributed = sum(r.energy_j for r in report.records)
         busy = sum(s.busy_energy_j for s in report.node_stats)
         if report.records and not self._close(attributed, busy):
             self._fail(f"attributed per-request energy {attributed!r} J "
                        f"does not sum to the fleet busy bucket {busy!r} J")
+        wasted = sum(s.wasted_energy_j for s in report.node_stats)
+        if not self._close(wasted, sum(self._waste_e.values())):
+            self._fail(f"fleet wasted bucket {wasted!r} J does not match "
+                       f"the audited waste stream "
+                       f"{sum(self._waste_e.values())!r} J")
+        shipping = sum(s.shipping_energy_j for s in report.node_stats)
+        if not self._close(shipping, sum(self._ship_e.values())):
+            self._fail(f"fleet shipping bucket {shipping!r} J does not "
+                       f"match the audited migration stream "
+                       f"{sum(self._ship_e.values())!r} J")

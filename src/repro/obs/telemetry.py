@@ -89,6 +89,21 @@ class Telemetry:
         self._dvfs = r.counter(
             "sim_dvfs_choice_total", "operating-point picks per phase",
             ("node", "phase", "scale"))
+        self._faults = r.counter(
+            "sim_faults_total", "injected fault events applied",
+            ("node", "kind"))
+        self._migrations = r.counter(
+            "sim_migrations_total", "cross-node KV shipments",
+            ("src", "dst"))
+        self._retries = r.counter(
+            "sim_retries_total", "re-routes of displaced/backed-off "
+            "requests, by destination node", ("node",))
+        self._abandons = r.counter(
+            "sim_abandons_total", "requests the fleet gave up on",
+            ("reason",))
+        self._drains = r.counter(
+            "sim_drain_transitions_total", "straggler-governance drain "
+            "starts/stops", ("node", "action"))
         # gauges — live fleet state + end-of-run snapshot
         self._queue_depth = r.gauge(
             "sim_queue_depth", "waiting requests per node", ("node",))
@@ -248,6 +263,51 @@ class Telemetry:
     def on_power_begin(self, node, kind: str, now: float) -> None:
         self._node_ch[node.node_id][kind].inc()
 
+    # --- fault/rescue hooks (called by repro.cluster.sim) ---------------
+    def on_fault(self, event, node, now: float) -> None:
+        self._lazy(self._faults, event.node_id, event.kind).inc()
+        if self.tracer is not None:
+            self.tracer.instant(event.kind, now, event.node_id + 1, "fault",
+                                ("value", event.value))
+
+    def on_migration(self, home, recipient, context: int, n_bytes: float,
+                     ship_s: float, ship_j: float, now: float) -> None:
+        self._lazy(self._migrations, home.node_id, recipient.node_id).inc()
+        if self.tracer is not None:
+            self.tracer.complete("kv_ship", now, ship_s,
+                                 recipient.node_id + 1, "migration",
+                                 ("from", home.node_id, "context", context,
+                                  "bytes", n_bytes, "energy_j", ship_j))
+        if self.auditor is not None:
+            self.auditor.on_migration(home, recipient, context, n_bytes,
+                                      ship_s, ship_j)
+
+    def on_retry(self, req, nid: int, attempts: int, now: float) -> None:
+        self._lazy(self._retries, nid).inc()
+        if self.tracer is not None:
+            self.tracer.instant("retry", now, nid + 1, "retry",
+                                ("request", req.request_id,
+                                 "attempts", attempts))
+
+    def on_abandon(self, rec, now: float) -> None:
+        self._lazy(self._abandons, rec.reason).inc()
+        if self.tracer is not None:
+            self.tracer.instant("abandon", now, 0, "abandon",
+                                ("request", rec.request_id,
+                                 "reason", rec.reason,
+                                 "wasted_j", rec.wasted_j))
+
+    def on_drain(self, node, draining: bool, now: float) -> None:
+        self._lazy(self._drains, node.node_id,
+                   "drain" if draining else "undrain").inc()
+        if self.tracer is not None:
+            self.tracer.instant("drain" if draining else "undrain", now,
+                                node.node_id + 1, "drain")
+
+    def on_waste(self, node, e_j: float) -> None:
+        if self.auditor is not None:
+            self.auditor.on_waste(node, e_j)
+
     def on_power_span(self, node, kind: str, start_s: float,
                       end_s: float) -> None:
         if self.tracer is not None:
@@ -269,9 +329,14 @@ class Telemetry:
                     ("busy", n.busy_energy_j, n.busy_s),
                     ("idle", n.idle_energy_j, n.idle_s),
                     ("gated", n.gated_energy_j, n.gated_s),
-                    ("transition", n.transition_energy_j, n.transition_s)):
-                self._bucket_energy.labels(n.node_id, bucket).set(e_j)
-                self._bucket_seconds.labels(n.node_id, bucket).set(secs)
+                    ("transition", n.transition_energy_j, n.transition_s),
+                    ("shipping", n.shipping_energy_j, n.shipping_s),
+                    ("wasted", n.wasted_energy_j, None),
+                    ("failed", None, n.failed_s)):
+                if e_j is not None:
+                    self._bucket_energy.labels(n.node_id, bucket).set(e_j)
+                if secs is not None:
+                    self._bucket_seconds.labels(n.node_id, bucket).set(secs)
         r = self.registry
         # run-level gauges merge by max: every per-node partition of a
         # sharded run writes the same values, so the fold is idempotent
@@ -300,6 +365,13 @@ class Telemetry:
                      ("node",))
         gt = r.gauge("sim_node_gates", "gate transitions per node",
                      ("node",))
+        cr = r.gauge("sim_node_crashes", "crashes per node", ("node",))
+        rc = r.gauge("sim_node_recoveries", "recoveries per node",
+                     ("node",))
+        mi = r.gauge("sim_node_migrations_in",
+                     "refugee decodes received per node", ("node",))
+        mo = r.gauge("sim_node_migrations_out",
+                     "refugee decodes shipped away per node", ("node",))
         for s in report.node_stats:
             served.labels(s.node_id, s.model).set(s.n_served)
             util.labels(s.node_id, s.model).set(s.utilization)
@@ -308,6 +380,10 @@ class Telemetry:
             res.labels(s.node_id).set(s.n_resumes)
             wk.labels(s.node_id).set(s.n_wakes)
             gt.labels(s.node_id).set(s.n_gates)
+            cr.labels(s.node_id).set(s.n_crashes)
+            rc.labels(s.node_id).set(s.n_recoveries)
+            mi.labels(s.node_id).set(s.n_migrations_in)
+            mo.labels(s.node_id).set(s.n_migrations_out)
         if self.auditor is not None:
             self.auditor.on_finalize(nodes, report)
 

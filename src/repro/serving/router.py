@@ -65,7 +65,12 @@ class EnergyAwareRouter:
 
 class _ModelView:
     """The minimal node surface a cluster policy reads: identity, profile,
-    and a live load signal (outstanding requests on this model)."""
+    a live load signal (outstanding requests on this model), and the
+    power/wake signals — constant here, since a live router's models are
+    always-on (power_rank 0, no pending wake energy)."""
+
+    power_rank = 0
+    pending_wake_j = 0.0
 
     def __init__(self, node_id: int, profile: LLMProfile):
         self.node_id = node_id

@@ -294,6 +294,8 @@ def fake_node(nid=0, busy_s=0.0, busy_e=0.0, accounted=0.0):
         gated_s=0.0, gated_energy_j=0.0, transition_s=0.0,
         transition_energy_j=0.0, n_wakes=0, n_gates=0,
         idle_power_w=100.0, transition_power_w=150.0,
+        phase_stretch=1.0, accel_static_w=0.0,
+        wasted_energy_j=0.0, shipping_s=0.0, shipping_energy_j=0.0,
         power=SimpleNamespace(gated_w=10.0, wake_j=50.0, gate_j=20.0))
 
 
