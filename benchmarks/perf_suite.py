@@ -562,6 +562,134 @@ def gate_migration_settlement(failures: list[str]) -> dict:
             "no_survivor_wasted_j": wasted}
 
 
+def gate_checkpoint_settlement(failures: list[str]) -> dict:
+    """Prefill checkpointing must settle exactly, end to end.
+
+    (a) Telescoping: with no faults a checkpointed run must match the
+        unchunked run per request to 1e-9 in finish time and energy —
+        chunk costs are exact prefix differences of `prefill_cost` at
+        one pinned operating point, so Σ chunks == one prefill.
+    (b) Aggregate storage closed form: every interior boundary persists
+        exactly `interval_tokens` of new KV, so over the whole fleet
+        Σ checkpoint energy == n_checkpoints × interval × kv_bytes ×
+        j_per_byte_ckpt and Σ checkpoint seconds == bytes / ckpt_bw
+        (uniform config, so the totals close without per-event state).
+    (c) A scripted mid-prefill crash under a live InvariantAuditor
+        restores from the last durable boundary on the survivor: one
+        restore, only the durable prefix ships, the in-flight chunk is
+        the only waste, and the seven buckets partition each node's
+        horizon exactly."""
+    from repro.cluster import (CheckpointConfig, ClusterNode,
+                               FailoverPolicy, FaultEvent, FaultTrace,
+                               LeastLoadedPolicy, simulate_cluster,
+                               timestamped_trace)
+    from repro.cluster.faults import CRASH
+    from repro.configs import TABLE1
+    from repro.core.energy_model import fit_profile
+    from repro.energy import SWING_NODE
+    from repro.energy.costs import kv_bytes_per_token
+    from repro.obs import InvariantAuditor, InvariantViolation, Telemetry
+
+    name = "llama2-7b"
+    sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                               kv_cache=True, noise_sigma=0.0)
+    pts = [(8, 8), (64, 64), (256, 128), (512, 512), (2048, 64)]
+    pbs = [sim.simulate(a, b) for a, b in pts]
+    profile = fit_profile(name, TABLE1[name]["a_k"],
+                          [p[0] for p in pts], [p[1] for p in pts],
+                          [pb.energy_j for pb in pbs],
+                          [pb.runtime_s for pb in pbs])
+    interval = 256
+    kvb = kv_bytes_per_token(PAPER_ZOO[name])
+    ck = CheckpointConfig(interval_tokens=interval)
+
+    def nodes(checkpoint):
+        return [ClusterNode(i, PAPER_ZOO[name], profile, SWING_NODE,
+                            max_batch=2, checkpoint=checkpoint)
+                for i in range(2)]
+
+    # (a)+(b): prefill-heavy trace with interior boundaries at several
+    # depths; identical runs modulo the checkpoint layer
+    shapes = [(0.0, (2048, 16)), (0.5, (1024, 32)), (1.0, (300, 64)),
+              (4.0, (512, 16)), (6.0, (768, 8)), (9.0, (1536, 24))]
+    trace = timestamped_trace(shapes, name="ckpt-settle")
+    plain = simulate_cluster(trace, nodes(None),
+                             FailoverPolicy(LeastLoadedPolicy()), zeta=0.5)
+    ckpt = simulate_cluster(trace, nodes(ck),
+                            FailoverPolicy(LeastLoadedPolicy()), zeta=0.5)
+    worst_tel = 0.0
+    for a, b in zip(plain.records, ckpt.records):
+        worst_tel = max(worst_tel,
+                        abs(a.finish_s - b.finish_s) / max(1.0, a.finish_s),
+                        abs(a.energy_j - b.energy_j) / max(1.0, a.energy_j))
+    if worst_tel > 1e-9:
+        failures.append(
+            f"checkpoint telescoping drifted off the unchunked run: rel "
+            f"{worst_tel:.3e}")
+    n_ckpts = ckpt.total_checkpoints
+    if n_ckpts == 0:
+        failures.append("checkpoint gate persisted no boundaries")
+    bytes_ckpt = n_ckpts * interval * kvb
+    rel_j = (abs(ckpt.total_checkpoint_energy_j
+                 - bytes_ckpt * ck.j_per_byte_ckpt)
+             / max(1.0, ckpt.total_checkpoint_energy_j))
+    ckpt_s = sum(s.checkpoint_s for s in ckpt.node_stats)
+    rel_s = abs(ckpt_s - bytes_ckpt / ck.ckpt_bw) / max(1.0, ckpt_s)
+    if rel_j > 1e-9 or rel_s > 1e-9:
+        failures.append(
+            f"checkpoint bucket off the storage closed form: energy rel "
+            f"{rel_j:.3e}, time rel {rel_s:.3e}")
+    # (c): crash strictly inside the 5th chunk — 1024 tokens durable
+    cn = nodes(ck)
+    t1, e1 = cn[0].sim.prefill_cost(1024, batch=1, freq_scale=1.0)
+    t2, e2 = cn[0].sim.prefill_cost(1280, batch=1, freq_scale=1.0)
+    tel = Telemetry(auditor=InvariantAuditor())
+    try:
+        rescue = simulate_cluster(
+            timestamped_trace([(0.0, (2048, 8))]), cn,
+            FailoverPolicy(LeastLoadedPolicy()), zeta=0.5,
+            faults=FaultTrace("mid", (FaultEvent((t1 + t2) / 2.0, 0,
+                                                 CRASH),)),
+            telemetry=tel)
+    except InvariantViolation as e:
+        failures.append(f"checkpoint gate tripped the live auditor: {e}")
+        return {"auditor": "violated"}
+    if rescue.total_restores != 1 or rescue.abandoned:
+        failures.append(
+            f"mid-prefill crash did not restore once cleanly: "
+            f"{rescue.total_restores} restores, "
+            f"{len(rescue.abandoned)} abandoned")
+    shipped = sum(r.shipped_bytes for r in rescue.records)
+    rel_ship = abs(shipped - 1024 * kvb) / max(1.0, shipped)
+    chunk_j = (e2 - e1) + cn[0].sim.host_power_w * (t2 - t1)
+    rel_waste = (abs(rescue.total_wasted_energy_j - chunk_j)
+                 / max(1.0, chunk_j))
+    if rel_ship > 1e-9 or rel_waste > 1e-9:
+        failures.append(
+            f"restore settlement off closed form: shipped rel "
+            f"{rel_ship:.3e}, wasted rel {rel_waste:.3e}")
+    worst_e = worst_t = 0.0
+    for rep in (ckpt, rescue):
+        for s in rep.node_stats:
+            e_sum = (s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
+                     + s.transition_energy_j + s.shipping_energy_j
+                     + s.checkpoint_energy_j + s.wasted_energy_j)
+            worst_e = max(worst_e, abs(e_sum - s.total_energy_j)
+                          / max(1.0, s.total_energy_j))
+            worst_t = max(worst_t, abs(s.accounted_s - s.horizon_s)
+                          / max(1.0, s.horizon_s))
+    if worst_e > 1e-9 or worst_t > 1e-9:
+        failures.append(
+            f"checkpointed run violates seven-bucket conservation: energy "
+            f"rel {worst_e:.3e}, time rel {worst_t:.3e}")
+    return {"telescoping_rel": worst_tel, "checkpoint_energy_rel": rel_j,
+            "checkpoint_time_rel": rel_s, "worst_energy_rel": worst_e,
+            "worst_time_rel": worst_t, "tolerance": 1e-9,
+            "checkpoints": n_ckpts, "checkpoint_bytes": bytes_ckpt,
+            "restores": rescue.total_restores,
+            "auditor_checks": tel.auditor.n_checks}
+
+
 def gate_power_conservation(failures: list[str]) -> dict:
     """Gated-sim energy accounting: the busy/idle/gated/transition buckets
     must sum to the total to 1e-9 and partition every node's horizon —
@@ -755,6 +883,7 @@ def run_gates(quick: bool) -> tuple[dict, list[str]]:
         "power_conservation": gate_power_conservation(failures),
         "preemption_split": gate_preemption_split(failures),
         "migration_settlement": gate_migration_settlement(failures),
+        "checkpoint_settlement": gate_checkpoint_settlement(failures),
         "metrics_overhead": gate_metrics_overhead(failures),
     }
     return out, failures

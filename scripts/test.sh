@@ -28,6 +28,13 @@
 #                            total to 1e-9, the shipping bucket on the
 #                            interconnect closed form, and no-survivor
 #                            crashes booking waste instead of leaking —
+#                            the checkpoint_settlement gate: checkpointed
+#                            prefills telescope exactly onto the unchunked
+#                            run, the checkpoint bucket follows the
+#                            storage closed form in aggregate, and a
+#                            scripted mid-prefill crash restores from the
+#                            last durable boundary with seven-bucket
+#                            conservation at 1e-9 —
 #                            and the telemetry metrics_overhead gate: with full
 #                            telemetry on a governed fleet the ClusterReport
 #                            is byte-identical, the Prometheus dump parses,

@@ -18,7 +18,15 @@ refugees ship their KV to a healthy replica under an explicit
 interconnect cost model), straggler governance and retry/abandon
 policies (FailoverPolicy), and a failure-aware offline oracle
 (FailureAwareOraclePolicy) that re-solves the paper's assignment against
-the realized fault trace.
+the realized fault trace.  The latest layer is *blast-radius realism*:
+correlated failure domains (FaultDomain rack/PDU topologies whose whole
+leaf fails at once), prefill checkpointing (CheckpointConfig: durable
+KV persistence at token-interval boundaries — a crash loses at most one
+interval instead of the whole prefill, restored refugees pay only the
+closed-form unfinished-suffix cost), and survivability-aware control
+(DomainSpreadPolicy anti-affinity routing, the MTTF-conditioned
+SurvivabilityAutoscalePolicy availability floor, and domain-masked
+capacity in the failure-aware oracle).
 
 Module map (the event model, and how the pieces plug together):
 
@@ -34,7 +42,13 @@ Module map (the event model, and how the pieces plug together):
                     second stochastic input; replaying the same trace over
                     the same arrival trace is byte-identical, and passing
                     faults=None (the default) leaves the loop bit-identical
-                    to the pre-fault simulator.
+                    to the pre-fault simulator.  FaultDomain models the
+                    node → rack → PDU co-failure topology
+                    (rack_pdu_topology builds it); a correlated trace runs
+                    one crash/recover renewal per leaf domain, killing
+                    every member simultaneously — the one-node-per-domain
+                    degenerate topology reproduces the independent traces
+                    bit-identically.
     node.py       — ClusterNode: one model replica on one hardware Node.
                     Continuous batching at phase granularity (batched
                     prefill, decode segments to the next completion
@@ -106,11 +120,12 @@ Module map (the event model, and how the pieces plug together):
                     compare_policies() reruns a trace (and fault trace)
                     over fresh fleets for an apples-to-apples policy
                     table.
-    metrics.py    — ClusterReport: the six-bucket busy/idle/gated/
-                    transition/shipping/wasted energy split (the buckets
-                    partition each node's horizon — FAILED time draws
-                    exactly 0 W, shipping is background NIC DMA — and sum
-                    exactly to total energy), J/token, latency p50/p95/
+    metrics.py    — ClusterReport: the seven-bucket busy/idle/gated/
+                    transition/shipping/checkpoint/wasted energy split
+                    (the buckets partition each node's horizon — FAILED
+                    time draws exactly 0 W, shipping and checkpointing
+                    are background NIC/DMA — and sum exactly to total
+                    energy), J/token, latency p50/p95/
                     p99, slowdown-SLO attainment, goodput under
                     abandonment, per-node utilization, AbandonedRecords,
                     and the realized Eq. 2 objective used to measure the
@@ -156,12 +171,14 @@ and `on_fault` as a fault event lands::
     stalled extra seconds at accelerator static draw).
 
 Request lifecycle (PREEMPTED/RESUMING added by the preemption layer;
-MIGRATING/RETRY/ABANDONED by the fault layer).  Telemetry hooks:
-`on_arrival` at routing, `on_phase_settle` (plus the auditor's
-conservation checks) at every prefill/decode charge, `on_preempt_split`
-at a preemption or crash settlement (auditing the split-energy
-identity), `on_migration` as a KV shipment starts, `on_retry`/
-`on_abandon` on the failover path, `on_completion` at DONE::
+MIGRATING/RETRY/ABANDONED by the fault layer; CHECKPOINTING/RESTORING
+by the checkpoint layer).  Telemetry hooks: `on_arrival` at routing,
+`on_phase_settle` (plus the auditor's conservation checks) at every
+prefill/decode/restore charge, `on_preempt_split` at a preemption or
+crash settlement (auditing the split-energy identity), `on_migration`
+as a KV shipment starts, `on_checkpoint` at every durable persist,
+`on_restore` as a suffix re-run begins, `on_retry`/`on_abandon` on the
+failover path, `on_completion` at DONE::
 
               routed*       joiner prefill*         last token*
     WAITING ──────────> QUEUED ─────────> DECODING ──────────> DONE
@@ -200,6 +217,24 @@ identity), `on_migration` as a KV shipment starts, `on_retry`/
     the unfaulted closed form to 1e-9, and un-rescuable work is booked
     as wasted so conservation still closes.
 
+    Under a CheckpointConfig the prefill itself gains two states.  A
+    prefill runs as a chain of interval_tokens-sized chunks (each
+    chunk's charge is the exact closed-form difference prefill_cost(b₂)
+    − prefill_cost(b₁) at one pinned operating point, so the chain
+    telescopes to the unchunked prefill to 1e-9); at every interior
+    boundary the request is CHECKPOINTING — the fresh KV prefix
+    persists durably at bytes·j_per_byte_ckpt joules over bytes/ckpt_bw
+    background-DMA seconds (the seventh `checkpoint` bucket, outside
+    the horizon partition like shipping).  A crash quantized to a chunk
+    boundary wastes only that chunk's charge (members roll back to the
+    last durable checkpoint); the refugee ships its checkpointed prefix
+    like a decode refugee and enters RESTORING on the recipient — a
+    dedicated batch-1 phase charging prefill_cost(τin) −
+    prefill_cost(ckpt), the telescoping suffix — after which it is
+    decode-ready.  Without a CheckpointConfig the crash semantics are
+    bit-identical to the pre-checkpoint simulator (a mid-prefill crash
+    completes the pass, then ships the full KV).
+
 DVFS operating-point semantics: an AcceleratorSpec exposes discrete
 `dvfs_scales`; at scale s, peak_flops ∝ s, hbm_bw keeps its `dvfs_bw_floor`
 fraction plus the coupled remainder, dyn_w ∝ s^α, idle_w fixed.  A node
@@ -227,9 +262,13 @@ examples/cluster_sim.py (a narrated single run).
 """
 
 from repro.cluster.faults import (  # noqa: F401
+    FaultDomain,
     FaultEvent,
     FaultInjector,
     FaultTrace,
+    domain_groups,
+    domain_index,
+    rack_pdu_topology,
 )
 from repro.cluster.metrics import (  # noqa: F401
     AbandonedRecord,
@@ -237,9 +276,10 @@ from repro.cluster.metrics import (  # noqa: F401
     NodeStats,
     RequestRecord,
 )
-from repro.cluster.node import ClusterNode  # noqa: F401
+from repro.cluster.node import CheckpointConfig, ClusterNode  # noqa: F401
 from repro.cluster.policies import (  # noqa: F401
     DEFAULT_POLICIES,
+    DomainSpreadPolicy,
     FailoverPolicy,
     FailureAwareOraclePolicy,
     GreedyEnergyPolicy,
@@ -262,6 +302,7 @@ from repro.cluster.power import (  # noqa: F401
     PredictiveRatePolicy,
     ReactiveIdlePolicy,
     ReplicaRatePolicy,
+    SurvivabilityAutoscalePolicy,
 )
 from repro.cluster.predictors import TauOutPredictor  # noqa: F401
 from repro.cluster.sim import compare_policies, fresh_nodes, simulate_cluster  # noqa: F401

@@ -1,6 +1,6 @@
 """Aggregate metrics for a cluster run.
 
-Energy accounting is split into six buckets per node:
+Energy accounting is split into seven buckets per node:
 
   * *busy*       — accelerator dynamic+idle during phases plus the host
                    serving draw (exactly what the per-request
@@ -11,19 +11,23 @@ Energy accounting is split into six buckets per node:
                    fixed per-transition joules);
   * *shipping*   — cross-node KV migration: bytes over the interconnect
                    at J/byte, on the recipient's meter (faulted runs only);
+  * *checkpoint* — durable prefill-KV persistence (node.CheckpointConfig):
+                   new-prefix bytes at j_per_byte_ckpt, charged at each
+                   interval boundary (checkpointed runs only);
   * *wasted*     — work lost to un-rescuable crashes, *moved* out of busy
                    (never double-counted) so re-run joules are visible.
 
 The time buckets (busy/idle/gated/transition/failed — a crashed node
-draws 0 W, so FAILED seconds carry no energy bucket; shipping is
-background NIC DMA concurrent with serving and stays outside the horizon
-partition) partition each node's horizon exactly — one second lands in
-exactly one bucket, so gated time is never double-charged as idle — and
-the sum of the six energy buckets IS the total energy (the conservation
-invariant gated in the perf suite at 1e-9).  The busy bucket alone
-carries the conservation invariant against the offline simulator, while
-fleet-level J/token still includes the cost of keeping under-utilized
-replicas powered (or the savings from gating them)."""
+draws 0 W, so FAILED seconds carry no energy bucket; shipping and
+checkpoint are background NIC/storage DMA concurrent with serving and
+stay outside the horizon partition) partition each node's horizon
+exactly — one second lands in exactly one bucket, so gated time is never
+double-charged as idle — and the sum of the seven energy buckets IS the
+total energy (the conservation invariant gated in the perf suite at
+1e-9).  The busy bucket alone carries the conservation invariant against
+the offline simulator, while fleet-level J/token still includes the cost
+of keeping under-utilized replicas powered (or the savings from gating
+them)."""
 
 from __future__ import annotations
 
@@ -126,12 +130,18 @@ class NodeStats:
     n_recoveries: int = 0
     n_migrations_in: int = 0
     n_migrations_out: int = 0
+    # --- checkpoint bucket/counters (zero without a CheckpointConfig) --
+    checkpoint_s: float = 0.0        # background storage DMA (outside horizon)
+    checkpoint_energy_j: float = 0.0  # durable prefill-KV persistence joules
+    n_checkpoints: int = 0
+    n_restores: int = 0
 
     @property
     def total_energy_j(self) -> float:
         return (self.busy_energy_j + self.idle_energy_j
                 + self.gated_energy_j + self.transition_energy_j
-                + self.shipping_energy_j + self.wasted_energy_j)
+                + self.shipping_energy_j + self.checkpoint_energy_j
+                + self.wasted_energy_j)
 
     @property
     def accounted_s(self) -> float:
@@ -179,10 +189,16 @@ class ClusterReport:
         return sum(s.wasted_energy_j for s in self.node_stats)
 
     @property
+    def total_checkpoint_energy_j(self) -> float:
+        return sum(s.checkpoint_energy_j for s in self.node_stats)
+
+    @property
     def total_energy_j(self) -> float:
         return (self.total_busy_energy_j + self.total_idle_energy_j
                 + self.total_gated_energy_j + self.total_transition_energy_j
-                + self.total_shipping_energy_j + self.total_wasted_energy_j)
+                + self.total_shipping_energy_j
+                + self.total_checkpoint_energy_j
+                + self.total_wasted_energy_j)
 
     @property
     def total_wakes(self) -> int:
@@ -208,6 +224,14 @@ class ClusterReport:
     def total_migrations(self) -> int:
         return sum(s.n_migrations_in for s in self.node_stats)
 
+    @property
+    def total_checkpoints(self) -> int:
+        return sum(s.n_checkpoints for s in self.node_stats)
+
+    @property
+    def total_restores(self) -> int:
+        return sum(s.n_restores for s in self.node_stats)
+
     def replica_counts(self) -> dict[str, int]:
         """Replicas hosted per model (from the sim's replica registry)."""
         return {name: len(nids) for name, nids in self.replicas}
@@ -222,13 +246,14 @@ class ClusterReport:
         return self.total_energy_j / tok if tok else 0.0
 
     def energy_breakdown(self) -> dict[str, float]:
-        """The six-bucket split (joules) — sums to total_energy_j."""
+        """The seven-bucket split (joules) — sums to total_energy_j."""
         return {
             "busy": self.total_busy_energy_j,
             "idle": self.total_idle_energy_j,
             "gated": self.total_gated_energy_j,
             "transition": self.total_transition_energy_j,
             "shipping": self.total_shipping_energy_j,
+            "checkpoint": self.total_checkpoint_energy_j,
             "wasted": self.total_wasted_energy_j,
         }
 
@@ -320,6 +345,8 @@ class ClusterReport:
             "total_resumes": self.total_resumes,
             "total_crashes": self.total_crashes,
             "total_migrations": self.total_migrations,
+            "total_checkpoints": self.total_checkpoints,
+            "total_restores": self.total_restores,
             "n_abandoned": len(self.abandoned),
             "replicas": {name: list(nids) for name, nids in self.replicas},
             "node_stats": [dataclasses.asdict(s) for s in self.node_stats],
@@ -352,10 +379,10 @@ class ClusterReport:
             nid = int(nid_s)
             e = {b: registry.value("sim_node_energy_joules", nid, b)
                  for b in ("busy", "idle", "gated", "transition",
-                           "shipping", "wasted")}
+                           "shipping", "checkpoint", "wasted")}
             s = {b: registry.value("sim_node_seconds", nid, b)
                  for b in ("busy", "idle", "gated", "transition",
-                           "failed", "shipping")}
+                           "failed", "shipping", "checkpoint")}
             stats.append(NodeStats(
                 node_id=nid,
                 model=model,
@@ -386,6 +413,10 @@ class ClusterReport:
                     registry.value("sim_node_migrations_in", nid)),
                 n_migrations_out=int(
                     registry.value("sim_node_migrations_out", nid)),
+                checkpoint_s=s["checkpoint"],
+                checkpoint_energy_j=e["checkpoint"],
+                n_checkpoints=int(registry.value("sim_node_checkpoints", nid)),
+                n_restores=int(registry.value("sim_node_restores", nid)),
             ))
         stats.sort(key=lambda st: st.node_id)
         return cls(
@@ -408,6 +439,9 @@ class ClusterReport:
         if self.total_preemptions:
             power += (f"preempt={self.total_preemptions} "
                       f"resume={self.total_resumes} ")
+        if self.total_checkpoints or self.total_restores:
+            power += (f"ckpt={self.total_checkpoints} "
+                      f"restore={self.total_restores} ")
         if self.total_crashes or self.abandoned:
             power += (f"crash={self.total_crashes} "
                       f"migrate={self.total_migrations} "
@@ -455,5 +489,9 @@ def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
             n_recoveries=n.n_recoveries,
             n_migrations_in=n.n_migrations_in,
             n_migrations_out=n.n_migrations_out,
+            checkpoint_s=n.checkpoint_s,
+            checkpoint_energy_j=n.checkpoint_energy_j,
+            n_checkpoints=n.n_checkpoints,
+            n_restores=n.n_restores,
         ))
     return tuple(out)

@@ -74,6 +74,34 @@ and two extra energy buckets:
     partition busy+idle+gated+transition+shipping+wasted == total both
     stay exact to 1e-9.
 
+Prefill checkpointing (`CheckpointConfig`): decode interruption is cheap
+(KV intact, resume free) but prefill interruption was all-or-nothing —
+a mid-prefill crash quantized to the *prefill end* (the whole pass
+completes, then ships).  With a checkpoint policy the batch prefill runs
+as a sequence of chunk phases cut at `interval_tokens` boundaries; each
+chunk charges the exact closed-form difference
+prefill_cost(b_k) − prefill_cost(b_{k−1}) (the roofline pass is additive
+over prompt prefixes, so the chunk sum telescopes to the unchunked pass
+to float exactness and chunking changes *when* energy settles, never how
+much) and each interior boundary persists the new KV prefix — bytes =
+new_tokens × kv_bytes_per_token charged at `j_per_byte_ckpt` into the
+seventh energy bucket (`checkpoint_s` stays outside the horizon
+partition like shipping: background DMA concurrent with the next
+chunk).  A crash now quantizes to the *chunk* boundary: the in-flight
+chunk's charge moves busy → wasted (lost work bounded by one interval —
+against the per-boundary persistence overhead, the tradeoff fig4's
+blast-radius cell sweeps), members roll back to their last checkpoint,
+and the sim ships the persisted prefix to a healthy replica where a
+`restore` phase re-runs only the unfinished suffix
+(prefill_cost(τin) − prefill_cost(ckpt), batch-1, the same telescoping
+identity) before the request continues as an ordinary decode; a crash
+mid-restore likewise wastes the restore charge and requeues the still-
+checkpointed refugee.  An *uncheckpointed* prefill refugee (crashed in
+its first chunk) has nothing durable to ship: it re-runs from scratch
+on a survivor or abandons, its accrued joules booked wasted.
+`checkpoint=None` keeps the old semantics bit-identically (a
+mid-prefill crash completes the pass, then ships full KV).
+
 Stragglers: a `slow` fault sets `self.slowdown = σ`; each phase fixes
 the factor at its start (`phase_stretch`) and is charged the *stretch
 transform* (t, e) → (σ·t, e + (σ−1)·t·accel_static_w): the same work at
@@ -88,6 +116,7 @@ import dataclasses
 from collections import Counter, deque
 
 from repro.core.energy_model import LLMProfile
+from repro.energy.costs import kv_bytes_per_token
 from repro.energy.hardware import Node, SWING_NODE
 from repro.energy.simulator import AnalyticLLMSimulator
 from repro.models.common import ModelConfig
@@ -121,6 +150,12 @@ class _InFlight:
     # lives, so an abandoned refugee's waste can be booked back on the
     # node(s) that actually spent the energy (conservation stays per-node)
     energy_on: dict = dataclasses.field(default_factory=dict)
+    # prefill-checkpoint state: None once the prompt is fully processed
+    # (every pre-checkpoint member); an int marks a *prefill refugee*
+    # whose prompt is processed only to that token — restorable from
+    # ckpt_tokens (the durably persisted prefix) on a healthy node
+    prefill_done: int | None = None
+    ckpt_tokens: int = 0
 
     @property
     def remaining(self) -> int:
@@ -143,6 +178,31 @@ class Completion:
     shipped_bytes: float = 0.0  # KV bytes moved across the interconnect
 
 
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Prefill checkpoint policy: cut the batch prefill at
+    `interval_tokens` boundaries and durably persist the new KV prefix at
+    each interior boundary.  Persistence is background DMA to node-local
+    durable storage: `ckpt_bw` bytes/s concurrent with the next chunk
+    (the seconds stay outside the horizon partition, like shipping) at
+    `j_per_byte_ckpt` joules per byte — the seventh energy bucket.
+    Smaller intervals lose less work per crash but persist more often;
+    fig4's blast-radius cell sweeps the tradeoff."""
+
+    interval_tokens: int = 256
+    j_per_byte_ckpt: float = 2.0e-10
+    ckpt_bw: float = 16e9
+
+    def __post_init__(self):
+        if self.interval_tokens < 1:
+            raise ValueError(
+                f"interval_tokens must be >= 1, got {self.interval_tokens}")
+        if self.j_per_byte_ckpt < 0:
+            raise ValueError("j_per_byte_ckpt must be >= 0")
+        if self.ckpt_bw <= 0:
+            raise ValueError("ckpt_bw must be > 0")
+
+
 class ClusterNode:
     """One model replica on one hardware node, with a waiting queue, a
     continuously-batched active set, and a power-state machine.  Driven by
@@ -163,6 +223,7 @@ class ClusterNode:
         dvfs: str = "off",         # "off" (pinned freq_scale) | "per_phase"
         freq_scale: float = 1.0,   # fixed operating point when dvfs="off"
         telemetry=None,            # repro.obs.Telemetry (sim.py also sets it)
+        checkpoint: CheckpointConfig | None = None,
     ):
         if dvfs not in ("off", "per_phase"):
             raise ValueError(f"dvfs must be 'off' or 'per_phase', got {dvfs!r}")
@@ -174,6 +235,7 @@ class ClusterNode:
         self.dvfs = dvfs
         self.freq_scale = freq_scale
         self.telemetry = telemetry
+        self.checkpoint = checkpoint
         self.sim = AnalyticLLMSimulator(
             model_cfg, hardware, batch=1, kv_cache=kv_cache,
             noise_sigma=0.0, decode_chunk=decode_chunk)
@@ -203,6 +265,18 @@ class ClusterNode:
         self._crash_pending = False  # crash lands at the next boundary
         self._crash_steps: int | None = None   # decode truncation point
 
+        # checkpointed-prefill chunk state (None/0 outside a chunked
+        # prefill): the running chunk's upper boundary, the full padded
+        # prompt length, and the chunk's charged joules (what a crash at
+        # the chunk settle moves busy → wasted)
+        self._ckpt_chunk_to: int | None = None
+        self._ckpt_total = 0
+        self._ckpt_chunk_charge = 0.0
+        # restore-phase state: the prefill refugee whose suffix is being
+        # re-run, and its charged joules (wasted if the node dies mid-way)
+        self._restore_member: _InFlight | None = None
+        self._restore_charge = 0.0
+
         # power-state machine (starts powered and idle at t = 0)
         self._pstate = IDLE
         self._pstate_since = 0.0
@@ -224,6 +298,8 @@ class ClusterNode:
         self.shipping_s = 0.0
         self.shipping_energy_j = 0.0
         self.wasted_energy_j = 0.0
+        self.checkpoint_s = 0.0        # background DMA, like shipping_s
+        self.checkpoint_energy_j = 0.0
         self.horizon_s = 0.0       # set by finalize()
         self.n_served = 0
         self.n_wakes = 0
@@ -234,6 +310,8 @@ class ClusterNode:
         self.n_recoveries = 0
         self.n_migrations_in = 0
         self.n_migrations_out = 0
+        self.n_checkpoints = 0         # member-boundary persists taken
+        self.n_restores = 0            # suffix restore phases begun
         self.freq_choices: Counter = Counter()   # (phase_kind, scale) -> count
 
     # ------------------------------------------------------------------
@@ -392,7 +470,8 @@ class ClusterNode:
     def total_energy_j(self) -> float:
         return (self.busy_energy_j + self.idle_energy_j
                 + self.gated_energy_j + self.transition_energy_j
-                + self.shipping_energy_j + self.wasted_energy_j)
+                + self.shipping_energy_j + self.checkpoint_energy_j
+                + self.wasted_energy_j)
 
     @property
     def accounted_s(self) -> float:
@@ -518,7 +597,13 @@ class ClusterNode:
         *for* an arrival, which must not lose the freed slot back to its
         own victim), then suspended requests resume into whatever slots
         remain — a resume is free (KV position intact, no re-prefill), the
-        member simply rejoins the active set for the coming segments."""
+        member simply rejoins the active set for the coming segments.  A
+        *prefill refugee* at the head of the suspended queue cannot
+        resume for free (its prompt is only part-processed): it gets a
+        dedicated batch-1 `restore` phase re-running the unfinished
+        suffix, which — like a joiner prefill — runs before any decode
+        segment (FIFO order over the suspended queue is preserved, so
+        decode-ready refugees behind it wait for the restore)."""
         self._phase_epoch += 1
         self._phase_stretch = self.slowdown   # σ fixed for this phase
         slots = self.max_batch - len(self.active)
@@ -526,13 +611,18 @@ class ClusterNode:
                    for _ in range(min(slots, len(self.waiting)))]
         slots -= len(joiners)
         if slots > 0 and self.suspended:
-            resumed = [self.suspended.popleft()
-                       for _ in range(min(slots, len(self.suspended)))]
+            resumed = []
+            while (len(resumed) < slots and self.suspended
+                   and self.suspended[0].prefill_done is None):
+                resumed.append(self.suspended.popleft())
+            slots -= len(resumed)
             self.n_resumes += len(resumed)
             self.active.extend(resumed)
         if joiners:
             # (joiner) prefill for as many waiting requests as fit
             members = [_InFlight(r, start_s=now) for r in joiners]
+            if self.checkpoint is not None:
+                return self._begin_chunked_prefill(members, now)
             s, t, e = self._prefill(max(r.tau_in for r in joiners),
                                     len(joiners))
             t, e = self._stretched(t, e)
@@ -546,6 +636,9 @@ class ClusterNode:
             self._phase_scale = s
             self._phase_end_s = now + t
             return self._phase_end_s
+        if (self.suspended and self.suspended[0].prefill_done is not None
+                and slots > 0):
+            return self._start_restore(now)
         if self.active:
             # decode to the next completion boundary (padded batch: every
             # step attends up to the longest member context); closed-form
@@ -579,6 +672,26 @@ class ClusterNode:
         """Advance past the finished phase.  Returns (completions, next
         phase event or None if the node went idle)."""
         assert self._phase_end_s is not None
+        if self._ckpt_chunk_to is not None:
+            # checkpointed-prefill chunk boundary
+            if self._crash_pending:
+                self._waste_inflight_chunk(now)
+                return [], None
+            if self._ckpt_chunk_to < self._ckpt_total:
+                return [], self._phase_event(self._settle_prefill_chunk(now))
+            # final boundary: the full (padded) prompt is processed
+            for m in self._phase_members:
+                m.prefill_done = None
+            self._clear_chunk_state()
+        elif self._phase_kind == "restore":
+            if self._crash_pending:
+                self._waste_restore(now)
+                return [], None
+            m = self._restore_member
+            self._restore_member = None
+            self._restore_charge = 0.0
+            m.prefill_done = None
+            self.active.append(m)   # completion check below catches τout==0
         if self._phase_kind == "decode":   # settle the deferred charge
             self._charge(self._phase_members, self._phase_t, self._phase_e,
                          kind="decode", start_s=self._phase_start_s,
@@ -616,6 +729,160 @@ class ClusterNode:
             self._complete_crash(now)
             return done, None
         return done, self._phase_event(self._start_phase(now))
+
+    # --- checkpointed prefill: chunks, persistence, restore -------------
+    def _clear_chunk_state(self) -> None:
+        self._ckpt_chunk_to = None
+        self._ckpt_total = 0
+        self._ckpt_chunk_charge = 0.0
+
+    def _begin_chunked_prefill(self, members: list[_InFlight],
+                               now: float) -> float:
+        """First chunk of a checkpointed prefill.  One operating point
+        (and one straggler stretch) is fixed for the whole prefill — a
+        per-chunk re-pick would break the telescoping identity that makes
+        the chunk sum equal the unchunked `prefill_cost` exactly."""
+        total = max(m.req.tau_in for m in members)
+        batch = len(members)
+        if self.dvfs == "per_phase":
+            s, _, _ = self.sim.best_prefill_frequency(
+                total, batch=batch, extra_w=self.sim.host_power_w)
+        else:
+            s = self.freq_scale
+        self.freq_choices[("prefill", s)] += 1
+        for m in members:
+            m.prefill_done = 0
+        b1 = min(self.checkpoint.interval_tokens, total)
+        t, e = self.sim.prefill_cost(b1, batch=batch, freq_scale=s)
+        t, e = self._stretched(t, e)
+        self._set_state(ACTIVE, now)
+        self._charge(members, t, e, kind="prefill", start_s=now, scale=s)
+        self.active.extend(members)
+        self._phase_members = members
+        self._phase_steps = 0
+        self._phase_kind = "prefill"
+        self._phase_start_s = now
+        self._phase_scale = s
+        self._ckpt_chunk_to = b1
+        self._ckpt_total = total
+        self._ckpt_chunk_charge = e + self.sim.host_power_w * t
+        self._phase_end_s = now + t
+        return self._phase_end_s
+
+    def _settle_prefill_chunk(self, now: float) -> float:
+        """An interior chunk boundary lands: advance every member's
+        processed-prompt position, durably persist the new KV prefix
+        (bytes = new tokens × kv_bytes_per_token into the checkpoint
+        bucket), and charge the next chunk — the exact closed-form
+        difference prefill_cost(b₂) − prefill_cost(b₁) at the phase's
+        pinned operating point."""
+        b = self._ckpt_chunk_to
+        members = self._phase_members
+        new_tokens = 0
+        n_members = 0
+        for m in members:
+            done = min(b, m.req.tau_in)
+            m.prefill_done = done
+            if done > m.ckpt_tokens:
+                new_tokens += done - m.ckpt_tokens
+                m.ckpt_tokens = done
+                n_members += 1
+                self.n_checkpoints += 1
+        if new_tokens > 0:
+            n_bytes = new_tokens * kv_bytes_per_token(self.sim.cfg)
+            ckpt_s = n_bytes / self.checkpoint.ckpt_bw
+            ckpt_j = n_bytes * self.checkpoint.j_per_byte_ckpt
+            self.checkpoint_s += ckpt_s
+            self.checkpoint_energy_j += ckpt_j
+            if self.telemetry is not None:
+                self.telemetry.on_checkpoint(self, new_tokens, n_bytes,
+                                             ckpt_s, ckpt_j, n_members)
+        b2 = min(b + self.checkpoint.interval_tokens, self._ckpt_total)
+        batch = len(members)
+        s = self._phase_scale
+        t1, e1 = self.sim.prefill_cost(b, batch=batch, freq_scale=s)
+        t2, e2 = self.sim.prefill_cost(b2, batch=batch, freq_scale=s)
+        t, e = self._stretched(t2 - t1, e2 - e1)
+        self._charge(members, t, e, kind="prefill", start_s=now, scale=s)
+        self._ckpt_chunk_to = b2
+        self._ckpt_chunk_charge = e + self.sim.host_power_w * t
+        self._phase_start_s = now
+        self._phase_end_s = now + t
+        return self._phase_end_s
+
+    def _waste_inflight_chunk(self, now: float) -> None:
+        """A crash quantized to this chunk boundary: the in-flight
+        chunk's work dies with the node — its charge moves busy → wasted
+        (deducting the exact per-member shares `_charge` attributed) and
+        every member rolls back to its last durable checkpoint.  Lost
+        work is bounded by one interval — the finer quantization that
+        checkpointing buys over the complete-the-whole-prefill crash
+        semantics of checkpoint=None."""
+        charge = self._ckpt_chunk_charge
+        share = charge / len(self._phase_members)
+        nid = self.node_id
+        for m in self._phase_members:
+            m.energy_j -= share
+            m.energy_on[nid] -= share
+            m.prefill_done = min(m.ckpt_tokens, m.req.tau_in)
+        self.book_waste(charge)
+        self._clear_chunk_state()
+        self._phase_members = []
+        self._phase_kind = None
+        self._phase_end_s = None
+        self._complete_crash(now)
+
+    def _start_restore(self, now: float) -> float:
+        """Batch-1 restore phase for the prefill refugee at the head of
+        the suspended queue: re-run only the unfinished suffix of its
+        prompt — the closed-form difference prefill_cost(τin) −
+        prefill_cost(ckpt), the same telescoping identity the chunks use
+        — after which the member is decode-ready like any resume."""
+        m = self.suspended.popleft()
+        tau = m.req.tau_in
+        base = m.ckpt_tokens
+        assert 0 < base < tau, (base, tau)   # sim.py normalizes the rest
+        if self.dvfs == "per_phase":
+            s, _, _ = self.sim.best_prefill_frequency(
+                tau, batch=1, extra_w=self.sim.host_power_w)
+        else:
+            s = self.freq_scale
+        self.freq_choices[("restore", s)] += 1
+        t_full, e_full = self.sim.prefill_cost(tau, batch=1, freq_scale=s)
+        t_base, e_base = self.sim.prefill_cost(base, batch=1, freq_scale=s)
+        t, e = self._stretched(t_full - t_base, e_full - e_base)
+        self._set_state(ACTIVE, now)
+        self._charge([m], t, e, kind="restore", start_s=now, scale=s)
+        self.n_restores += 1
+        self._restore_member = m
+        self._restore_charge = e + self.sim.host_power_w * t
+        self._phase_members = [m]
+        self._phase_steps = 0
+        self._phase_kind = "restore"
+        self._phase_start_s = now
+        self._phase_scale = s
+        self._phase_end_s = now + t
+        if self.telemetry is not None:
+            self.telemetry.on_restore(self, tau, base, s)
+        return self._phase_end_s
+
+    def _waste_restore(self, now: float) -> None:
+        """A crash quantized to the restore settle: the re-run suffix
+        dies with the node (charge moves busy → wasted) and the member —
+        still holding its durable checkpoint — goes back to the suspended
+        queue as a prefill refugee for the sim loop to re-dispatch."""
+        m = self._restore_member
+        charge = self._restore_charge
+        m.energy_j -= charge
+        m.energy_on[self.node_id] -= charge
+        self.suspended.append(m)
+        self.book_waste(charge)
+        self._restore_member = None
+        self._restore_charge = 0.0
+        self._phase_members = []
+        self._phase_kind = None
+        self._phase_end_s = None
+        self._complete_crash(now)
 
     # --- decode-boundary preemption ------------------------------------
     def _decode_time_at(self, n_steps: int) -> float:
@@ -782,6 +1049,9 @@ class ClusterNode:
         self._phase_end_s = None
         self._preempt_steps = None
         self._preempt_victims = []
+        self._clear_chunk_state()
+        self._restore_member = None
+        self._restore_charge = 0.0
         self._phase_epoch += 1
         self._crash_pending = False
         self._set_state(FAILED, now)

@@ -64,7 +64,13 @@ from repro.core.scheduler import (
 )
 from repro.core.sweep import IncrementalScheduler
 
-from repro.cluster.faults import NORMAL, RECOVER, FaultTrace
+from repro.cluster.faults import (
+    NORMAL,
+    RECOVER,
+    FaultTrace,
+    domain_groups,
+    domain_index,
+)
 from repro.cluster.metrics import replica_registry  # noqa: F401  (re-export)
 from repro.cluster.predictors import TauOutPredictor
 from repro.cluster.trace import ArrivalTrace, TracedRequest
@@ -430,6 +436,76 @@ class ReplicaEnergyPolicy(ZetaOnlinePolicy):
         return self._least_loaded(best)
 
 
+class DomainSpreadPolicy(ZetaOnlinePolicy):
+    """Survivability-aware router: the causal Eq. 2 argmin with a
+    blast-radius anti-affinity term priced into the objective.
+
+    Each node belongs to one fault domain (a rack or PDU leg from
+    ``faults.FaultDomain`` / ``rack_pdu_topology``, or an explicit
+    partition of node ids).  A correlated outage takes a whole domain at
+    once, so the expected work lost to the next outage is proportional
+    to how concentrated the fleet's in-flight work is — the router
+    therefore charges each candidate the live-load fraction already
+    sitting in its domain, on the same normalization as the energy term:
+
+        score(node) = ζ·ê/ê_max − (1−ζ)·â/â_max
+                      + ζ·spread_weight·(domain_load / fleet_load)
+
+    With all load in one domain the penalty is maximal there and zero in
+    an empty domain; with load perfectly spread the penalty is uniform
+    and the policy reduces exactly to zeta_online.  Near-ties break
+    toward the *emptiest domain* first (the hard anti-affinity guard:
+    replicas of concurrent work land in different domains whenever the
+    Eq. 2 scores cannot tell them apart), then least-loaded."""
+
+    name = "domain_spread"
+
+    def __init__(self, domains, zeta: float | None = None, *,
+                 spread_weight: float = 0.25,
+                 tau_out_predictor: TauOutPredictor | None = None):
+        if spread_weight < 0:
+            raise ValueError("spread_weight must be >= 0")
+        super().__init__(zeta, tau_out_predictor=tau_out_predictor)
+        groups = domain_groups(domains)
+        if groups is None:
+            raise ValueError("DomainSpreadPolicy needs a fault-domain "
+                             "topology (FaultDomain or groups of node ids)")
+        self._dom_of = domain_index(groups)
+        self.n_domains = len(groups)
+        self.spread_weight = spread_weight
+
+    def attach(self, nodes, trace, zeta):
+        super().attach(nodes, trace, zeta)
+        missing = [n.node_id for n in nodes if n.node_id not in self._dom_of]
+        if missing:
+            raise ValueError(
+                f"nodes {missing} are in no fault domain — the topology "
+                f"must cover the fleet")
+
+    def _domain_loads(self, nodes) -> dict[int, float]:
+        loads: dict[int, float] = {}
+        for n in nodes:
+            d = self._dom_of[n.node_id]
+            loads[d] = loads.get(d, 0.0) + n.load()
+        return loads
+
+    def select(self, req, nodes, now):
+        e, a = self._observe(req, nodes)
+        dom_load = self._domain_loads(nodes)
+        fleet = sum(dom_load.values())
+        conc = np.array([
+            (dom_load[self._dom_of[n.node_id]] / fleet) if fleet else 0.0
+            for n in nodes])
+        obj = (self.zeta * e / self._e_max
+               - (1.0 - self.zeta) * a / self._a_max
+               + self.zeta * self.spread_weight * conc)
+        order = np.argsort(obj, kind="stable")
+        best = [nodes[i] for i in order if obj[i] <= obj[order[0]] + 1e-12]
+        pick = min(best, key=lambda n: (dom_load[self._dom_of[n.node_id]],
+                                        n.load(), n.power_rank, n.node_id))
+        return pick.node_id
+
+
 class ReplicaOraclePolicy(OfflineOraclePolicy):
     """Replica-aware offline oracle: replays
     ``core.scheduler.schedule_replicated`` over the full trace, committing
@@ -623,6 +699,16 @@ class FailureAwareOraclePolicy(OfflineOraclePolicy):
       * ``"at_arrival"`` — stricter realism: excluded when every host is
         down at the arrival instant (no waiting for recovery).
 
+    ``domains=`` switches the liveness matrix to *domain-masked
+    capacity*: instead of a boolean per model, each entry counts the
+    distinct fault domains with at least one reachable host — the
+    integer-count form ``schedule_with_liveness`` masks at count 0.
+    Under correlated faults a domain is the unit that dies, so surviving
+    *domains*, not surviving nodes, are the capacity the plan may rely
+    on; the masking itself is identical (a model with zero live domains
+    has zero live nodes), but the counts are the quantity a
+    survivability bound reasons about.
+
     At serving time the planned model's hosts may all be dead or draining
     (the plan only guards against *permanent* loss): routing then falls
     back over whatever accepts, and `allow_rerun` keeps refugees alive
@@ -630,23 +716,41 @@ class FailureAwareOraclePolicy(OfflineOraclePolicy):
 
     name = "failure_oracle"
 
-    def __init__(self, faults: FaultTrace, *, liveness: str = "ever_after"):
+    def __init__(self, faults: FaultTrace, *, liveness: str = "ever_after",
+                 domains=None):
         super().__init__()
         if liveness not in ("ever_after", "at_arrival"):
             raise ValueError(f"unknown liveness {liveness!r}")
         self.faults = faults
         self.liveness = liveness
+        groups = domain_groups(domains)
+        self._dom_of = None if groups is None else domain_index(groups)
 
     def attach(self, nodes, trace, zeta):
         profiles = unique_profiles(nodes)
         registry = replica_registry(nodes)
         down = (self.faults.is_down if self.liveness == "at_arrival"
                 else self.faults.down_forever_from)
-        live = np.ones((len(trace), len(profiles)), dtype=bool)
-        for i, r in enumerate(trace.requests):
-            for j, p in enumerate(profiles):
-                live[i, j] = any(not down(nid, r.arrival_s)
-                                 for nid in registry[p.name])
+        if self._dom_of is None:
+            live = np.ones((len(trace), len(profiles)), dtype=bool)
+            for i, r in enumerate(trace.requests):
+                for j, p in enumerate(profiles):
+                    live[i, j] = any(not down(nid, r.arrival_s)
+                                     for nid in registry[p.name])
+        else:
+            dom_of = self._dom_of
+            missing = [n.node_id for n in nodes
+                       if n.node_id not in dom_of]
+            if missing:
+                raise ValueError(
+                    f"nodes {missing} are in no fault domain — the "
+                    f"topology must cover the fleet")
+            live = np.zeros((len(trace), len(profiles)), dtype=np.int64)
+            for i, r in enumerate(trace.requests):
+                for j, p in enumerate(profiles):
+                    live[i, j] = len({dom_of[nid]
+                                      for nid in registry[p.name]
+                                      if not down(nid, r.arrival_s)})
         asg = schedule_with_liveness(profiles, trace.queries(), zeta, live)
         self._model_of = {
             r.request_id: asg.model_names[int(k)]

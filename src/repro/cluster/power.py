@@ -56,6 +56,14 @@ Three built-in policies:
       replicas of an under-provisioned model pre-wake on arrivals while
       an over-provisioned model's spares gate down, independently per
       model.
+    * SurvivabilityAutoscalePolicy — ReplicaRatePolicy with an
+      MTTF-conditioned availability floor: under the steady-state
+      unavailability q = MTTR/(MTTF+MTTR) of one fault domain, keeping a
+      model awake in d independent domains bounds P[every awake replica
+      down at once] by q^d, so d = ceil(ln p_outage_max / ln q) domains
+      are required to meet the outage-probability target — demand may
+      size the replica set *up* from there, but gating never drops a
+      model's awake capacity below d distinct domains.
 """
 
 from __future__ import annotations
@@ -65,6 +73,7 @@ import math
 from collections import deque
 from typing import Sequence
 
+from repro.cluster.faults import domain_groups, domain_index
 from repro.cluster.metrics import replica_registry
 
 # power-state tags (kept as plain strings: cheap, printable, json-able)
@@ -333,3 +342,109 @@ class ReplicaRatePolicy(AutoscalePolicy):
         model = node.profile.name
         return (self._awake(self._model_nodes[model])
                 > self.required_replicas(model, now))
+
+
+class SurvivabilityAutoscalePolicy(ReplicaRatePolicy):
+    """MTTF-conditioned replica autoscaler: demand sizes the awake set
+    up, but an availability floor stops gating from shrinking it below
+    the outage-probability target.
+
+    Each fault domain (rack/PDU leg; one node per domain when no
+    topology is given) is down with steady-state probability
+    q = MTTR/(MTTF+MTTR) — the classic alternating-renewal availability
+    model `data.workloads.fault_trace` draws from.  Domains fail
+    independently, so a model kept awake in d distinct domains is
+    entirely dark with probability q^d; meeting
+    P[all awake replicas down] <= p_outage_max therefore requires
+
+        d  =  ceil( ln(p_outage_max) / ln(q) )
+
+    awake domains (clamped to [1, domains hosting the model] — a target
+    tighter than the fleet can express saturates at every domain).  The
+    floor conditions *gating only*: `should_gate` refuses any gate-down
+    that would leave the node's model awake in fewer than d distinct
+    domains, and `on_arrival` pre-wakes gated replicas — emptiest
+    domains first — whenever the floor is violated (e.g. after crashes
+    took domains out).  Demand sizing (`required_replicas`) is inherited
+    unchanged from ReplicaRatePolicy."""
+
+    name = "survivability_rate"
+
+    def __init__(self, mttf_s: float, mttr_s: float, *,
+                 p_outage_max: float = 1e-3, domains=None,
+                 window_s: float = 60.0, target_util: float = 0.6,
+                 min_awake_per_model: int = 1, idle_timeout_s: float = 10.0,
+                 service_prior_s: float = 2.0):
+        super().__init__(window_s, target_util=target_util,
+                         min_awake_per_model=min_awake_per_model,
+                         idle_timeout_s=idle_timeout_s,
+                         service_prior_s=service_prior_s)
+        if mttf_s <= 0 or mttr_s <= 0:
+            raise ValueError("mttf_s and mttr_s must be > 0")
+        if not 0.0 < p_outage_max < 1.0:
+            raise ValueError("p_outage_max must be in (0, 1)")
+        self.mttf_s = mttf_s
+        self.mttr_s = mttr_s
+        self.p_outage_max = p_outage_max
+        self.unavailability = q = mttr_s / (mttf_s + mttr_s)
+        self.required_domains = max(
+            1, math.ceil(math.log(p_outage_max) / math.log(q)))
+        groups = domain_groups(domains)
+        self._dom_of = None if groups is None else domain_index(groups)
+
+    def attach(self, nodes):
+        super().attach(nodes)
+        if self._dom_of is None:   # degenerate: every node its own domain
+            self._dom_of = {n.node_id: n.node_id for n in self.nodes}
+        missing = [n.node_id for n in self.nodes
+                   if n.node_id not in self._dom_of]
+        if missing:
+            raise ValueError(
+                f"nodes {missing} are in no fault domain — the topology "
+                f"must cover the fleet")
+
+    def _awake_domains(self, peers, *, excluding=None) -> set:
+        return {self._dom_of[n.node_id] for n in peers
+                if n is not excluding
+                and n.power_state in (ACTIVE, IDLE, WAKING)}
+
+    def required_awake_domains(self, model: str) -> int:
+        hosted = {self._dom_of[n.node_id]
+                  for n in self._model_nodes[model]}
+        return min(self.required_domains, len(hosted))
+
+    # --- hooks --------------------------------------------------------
+    def on_arrival(self, req, nodes, now):
+        wake = super().on_arrival(req, nodes, now)
+        waking = set(wake)
+        for model, peers in self._model_nodes.items():
+            have = self._awake_domains(peers)
+            have |= {self._dom_of[nid] for nid in waking
+                     if any(n.node_id == nid for n in peers)}
+            deficit = self.required_awake_domains(model) - len(have)
+            if deficit <= 0:
+                continue
+            gated = sorted(
+                (n for n in peers if n.power_state == GATED
+                 and self._dom_of[n.node_id] not in have
+                 and n.node_id not in waking),
+                key=lambda n: (self._dom_of[n.node_id], n.node_id))
+            picked: set = set()
+            for n in gated:
+                d = self._dom_of[n.node_id]
+                if d in picked:
+                    continue   # one wake per dark domain is enough
+                wake.append(n.node_id)
+                waking.add(n.node_id)
+                picked.add(d)
+                if len(picked) >= deficit:
+                    break
+        return wake
+
+    def should_gate(self, node, now):
+        if not super().should_gate(node, now):
+            return False
+        peers = self._model_nodes[node.profile.name]
+        remaining = self._awake_domains(peers, excluding=node)
+        return len(remaining) >= self.required_awake_domains(
+            node.profile.name)

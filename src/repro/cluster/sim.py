@@ -32,10 +32,19 @@ for free at the recipient's next phase start.  With no surviving replica
 the refugee is either re-run from scratch elsewhere (`policy.allow_rerun`)
 or abandoned; either way its accrued joules move to the wasted bucket so
 the cross-node settlement contract (donor's truncated charge + shipping +
-recipient's resumed charge, or waste) closes to 1e-9.  `faults=None`
-skips every fault code path exactly — the no-fault loop is bit-identical
-to previous PRs — and an *empty* FaultTrace differs only by the eligible-
-node filter, which is the identity on a healthy fleet.
+recipient's resumed charge, or waste) closes to 1e-9.  A *prefill*
+refugee (a checkpointed prefill the crash caught mid-prompt,
+`node.CheckpointConfig`) ships only its durably persisted prefix —
+bytes = ckpt_tokens × KV-bytes/token — and re-runs the unfinished
+suffix in a `restore` phase on the recipient; one with nothing
+checkpointed re-runs from scratch or abandons, wasting its accrued
+joules.  Simultaneous crash events (a correlated FaultTrace killing a
+whole rack/PDU domain at one instant) are additionally aggregated into
+domain-outage counts and correlated-kill-size samples for telemetry.
+`faults=None` skips every fault code path exactly — the no-fault loop
+is bit-identical to previous PRs — and an *empty* FaultTrace differs
+only by the eligible-node filter, which is the identity on a healthy
+fleet.
 
 Without an `autoscaler=`, no idle timer is ever armed and no node ever
 leaves the ACTIVE/IDLE pair; without a `preempter=`, no decode segment is
@@ -241,44 +250,64 @@ def simulate_cluster(
             telemetry.on_retry(req, node.node_id, attempts, now)
         push(node, node.enqueue(req, now))
 
+    def rerun_or_abandon(member, home: ClusterNode, now: float,
+                         reason: str) -> None:
+        """Last resort for an unshippable refugee: re-run its request
+        from scratch on whoever accepts (`policy.allow_rerun`) or give
+        up — the accrued joules move to the wasted bucket either way."""
+        if (policy.allow_rerun(member.req, now)
+                and any(n.accepting for n in nodes)):
+            for w_nid, e in sorted(member.energy_on.items()):
+                by_id[w_nid].book_waste(e)
+            member.energy_on.clear()
+            route_or_retry(member.req, 0, now)
+        else:
+            abandon_request(member.req, now, reason, 0,
+                            member=member, model=home.model_name)
+
     def dispatch_refugee(member, home: ClusterNode, now: float) -> None:
-        """Rescue one suspended decode stranded on `home` (crashed or
+        """Rescue one suspended refugee stranded on `home` (crashed or
         draining): ship its KV to the least-loaded accepting replica of
-        the same model — bytes = context × KV-bytes/token, pulled at the
-        recipient's interconnect bandwidth and J/byte (a pull still works
-        when the donor is dead) — or, with no surviving replica, re-run
-        it from scratch elsewhere / abandon it, wasting the accrued
-        joules either way."""
+        the same model — bytes = context × KV-bytes/token (a *prefill*
+        refugee ships only its checkpointed prefix: ckpt_tokens ×
+        KV-bytes/token), pulled at the recipient's interconnect bandwidth
+        and J/byte (a pull still works when the donor is dead) — or, with
+        no surviving replica (or nothing durable to ship), re-run it from
+        scratch elsewhere / abandon it, wasting the accrued joules."""
         nonlocal seq
+        if member.prefill_done is not None:
+            # mid-prompt refugee: only the durably persisted prefix moves
+            if member.ckpt_tokens >= member.req.tau_in:
+                # the full prompt is checkpointed — decode-ready after
+                # the shipment, no suffix left to restore
+                member.prefill_done = None
+            elif member.ckpt_tokens <= 0:
+                # crashed inside its first chunk: nothing durable exists
+                rerun_or_abandon(member, home, now, "prefill_lost")
+                return
         candidates = [n for n in nodes
                       if n.accepting and n.model_name == home.model_name
                       and n.node_id != home.node_id]
         if candidates:
             recipient = fallback_node(candidates)
-            n_bytes = member.context * kv_bytes_per_token(home.sim.cfg)
+            tokens = (member.ckpt_tokens if member.prefill_done is not None
+                      else member.context)
+            n_bytes = tokens * kv_bytes_per_token(home.sim.cfg)
             ship_s = n_bytes / recipient.hardware.accel.ici_bw
             ship_j = n_bytes * recipient.hardware.accel.j_per_byte_ici
             recipient.book_shipping(ship_s, ship_j)
             member.shipped_bytes += n_bytes
             home.n_migrations_out += 1
             if telemetry is not None:
-                telemetry.on_migration(home, recipient, member.context,
+                telemetry.on_migration(home, recipient, tokens,
                                        n_bytes, ship_s, ship_j, now)
             heapq.heappush(events, (now + ship_s, seq, _SHIP_END,
                                     (recipient.node_id, member)))
             seq += 1
-        elif (policy.allow_rerun(member.req, now)
-              and any(n.accepting for n in nodes)):
-            # no same-model survivor, but the policy would rather re-run
-            # from scratch on another model than give up: the decode done
-            # so far is lost — move its joules to the wasted bucket
-            for w_nid, e in sorted(member.energy_on.items()):
-                by_id[w_nid].book_waste(e)
-            member.energy_on.clear()
-            route_or_retry(member.req, 0, now)
         else:
-            abandon_request(member.req, now, "no_survivor", 0,
-                            member=member, model=home.model_name)
+            # no same-model survivor: the KV (checkpointed or live) has
+            # nowhere to land
+            rerun_or_abandon(member, home, now, "no_survivor")
 
     def handle_failed(node: ClusterNode, now: float) -> None:
         """A node just went FAILED: every suspended decode becomes a
@@ -310,6 +339,16 @@ def simulate_cluster(
                 dnode.draining = False
                 if telemetry is not None:
                     telemetry.on_drain(dnode, False, now)
+
+    # correlated-kill aggregation: crash events sharing one timestamp are
+    # one domain outage (pre-loaded fault events pop contiguously at equal
+    # time — lower sequence numbers than any runtime-pushed event)
+    kill_batch = [None, 0]   # [timestamp, crash count]
+
+    def flush_kill_batch() -> None:
+        if kill_batch[0] is not None and telemetry is not None:
+            telemetry.on_domain_outage(kill_batch[0], kill_batch[1])
+        kill_batch[0], kill_batch[1] = None, 0
 
     for n in nodes:   # the fleet starts idle: give the autoscaler a shot
         arm_idle_timer(n, 0.0)
@@ -436,6 +475,10 @@ def simulate_cluster(
             if telemetry is not None:
                 telemetry.on_fault(fev, node, now)
             if fev.kind == CRASH:
+                if kill_batch[0] is not None and kill_batch[0] != now:
+                    flush_kill_batch()
+                kill_batch[0] = now
+                kill_batch[1] += 1
                 crash_ev = node.begin_crash(now)
                 if crash_ev is not None:
                     push(node, crash_ev)   # truncation settle scheduled
@@ -503,6 +546,7 @@ def simulate_cluster(
                     # stops with the last arrival so the loop terminates.
                     arm_idle_timer(node, now)
 
+    flush_kill_batch()
     if len(records) + len(abandoned) != len(trace):
         raise RuntimeError(
             f"served {len(records)} + abandoned {len(abandoned)} != "

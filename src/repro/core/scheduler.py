@@ -173,21 +173,31 @@ def schedule_with_liveness(
     """Failure-aware Eq. 2 optimum: per-query argmin restricted to *live*
     model columns.
 
-    `live` is an (m, k) boolean mask — live[i, j] == False means model j
-    cannot serve query i on the realized fault trace (every hosting node
-    permanently down from the query's arrival; see
-    ``FaultTrace.down_forever_from``).  The unconstrained Eq. 2 separates
-    per query, so masking columns keeps the solve an exact argmin — this
-    is the offline bound replayed against the *same* fault trace the
-    online policies faced, so the offline→online gap stays a true bound
-    under failures.  A query with no live column falls back to the full
-    row (the online fleet would abandon it; pricing it at its best model
+    `live` is an (m, k) matrix: either a boolean mask — live[i, j] ==
+    False means model j cannot serve query i on the realized fault trace
+    (every hosting node permanently down from the query's arrival; see
+    ``FaultTrace.down_forever_from``) — or integer *capacity counts*
+    (surviving replicas, or surviving fault domains under correlated
+    failures: the domain-masked form), where a column is masked exactly
+    when its count is 0.  The unconstrained Eq. 2 separates per query,
+    so masking columns keeps the solve an exact argmin — this is the
+    offline bound replayed against the *same* fault trace the online
+    policies faced, so the offline→online gap stays a true bound under
+    failures.  A query with no live column falls back to the full row
+    (the online fleet would abandon it; pricing it at its best model
     keeps the bound conservative)."""
     if costs is None:
         costs = normalized_costs(profiles, queries)
     C = objective_matrix(costs, zeta)
     if live.shape != C.shape:
         raise ValueError(f"live mask shape {live.shape} != {C.shape}")
+    if live.dtype != np.bool_:
+        if not np.issubdtype(live.dtype, np.integer):
+            raise ValueError(
+                f"live must be boolean or integer counts, got {live.dtype}")
+        if (live < 0).any():
+            raise ValueError("live counts must be >= 0")
+        live = live > 0
     masked = np.where(live, C, np.inf)
     dead_rows = ~live.any(axis=1)
     if dead_rows.any():

@@ -117,18 +117,29 @@ def fault_trace(
     straggle_mttr_s: float = 30.0,
     slowdown_range: tuple[float, float] = (1.5, 3.0),
     seed: int = 0,
+    domains: Sequence[Sequence[int]] | None = None,
 ) -> list[tuple[float, int, str, float]]:
     """Seeded fault-event stream for a fleet of `n_nodes` nodes: the
     failure-side counterpart of `arrival_times`.
 
-    Two independent alternating-renewal processes per node, both with
-    exponential holding times (the classic MTTF/MTTR availability model):
+    Two independent alternating-renewal processes, both with exponential
+    holding times (the classic MTTF/MTTR availability model):
 
       * crash/recovery — up for Exp(mttf_s), down for Exp(mttr_s):
         emits ("crash", 1.0) then ("recover", 1.0) pairs;
       * straggle/normal — healthy for Exp(straggle_mttf_s), degraded for
         Exp(straggle_mttr_s) at a slowdown factor drawn uniformly from
         `slowdown_range`: emits ("slow", σ) then ("normal", 1.0) pairs.
+
+    `domains` switches crash/recovery to *correlated* mode: it must be a
+    partition of range(n_nodes) (each index in exactly one group); each
+    group runs ONE crash/recover renewal whose events are emitted
+    simultaneously for every member — the blast-radius model for racks
+    and PDU legs.  Straggling stays per-node (a slow NIC is not a rack
+    event).  `domains=None` and the one-node-per-domain partition
+    [(0,), (1,), ...] draw the identical RNG stream and return the
+    identical event list — independent faults are the degenerate
+    topology, pinned in tests.
 
     Passing None for a process's MTTF disables it.  Events are returned
     as (time_s, node_index, kind, value) tuples sorted by time (ties
@@ -148,28 +159,41 @@ def fault_trace(
     lo, hi = slowdown_range
     if not (1.0 <= lo <= hi):
         raise ValueError("slowdown_range must satisfy 1 <= lo <= hi")
+    if domains is None:
+        groups: list[tuple[int, ...]] = [(i,) for i in range(n_nodes)]
+    else:
+        groups = [tuple(g) for g in domains]
+        flat = [n for g in groups for n in g]
+        if sorted(flat) != list(range(n_nodes)):
+            raise ValueError(
+                "domains must partition range(n_nodes): every node index "
+                "in exactly one domain")
     rng = np.random.default_rng(seed)
     events: list[tuple[float, int, str, float]] = []
 
-    def alternating(node: int, up_s: float, down_s: float,
+    def alternating(members: tuple[int, ...], up_s: float, down_s: float,
                     down_kind: str, up_kind: str, draw_value) -> None:
         t = float(rng.exponential(up_s))
         while t < horizon_s:
-            events.append((t, node, down_kind, draw_value()))
+            value = draw_value()
+            for node in members:
+                events.append((t, node, down_kind, value))
             t += float(rng.exponential(down_s))
             if t >= horizon_s:
                 break
-            events.append((t, node, up_kind, 1.0))
+            for node in members:
+                events.append((t, node, up_kind, 1.0))
             t += float(rng.exponential(up_s))
 
-    for node in range(n_nodes):
+    for members in groups:
         if mttf_s is not None:
-            alternating(node, mttf_s, mttr_s, "crash", "recover",
+            alternating(members, mttf_s, mttr_s, "crash", "recover",
                         lambda: 1.0)
         if straggle_mttf_s is not None:
-            alternating(node, straggle_mttf_s, straggle_mttr_s,
-                        "slow", "normal",
-                        lambda: float(rng.uniform(lo, hi)))
+            for node in members:
+                alternating((node,), straggle_mttf_s, straggle_mttr_s,
+                            "slow", "normal",
+                            lambda: float(rng.uniform(lo, hi)))
     events.sort(key=lambda ev: (ev[0], ev[1]))
     return events
 

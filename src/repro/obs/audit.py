@@ -36,7 +36,13 @@ checks):
   * shipping bucket — every KV migration must follow the interconnect
     closed form (bytes == context · kv_bytes_per_token; seconds ==
     bytes / ici_bw; joules == bytes · j_per_byte_ici, all on the
-    *recipient's* spec and meter).
+    *recipient's* spec and meter);
+  * checkpoint bucket — every durable prefill-KV persist must follow
+    its closed form (bytes == new tokens · kv_bytes_per_token; seconds
+    == bytes / ckpt_bw; joules == bytes · j_per_byte_ckpt, all on the
+    node's CheckpointConfig and meter), and every restore phase's
+    charge must equal the telescoping suffix prefill_cost(τin) −
+    prefill_cost(ckpt) under the phase's stretch transform.
 
 `on_finalize` re-checks the fleet-level books (per-request attributed
 energy == Σ busy buckets; horizon == accounted seconds including FAILED
@@ -74,6 +80,8 @@ class InvariantAuditor:
         self._waste_e: dict[int, float] = {}
         self._ship_t: dict[int, float] = {}
         self._ship_e: dict[int, float] = {}
+        self._ckpt_t: dict[int, float] = {}
+        self._ckpt_e: dict[int, float] = {}
         self._last_settle: dict[int, tuple[str, float, float, float]] = {}
         self._context: deque = deque(maxlen=context_events)
         # per-node power constants (idle_w, gated_w, transition_w, wake_j,
@@ -270,6 +278,78 @@ class InvariantAuditor:
                        f"(t={recipient.shipping_s!r}, "
                        f"e={recipient.shipping_energy_j!r})")
 
+    def on_checkpoint(self, node, new_tokens: int, n_bytes: float,
+                      ckpt_s: float, ckpt_j: float, n_members: int) -> None:
+        """Audit one durable prefill-KV persist against the checkpoint
+        closed form (bytes from the model's KV layout, seconds and joules
+        from the node's CheckpointConfig) and the node's running
+        checkpoint meters."""
+        from repro.energy.costs import kv_bytes_per_token
+
+        nid = node.node_id
+        self.note(("checkpoint", nid, "tokens", new_tokens, "bytes",
+                   n_bytes, "s", ckpt_s, "j", ckpt_j,
+                   "members", n_members))
+        self.n_checks += 1
+        if new_tokens <= 0 or n_members <= 0:
+            self._fail(f"empty checkpoint persisted on node {nid}: "
+                       f"{new_tokens} tokens over {n_members} members")
+        expect_bytes = new_tokens * kv_bytes_per_token(node.sim.cfg)
+        if not self._close(n_bytes, expect_bytes):
+            self._fail(f"checkpoint size off closed form on node {nid}: "
+                       f"{n_bytes!r} B for {new_tokens} tokens but "
+                       f"kv_bytes_per_token gives {expect_bytes!r} B")
+        ck = node.checkpoint
+        if not self._close(ckpt_s, n_bytes / ck.ckpt_bw):
+            self._fail(f"checkpoint time off closed form on node {nid}: "
+                       f"{ckpt_s!r} s for {n_bytes!r} B over "
+                       f"{ck.ckpt_bw!r} B/s")
+        if not self._close(ckpt_j, n_bytes * ck.j_per_byte_ckpt):
+            self._fail(f"checkpoint energy off closed form on node {nid}: "
+                       f"{ckpt_j!r} J for {n_bytes!r} B at "
+                       f"{ck.j_per_byte_ckpt!r} J/B")
+        self._ckpt_t[nid] = ct = self._ckpt_t.get(nid, 0.0) + ckpt_s
+        self._ckpt_e[nid] = ce = self._ckpt_e.get(nid, 0.0) + ckpt_j
+        if not (self._close(ct, node.checkpoint_s)
+                and self._close(ce, node.checkpoint_energy_j)):
+            self._fail(f"checkpoint-meter drift on node {nid}: audited "
+                       f"(t={ct!r}, e={ce!r}) but node books "
+                       f"(t={node.checkpoint_s!r}, "
+                       f"e={node.checkpoint_energy_j!r})")
+
+    def on_restore(self, node, tau_in: int, base: int,
+                   scale: float) -> None:
+        """Audit a restore phase's charge (fired at phase start, right
+        after the charge settled): it must equal the telescoping suffix
+        prefill_cost(τin) − prefill_cost(base) at batch 1 under the
+        phase's straggler stretch — the same identity that makes the
+        chunk sum exact, applied to the unfinished remainder."""
+        nid = node.node_id
+        self.note(("restore", nid, "tau", tau_in, "base", base,
+                   "scale", scale))
+        self.n_checks += 1
+        last = self._last_settle.get(nid)
+        if last is None or last[0] != "restore":
+            self._fail(f"restore began on node {nid} without a settled "
+                       f"restore charge (last settle: {last!r})")
+        _, _, t_charged, e_charged = last
+        if not 0 < base < tau_in:
+            self._fail(f"restore on node {nid} for a non-partial prefill: "
+                       f"ckpt {base} of τin {tau_in}")
+        t1, e1 = node.sim.prefill_cost(base, batch=1, freq_scale=scale)
+        t2, e2 = node.sim.prefill_cost(tau_in, batch=1, freq_scale=scale)
+        sigma = node.phase_stretch
+        ts = sigma * (t2 - t1)
+        es = (e2 - e1) + (sigma - 1.0) * (t2 - t1) * node.accel_static_w
+        e_total = es + node.sim.host_power_w * ts
+        if not (self._close(t_charged, ts)
+                and self._close(e_charged, e_total)):
+            self._fail(
+                f"restore charge off the telescoping suffix on node "
+                f"{nid}: settled (t={t_charged!r}, e={e_charged!r}) but "
+                f"prefill_cost({tau_in}) − prefill_cost({base}) at "
+                f"stretch {sigma!r} gives (t={ts!r}, e={e_total!r})")
+
     # --- end-of-run checks --------------------------------------------
     def on_finalize(self, nodes, report) -> None:
         """Close the audit: fleet-level conservation against the report."""
@@ -304,3 +384,13 @@ class InvariantAuditor:
             self._fail(f"fleet shipping bucket {shipping!r} J does not "
                        f"match the audited migration stream "
                        f"{sum(self._ship_e.values())!r} J")
+        ckpt = sum(s.checkpoint_energy_j for s in report.node_stats)
+        if not self._close(ckpt, sum(self._ckpt_e.values())):
+            self._fail(f"fleet checkpoint bucket {ckpt!r} J does not "
+                       f"match the audited persistence stream "
+                       f"{sum(self._ckpt_e.values())!r} J")
+        ckpt_s = sum(s.checkpoint_s for s in report.node_stats)
+        if not self._close(ckpt_s, sum(self._ckpt_t.values())):
+            self._fail(f"fleet checkpoint seconds {ckpt_s!r} do not "
+                       f"match the audited persistence stream "
+                       f"{sum(self._ckpt_t.values())!r} s")

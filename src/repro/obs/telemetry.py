@@ -104,6 +104,15 @@ class Telemetry:
         self._drains = r.counter(
             "sim_drain_transitions_total", "straggler-governance drain "
             "starts/stops", ("node", "action"))
+        self._checkpoints = r.counter(
+            "sim_checkpoints_total", "prefill-KV checkpoint persists",
+            ("node",))
+        self._restores = r.counter(
+            "sim_restores_total", "checkpoint-restore phases begun",
+            ("node",))
+        self._domain_outages = r.counter(
+            "sim_domain_outages_total",
+            "correlated fault batches (simultaneous crash groups)", ())
         # gauges — live fleet state + end-of-run snapshot
         self._queue_depth = r.gauge(
             "sim_queue_depth", "waiting requests per node", ("node",))
@@ -133,6 +142,9 @@ class Telemetry:
         self._h_phase_s = r.histogram(
             "sim_phase_seconds", "settled phase durations",
             ("node", "model", "phase"))
+        self._h_outage_size = r.histogram(
+            "sim_domain_outage_size",
+            "nodes killed per correlated fault batch")
         # Pre-resolve the hot-path children once per node: hooks fire per
         # event, and `labels()` stringifies its key on every call — caching
         # the child objects here keeps the instrumented run inside the
@@ -149,9 +161,9 @@ class Telemetry:
                 "route": self._routes.labels(pol, nid),
                 "completion": self._completions.labels(nid, model),
                 "phase_c": {k: self._phases.labels(nid, model, k)
-                            for k in ("prefill", "decode")},
+                            for k in ("prefill", "decode", "restore")},
                 "phase_h": {k: self._h_phase_s.labels(nid, model, k)
-                            for k in ("prefill", "decode")},
+                            for k in ("prefill", "decode", "restore")},
                 "h_latency": self._h_latency.labels(model),
                 "h_queue": self._h_queue.labels(model),
                 "h_slowdown": self._h_slowdown.labels(model),
@@ -263,6 +275,30 @@ class Telemetry:
     def on_power_begin(self, node, kind: str, now: float) -> None:
         self._node_ch[node.node_id][kind].inc()
 
+    def on_checkpoint(self, node, new_tokens: int, n_bytes: float,
+                      ckpt_s: float, ckpt_j: float, n_members: int) -> None:
+        """A chunk boundary durably persisted `new_tokens` of fresh KV
+        prefix across `n_members` batch members (the chunk itself settles
+        through on_phase_settle; this hook carries the persistence cost)."""
+        self._lazy(self._checkpoints, node.node_id).inc(n_members)
+        if self.tracer is not None:
+            self.tracer.instant("checkpoint", node.phase_end_s or 0.0,
+                                node.node_id + 1, "checkpoint",
+                                ("tokens", new_tokens, "bytes", n_bytes,
+                                 "energy_j", ckpt_j, "members", n_members))
+        if self.auditor is not None:
+            self.auditor.on_checkpoint(node, new_tokens, n_bytes,
+                                       ckpt_s, ckpt_j, n_members)
+
+    def on_restore(self, node, tau_in: int, base: int,
+                   scale: float) -> None:
+        """A prefill refugee began its batch-1 restore phase (fired at
+        phase start, right after the charge lands, so the auditor can
+        cross-check the suffix cost against the just-settled charge)."""
+        self._lazy(self._restores, node.node_id).inc()
+        if self.auditor is not None:
+            self.auditor.on_restore(node, tau_in, base, scale)
+
     # --- fault/rescue hooks (called by repro.cluster.sim) ---------------
     def on_fault(self, event, node, now: float) -> None:
         self._lazy(self._faults, event.node_id, event.kind).inc()
@@ -281,6 +317,16 @@ class Telemetry:
         if self.auditor is not None:
             self.auditor.on_migration(home, recipient, context, n_bytes,
                                       ship_s, ship_j)
+
+    def on_domain_outage(self, now: float, size: int) -> None:
+        """A batch of simultaneous crash events finished applying: one
+        correlated outage of `size` nodes (size 1 for independent faults
+        — the degenerate one-node-per-domain topology)."""
+        self._domain_outages.get().inc()
+        self._h_outage_size.get().observe(size)
+        if self.tracer is not None:
+            self.tracer.instant("domain_outage", now, 0, "fault",
+                                ("size", size))
 
     def on_retry(self, req, nid: int, attempts: int, now: float) -> None:
         self._lazy(self._retries, nid).inc()
@@ -331,6 +377,7 @@ class Telemetry:
                     ("gated", n.gated_energy_j, n.gated_s),
                     ("transition", n.transition_energy_j, n.transition_s),
                     ("shipping", n.shipping_energy_j, n.shipping_s),
+                    ("checkpoint", n.checkpoint_energy_j, n.checkpoint_s),
                     ("wasted", n.wasted_energy_j, None),
                     ("failed", None, n.failed_s)):
                 if e_j is not None:
@@ -372,6 +419,10 @@ class Telemetry:
                      "refugee decodes received per node", ("node",))
         mo = r.gauge("sim_node_migrations_out",
                      "refugee decodes shipped away per node", ("node",))
+        ck = r.gauge("sim_node_checkpoints",
+                     "prefill-KV checkpoint persists per node", ("node",))
+        rs = r.gauge("sim_node_restores",
+                     "restore phases begun per node", ("node",))
         for s in report.node_stats:
             served.labels(s.node_id, s.model).set(s.n_served)
             util.labels(s.node_id, s.model).set(s.utilization)
@@ -384,6 +435,8 @@ class Telemetry:
             rc.labels(s.node_id).set(s.n_recoveries)
             mi.labels(s.node_id).set(s.n_migrations_in)
             mo.labels(s.node_id).set(s.n_migrations_out)
+            ck.labels(s.node_id).set(s.n_checkpoints)
+            rs.labels(s.node_id).set(s.n_restores)
         if self.auditor is not None:
             self.auditor.on_finalize(nodes, report)
 

@@ -1,0 +1,411 @@
+"""Correlated failure domains, prefill checkpointing, survivability.
+
+Pins the blast-radius PR's contracts:
+
+  * FaultDomain trees flatten to the canonical co-failure partition and
+    the correlated injector kills whole domains simultaneously (with
+    one-node-per-domain bit-identical to the independent generator,
+    pinned at the raw-trace level in test_faults);
+  * chunked checkpointed prefill telescopes exactly — a no-fault
+    checkpointed run matches the unchunked run to 1e-9 while paying the
+    closed-form checkpoint bucket (the seventh), live-audited;
+  * a crash mid-prefill loses exactly the in-flight chunk: the refugee
+    ships only its durable prefix and pays the unfinished-suffix restore
+    on a survivor; a crash inside the first chunk has nothing durable and
+    degrades to the rerun/abandon path;
+  * DomainSpreadPolicy places replicas of a burst across racks where the
+    plain zeta router piles them into one;
+  * SurvivabilityAutoscalePolicy holds the q^d availability floor;
+  * schedule_with_liveness accepts integer (domain-count) capacity.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    CheckpointConfig,
+    ClusterNode,
+    DomainSpreadPolicy,
+    FailoverPolicy,
+    FaultDomain,
+    FaultEvent,
+    FaultInjector,
+    FaultTrace,
+    LeastLoadedPolicy,
+    SurvivabilityAutoscalePolicy,
+    ZetaOnlinePolicy,
+    domain_index,
+    rack_pdu_topology,
+    poisson_trace,
+    simulate_cluster,
+    timestamped_trace,
+)
+from repro.cluster.faults import CRASH, RECOVER
+from repro.configs import PAPER_ZOO
+from repro.core.scheduler import schedule_with_liveness
+from repro.energy import SWING_NODE
+from repro.energy.costs import kv_bytes_per_token
+from repro.obs import InvariantAuditor, Telemetry
+
+from test_faults import PROFILES, make_nodes, seven_bucket_residual  # noqa: E402
+
+KVB_7B = kv_bytes_per_token(PAPER_ZOO["llama2-7b"])
+
+
+def ckpt_nodes(names, *, interval=256, max_batch=2):
+    ck = CheckpointConfig(interval_tokens=interval)
+    return [ClusterNode(i, PAPER_ZOO[n], PROFILES[n], SWING_NODE,
+                        max_batch=max_batch, checkpoint=ck)
+            for i, n in enumerate(names)]
+
+
+# ---------------------------------------------------------------------------
+# fault-domain topology
+# ---------------------------------------------------------------------------
+
+
+class TestFaultDomainTopology:
+
+    def test_tree_flattens_to_rack_partition(self):
+        top = rack_pdu_topology(range(8), rack_size=2, racks_per_pdu=2)
+        assert top.groups() == ((0, 1), (2, 3), (4, 5), (6, 7))
+        assert top.all_nodes == tuple(range(8))
+        assert [c.name for c in top.children] == ["pdu0", "pdu1"]
+        flat = rack_pdu_topology(range(5), rack_size=2)
+        assert flat.groups() == ((0, 1), (2, 3), (4,))   # ragged tail rack
+
+    def test_domain_holds_nodes_or_children_never_both(self):
+        child = FaultDomain("rack0", nodes=(1,))
+        with pytest.raises(ValueError):
+            FaultDomain("bad", nodes=(0,), children=(child,))
+        with pytest.raises(ValueError):
+            rack_pdu_topology([], rack_size=2)
+        with pytest.raises(ValueError):
+            rack_pdu_topology(range(4), rack_size=0)
+
+    def test_domain_index_rejects_double_membership(self):
+        assert domain_index([(0, 1), (2,)]) == {0: 0, 1: 0, 2: 1}
+        with pytest.raises(ValueError):
+            domain_index([(0, 1), (1, 2)])
+
+    def test_correlated_injector_kills_whole_domains(self):
+        ids = [10, 11, 12, 13]
+        inj = FaultInjector(mttf_s=40.0, mttr_s=10.0, seed=5,
+                            domains=((10, 11), (12, 13)))
+        tr = inj.generate(ids, 400.0)
+        assert tr.domains == ((10, 11), (12, 13))
+        assert tr.name.endswith("/domains=2")
+        for kind in (CRASH, RECOVER):
+            by_time: dict = {}
+            for ev in tr.events:
+                if ev.kind == kind:
+                    by_time.setdefault(ev.time_s, set()).add(ev.node_id)
+            assert by_time   # the storm actually fired
+            for members in by_time.values():
+                assert members in ({10, 11}, {12, 13})
+
+    def test_injector_rejects_domains_outside_fleet(self):
+        inj = FaultInjector(mttf_s=40.0, seed=5, domains=((0, 99),))
+        with pytest.raises(ValueError, match="not in the fleet"):
+            inj.generate([0, 1], 100.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointed prefill: telescoping + the seventh bucket
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointedPrefill:
+
+    def test_no_fault_run_matches_unchunked_and_pays_closed_form(self):
+        trace = timestamped_trace([(0.0, (1024, 8))])
+        plain = simulate_cluster(trace, make_nodes(("llama2-7b",)),
+                                 LeastLoadedPolicy(), zeta=0.5)
+        tel = Telemetry(auditor=InvariantAuditor())
+        ck = simulate_cluster(trace, ckpt_nodes(("llama2-7b",)),
+                              LeastLoadedPolicy(), zeta=0.5, telemetry=tel)
+        rp, rc = plain.records[0], ck.records[0]
+        # the chunk sum telescopes: identical wall time and attributed J
+        assert rc.finish_s == pytest.approx(rp.finish_s, rel=1e-9)
+        assert rc.energy_j == pytest.approx(rp.energy_j, rel=1e-9)
+        # interior boundaries of a 1024-token prefill at interval 256:
+        # 256, 512, 768 — the final settle is durable by completion
+        assert ck.total_checkpoints == 3
+        n_bytes = 768 * KVB_7B
+        s = ck.node_stats[0]
+        assert s.checkpoint_energy_j == pytest.approx(
+            n_bytes * 2.0e-10, rel=1e-9)
+        assert s.checkpoint_s == pytest.approx(n_bytes / 16e9, rel=1e-9)
+        assert plain.node_stats[0].checkpoint_energy_j == 0.0
+        assert seven_bucket_residual(ck) <= 1e-9
+        assert tel.auditor.n_checks > 0
+
+    def test_two_requests_total_checkpoint_accounting(self):
+        trace = timestamped_trace([(0.0, (1024, 8)), (0.0, (1024, 8))])
+        tel = Telemetry(auditor=InvariantAuditor())
+        rep = simulate_cluster(trace, ckpt_nodes(("llama2-7b",)),
+                               LeastLoadedPolicy(), zeta=0.5, telemetry=tel)
+        assert len(rep.records) == 2
+        # 3 interior boundaries per 1024-token prompt, whatever the
+        # batching shape (joint prefill or joiner chunks)
+        assert rep.total_checkpoints == 6
+        assert rep.total_checkpoint_energy_j == pytest.approx(
+            2 * 768 * KVB_7B * 2.0e-10, rel=1e-9)
+        assert seven_bucket_residual(rep) <= 1e-9
+
+    def test_short_prompt_never_checkpoints(self):
+        trace = timestamped_trace([(0.0, (128, 8))])   # < interval_tokens
+        rep = simulate_cluster(trace, ckpt_nodes(("llama2-7b",)),
+                               LeastLoadedPolicy(), zeta=0.5)
+        assert rep.total_checkpoints == 0
+        assert rep.total_checkpoint_energy_j == 0.0
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            CheckpointConfig(interval_tokens=0)
+        with pytest.raises(ValueError):
+            CheckpointConfig(j_per_byte_ckpt=-1.0)
+        with pytest.raises(ValueError):
+            CheckpointConfig(ckpt_bw=0.0)
+
+
+class TestCheckpointCrashRescue:
+
+    def test_crash_mid_chunk_loses_exactly_one_chunk(self):
+        nodes = ckpt_nodes(("llama2-7b", "llama2-7b"))
+        sim = nodes[0].sim
+        t1, e1 = sim.prefill_cost(1024, batch=1, freq_scale=1.0)
+        t2, e2 = sim.prefill_cost(1280, batch=1, freq_scale=1.0)
+        # crash strictly inside the 5th chunk: 1024 tokens are durable
+        faults = FaultTrace("mid", (FaultEvent((t1 + t2) / 2.0, 0, CRASH),))
+        tel = Telemetry(auditor=InvariantAuditor())
+        rep = simulate_cluster(
+            timestamped_trace([(0.0, (2048, 8))]), nodes,
+            FailoverPolicy(LeastLoadedPolicy()), zeta=0.5,
+            faults=faults, telemetry=tel)
+        assert len(rep.records) == 1 and not rep.abandoned
+        assert rep.records[0].node_id == 1          # finished on survivor
+        assert rep.total_restores == 1
+        assert rep.total_migrations == 1
+        # only the durable prefix ships
+        assert rep.records[0].shipped_bytes == pytest.approx(
+            1024 * KVB_7B, rel=1e-9)
+        # the wasted bucket is exactly the in-flight chunk's charge
+        chunk_j = (e2 - e1) + sim.host_power_w * (t2 - t1)
+        assert rep.total_wasted_energy_j == pytest.approx(chunk_j, rel=1e-9)
+        # durable boundaries before the crash: 256..1024 on node 0
+        assert rep.node_stats[0].n_checkpoints == 4
+        assert rep.node_stats[1].n_restores == 1
+        assert seven_bucket_residual(rep) <= 1e-9
+        assert tel.auditor.n_checks > 0
+
+    def test_crash_in_first_chunk_has_nothing_durable(self):
+        nodes = ckpt_nodes(("llama2-7b", "llama2-7b"))
+        sim = nodes[0].sim
+        t1, _ = sim.prefill_cost(128, batch=1, freq_scale=1.0)
+        faults = FaultTrace("early", (FaultEvent(t1, 0, CRASH),))
+        rep = simulate_cluster(
+            timestamped_trace([(0.0, (2048, 8))]), nodes,
+            FailoverPolicy(LeastLoadedPolicy(), rerun=False), zeta=0.5,
+            faults=faults)
+        # no durable prefix: no restore, no shipment — just the abandon
+        assert not rep.records
+        assert [a.reason for a in rep.abandoned] == ["prefill_lost"]
+        assert rep.total_restores == 0
+        assert rep.total_migrations == 0
+        # the in-flight first chunk was already wasted at crash time, so
+        # the abandon itself has nothing left to book
+        tc, ec = sim.prefill_cost(256, batch=1, freq_scale=1.0)
+        assert rep.total_wasted_energy_j == pytest.approx(
+            ec + sim.host_power_w * tc, rel=1e-9)
+        assert rep.abandoned[0].wasted_j == 0.0
+        assert seven_bucket_residual(rep) <= 1e-9
+
+    def test_rerun_rescues_the_first_chunk_crash(self):
+        nodes = ckpt_nodes(("llama2-7b", "llama2-7b"))
+        t1, _ = nodes[0].sim.prefill_cost(128, batch=1, freq_scale=1.0)
+        faults = FaultTrace("early", (FaultEvent(t1, 0, CRASH),))
+        rep = simulate_cluster(
+            timestamped_trace([(0.0, (2048, 8))]), nodes,
+            FailoverPolicy(LeastLoadedPolicy()), zeta=0.5, faults=faults)
+        assert len(rep.records) == 1 and not rep.abandoned
+        assert rep.records[0].node_id == 1
+        assert rep.total_restores == 0          # re-ran from scratch
+        assert rep.total_wasted_energy_j > 0.0
+        assert seven_bucket_residual(rep) <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# survivability-aware placement + scaling
+# ---------------------------------------------------------------------------
+
+
+class TestDomainSpreadPolicy:
+
+    RACKS = ((0, 1), (2, 3))
+
+    def run(self, policy):
+        return simulate_cluster(
+            timestamped_trace([(0.0, (256, 16)), (0.0, (256, 16))]),
+            make_nodes(("llama2-7b",) * 4, max_batch=1),
+            policy, zeta=0.5)
+
+    def test_burst_lands_in_distinct_racks(self):
+        dom_of = domain_index(self.RACKS)
+        base = self.run(ZetaOnlinePolicy())
+        spread = self.run(DomainSpreadPolicy(self.RACKS))
+        base_doms = {dom_of[r.node_id] for r in base.records}
+        spread_doms = {dom_of[r.node_id] for r in spread.records}
+        assert len(base_doms) == 1       # zeta router piles into one rack
+        assert len(spread_doms) == 2     # anti-affinity spreads the burst
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DomainSpreadPolicy(None)
+        with pytest.raises(ValueError):
+            DomainSpreadPolicy(self.RACKS, spread_weight=-0.1)
+        pol = DomainSpreadPolicy(((0, 1),))   # does not cover node 2/3
+        with pytest.raises(ValueError, match="fault domain"):
+            self.run(pol)
+
+    def test_accepts_fault_domain_tree(self):
+        top = rack_pdu_topology(range(4), rack_size=2)
+        rep = self.run(DomainSpreadPolicy(top))
+        assert len(rep.records) == 2
+
+
+class TestSurvivabilityAutoscaler:
+
+    def test_required_domains_math(self):
+        pol = SurvivabilityAutoscalePolicy(900.0, 100.0)   # q = 0.1
+        assert pol.unavailability == pytest.approx(0.1)
+        assert pol.required_domains == 3                   # 0.1^3 <= 1e-3
+        loose = SurvivabilityAutoscalePolicy(900.0, 100.0,
+                                             p_outage_max=0.5)
+        assert loose.required_domains == 1
+
+    def test_rejects_bad_config(self):
+        with pytest.raises(ValueError):
+            SurvivabilityAutoscalePolicy(0.0, 100.0)
+        with pytest.raises(ValueError):
+            SurvivabilityAutoscalePolicy(900.0, -1.0)
+        with pytest.raises(ValueError):
+            SurvivabilityAutoscalePolicy(900.0, 100.0, p_outage_max=1.0)
+
+    def test_floor_clamps_to_hosted_domains(self):
+        pol = SurvivabilityAutoscalePolicy(900.0, 100.0,
+                                           domains=((0, 1), (2, 3)))
+        pol.attach(make_nodes(("llama2-7b",) * 4))
+        # the target (3 domains) saturates at the 2 domains hosting 7b
+        assert pol.required_awake_domains("llama2-7b") == 2
+
+    def test_attach_rejects_uncovered_fleet(self):
+        pol = SurvivabilityAutoscalePolicy(900.0, 100.0, domains=((0, 1),))
+        with pytest.raises(ValueError, match="no fault domain"):
+            pol.attach(make_nodes(("llama2-7b",) * 3))
+
+    def test_on_arrival_wakes_one_replica_per_dark_domain(self):
+        nodes = make_nodes(("llama2-7b",) * 4)
+        pol = SurvivabilityAutoscalePolicy(900.0, 100.0)   # required d = 3
+        pol.attach(nodes)
+        for n in nodes[1:]:
+            n._pstate = "gated"
+        req = poisson_trace(1, 1.0, seed=0).requests[0]
+        wake = pol.on_arrival(req, nodes, now=0.0)
+        # one awake domain, floor of three: wake two more, one per domain
+        assert len(set(wake)) == len(wake) == 2
+        assert set(wake) <= {1, 2, 3}
+
+    def test_should_gate_refuses_to_break_the_floor(self):
+        nodes = make_nodes(("llama2-7b",) * 3)
+        pol = SurvivabilityAutoscalePolicy(900.0, 100.0)   # required d = 3
+        pol.attach(nodes)
+        assert not pol.should_gate(nodes[0], now=1e4)
+        loose = SurvivabilityAutoscalePolicy(900.0, 100.0,
+                                             p_outage_max=0.5)
+        loose.attach(nodes)
+        assert loose.should_gate(nodes[0], now=1e4)
+
+
+class TestDomainCountedLiveness:
+
+    QUERIES = [(64, 64), (128, 32), (256, 128)]
+
+    def profiles(self):
+        return [PROFILES["llama2-7b"], PROFILES["llama2-13b"]]
+
+    def test_integer_counts_equal_boolean_mask(self):
+        live_b = np.ones((3, 2), dtype=bool)
+        live_i = np.full((3, 2), 2, dtype=np.int64)
+        live_b[0, 0] = False
+        live_i[0, 0] = 0       # zero surviving domains == masked
+        a = schedule_with_liveness(self.profiles(), self.QUERIES, 1.0,
+                                   live_b)
+        b = schedule_with_liveness(self.profiles(), self.QUERIES, 1.0,
+                                   live_i)
+        assert list(a.assignee) == list(b.assignee)
+
+    def test_rejects_float_and_negative_counts(self):
+        with pytest.raises(ValueError):
+            schedule_with_liveness(self.profiles(), self.QUERIES, 1.0,
+                                   np.ones((3, 2), dtype=float))
+        bad = np.ones((3, 2), dtype=np.int64)
+        bad[1, 1] = -1
+        with pytest.raises(ValueError):
+            schedule_with_liveness(self.profiles(), self.QUERIES, 1.0, bad)
+
+
+# ---------------------------------------------------------------------------
+# correlated storm, end to end
+# ---------------------------------------------------------------------------
+
+
+class TestCorrelatedStorm:
+
+    RACKS = ((0, 1), (2, 3))
+
+    def test_rack_outage_conserves_and_is_observable(self):
+        faults = FaultTrace(
+            "rack-out",
+            (FaultEvent(1.0, 0, CRASH), FaultEvent(1.0, 1, CRASH),
+             FaultEvent(4.0, 0, RECOVER), FaultEvent(4.0, 1, RECOVER)),
+            domains=self.RACKS)
+        tel = Telemetry(auditor=InvariantAuditor())
+        rep = simulate_cluster(
+            poisson_trace(30, 6.0, seed=7),
+            ckpt_nodes(("llama2-7b",) * 4),
+            FailoverPolicy(DomainSpreadPolicy(self.RACKS)), zeta=0.5,
+            faults=faults, telemetry=tel)
+        assert len(rep.records) + len(rep.abandoned) == 30
+        assert rep.total_crashes == 2
+        assert seven_bucket_residual(rep) <= 1e-9
+        assert tel.auditor.n_checks > 0
+        # both crashes land in ONE correlated outage batch of size 2
+        assert tel.registry.value("sim_domain_outages_total") == 1.0
+        h = tel.registry["sim_domain_outage_size"].children[()]
+        assert h.count == 1 and h.max == 2.0
+        # registry round-trip carries the checkpoint surface
+        rebuilt = type(rep).from_registry(tel.registry)
+        assert rebuilt.total_checkpoints == rep.total_checkpoints
+        assert rebuilt.total_restores == rep.total_restores
+        assert rebuilt.total_checkpoint_energy_j == pytest.approx(
+            rep.total_checkpoint_energy_j, rel=1e-9)
+
+    def test_generated_correlated_storm_conserves(self):
+        faults = FaultInjector(mttf_s=4.0, mttr_s=2.0, seed=13,
+                               domains=self.RACKS).generate(range(4), 20.0)
+        assert faults.domains == self.RACKS
+        tel = Telemetry(auditor=InvariantAuditor())
+        rep = simulate_cluster(
+            poisson_trace(40, 5.0, seed=11),
+            ckpt_nodes(("llama2-7b",) * 4),
+            FailoverPolicy(DomainSpreadPolicy(self.RACKS)), zeta=0.5,
+            faults=faults, telemetry=tel)
+        assert len(rep.records) + len(rep.abandoned) == 40
+        assert rep.total_crashes > 0
+        assert seven_bucket_residual(rep) <= 1e-9
+        attributed = sum(r.energy_j for r in rep.records)
+        busy = sum(s.busy_energy_j for s in rep.node_stats)
+        assert attributed == pytest.approx(busy, rel=1e-9)

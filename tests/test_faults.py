@@ -36,6 +36,7 @@ from repro.cluster import (
     ZetaOnlinePolicy,
     poisson_trace,
     simulate_cluster,
+    timestamped_trace,
 )
 from repro.cluster.faults import CRASH, NORMAL, RECOVER, SLOW
 from repro.configs import PAPER_ZOO, TABLE1
@@ -68,12 +69,12 @@ def make_nodes(names, max_batch=2):
             for i, n in enumerate(names)]
 
 
-def six_bucket_residual(report):
+def seven_bucket_residual(report):
     worst = 0.0
     for s in report.node_stats:
         total = (s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
                  + s.transition_energy_j + s.shipping_energy_j
-                 + s.wasted_energy_j)
+                 + s.checkpoint_energy_j + s.wasted_energy_j)
         worst = max(worst, abs(total - s.total_energy_j)
                     / max(1.0, s.total_energy_j))
         worst = max(worst, abs(s.accounted_s - s.horizon_s)
@@ -128,6 +129,54 @@ class TestFaultTraceGenerator:
             fault_trace(2, 100.0, straggle_mttf_s=10.0,
                         slowdown_range=(0.5, 2.0))
 
+    def test_zero_length_horizon_rejected(self):
+        with pytest.raises(ValueError):
+            fault_trace(2, 0.0, mttf_s=10.0)
+
+    def test_mttr_longer_than_mttf(self):
+        # mostly-down fleets are legal: alternation and bounds still hold
+        evs = fault_trace(2, 400.0, mttf_s=5.0, mttr_s=80.0, seed=6)
+        assert evs
+        times = [t for t, *_ in evs]
+        assert times == sorted(times)
+        assert all(0.0 <= t < 400.0 for t in times)
+        for nid in (0, 1):
+            kinds = [k for _, n, k, _ in evs if n == nid]
+            assert kinds == [CRASH, RECOVER][:2] * (len(kinds) // 2) \
+                + [CRASH][: len(kinds) % 2]
+
+    def test_degenerate_slowdown_range(self):
+        evs = fault_trace(3, 500.0, straggle_mttf_s=20.0,
+                          slowdown_range=(1.75, 1.75), seed=7)
+        slows = [v for _, _, k, v in evs if k == SLOW]
+        assert slows and all(v == 1.75 for v in slows)
+
+    def test_correlated_domains_partition_validation(self):
+        with pytest.raises(ValueError):   # node 2 missing
+            fault_trace(3, 100.0, mttf_s=10.0, domains=[(0, 1)])
+        with pytest.raises(ValueError):   # node 1 twice
+            fault_trace(3, 100.0, mttf_s=10.0, domains=[(0, 1), (1, 2)])
+        with pytest.raises(ValueError):   # node 3 out of range
+            fault_trace(3, 100.0, mttf_s=10.0, domains=[(0, 1), (2, 3)])
+
+    def test_singleton_domains_bit_identical_to_independent(self):
+        kw = dict(mttf_s=25.0, mttr_s=10.0, straggle_mttf_s=40.0, seed=12)
+        independent = fault_trace(4, 600.0, **kw)
+        degenerate = fault_trace(4, 600.0, domains=[(i,) for i in range(4)],
+                                 **kw)
+        assert independent == degenerate
+
+    def test_correlated_crashes_are_simultaneous(self):
+        evs = fault_trace(4, 800.0, mttf_s=30.0, mttr_s=15.0, seed=8,
+                          domains=[(0, 1), (2, 3)])
+        assert evs
+        by_time: dict = {}
+        for t, nid, kind, _ in evs:
+            by_time.setdefault((t, kind), set()).add(nid)
+        for (t, kind), members in by_time.items():
+            # every event time belongs to exactly one domain, fully
+            assert members in ({0, 1}, {2, 3}), (t, kind, members)
+
 
 class TestFaultTraceAPI:
 
@@ -153,6 +202,41 @@ class TestFaultTraceAPI:
         assert tr.down_forever_from(0, 5.0)
         assert tr.down_forever_from(0, 99.0)
         assert not tr.down_forever_from(1, 0.0)
+
+    def test_unit_value_kinds_reject_payload(self):
+        # crash/recover/normal carry no payload — a non-1.0 value is a
+        # construction bug, not information
+        for kind in (CRASH, RECOVER, NORMAL):
+            with pytest.raises(ValueError):
+                FaultEvent(1.0, 0, kind, value=2.0)
+            FaultEvent(1.0, 0, kind, value=1.0)   # the unit value is fine
+
+    def test_orphan_recover_rejected(self):
+        with pytest.raises(ValueError):
+            FaultTrace("bad", (FaultEvent(1.0, 0, RECOVER),))
+        with pytest.raises(ValueError):   # recover for the wrong node
+            FaultTrace("bad", (FaultEvent(1.0, 0, CRASH),
+                               FaultEvent(2.0, 1, RECOVER)))
+        # double-crash while down stays idempotent (correlated traces may
+        # legitimately re-kill an already-down node), recover closes it
+        tr = FaultTrace("ok", (FaultEvent(1.0, 0, CRASH),
+                               FaultEvent(2.0, 0, CRASH),
+                               FaultEvent(3.0, 0, RECOVER)))
+        assert tr.down_intervals(0) == [(1.0, 3.0)]
+
+    def test_down_index_matches_interval_scan(self):
+        # regression for the cached per-node index: bisect-backed is_down
+        # must agree with a brute-force scan of down_intervals everywhere
+        evs = fault_trace(3, 300.0, mttf_s=12.0, mttr_s=6.0, seed=13)
+        tr = FaultTrace("t", tuple(FaultEvent(*e) for e in evs))
+        for nid in range(3):
+            ivals = tr.down_intervals(nid)
+            probes = [t / 4.0 for t in range(0, 1300)]
+            probes += [edge for s, e in ivals for edge in (s, e)
+                       if e != math.inf]
+            for t in probes:
+                brute = any(s <= t < e for s, e in ivals)
+                assert tr.is_down(nid, t) == brute, (nid, t)
 
     def test_injector_maps_node_ids(self):
         inj = FaultInjector(mttf_s=30.0, seed=4)
@@ -238,7 +322,7 @@ class TestMigrationRescue:
         assert rep.total_crashes == 2
         assert rep.total_migrations > 0
         assert len(rep.records) + len(rep.abandoned) == 50
-        assert six_bucket_residual(rep) <= 1e-9
+        assert seven_bucket_residual(rep) <= 1e-9
         attributed = sum(r.energy_j for r in rep.records)
         busy = sum(s.busy_energy_j for s in rep.node_stats)
         assert attributed == pytest.approx(busy, rel=1e-9)
@@ -285,7 +369,7 @@ class TestMigrationRescue:
             assert wasted > 0
             assert sum(a.wasted_j for a in rep.abandoned) \
                 == pytest.approx(wasted, rel=1e-9)
-        assert six_bucket_residual(rep) <= 1e-9
+        assert seven_bucket_residual(rep) <= 1e-9
         assert rep.goodput() < 1.0
 
     def test_abandoned_records_are_sorted_and_typed(self):
@@ -327,7 +411,7 @@ class TestStragglers:
         static_w = node.accel_static_w + node.sim.host_power_w
         extra = (sigma - 1.0) * service_b * static_w
         assert rs.energy_j - rb.energy_j == pytest.approx(extra, rel=1e-9)
-        assert six_bucket_residual(slow) <= 1e-9
+        assert seven_bucket_residual(slow) <= 1e-9
 
     def test_normal_event_clears_the_stretch(self):
         # straggle over before the (only) request arrives: identical run
@@ -407,7 +491,7 @@ class TestFailoverPolicy:
         for r in rep.records:
             served[r.node_id] += 1
         assert served[0] < served[1]
-        assert six_bucket_residual(rep) <= 1e-9
+        assert seven_bucket_residual(rep) <= 1e-9
 
 
 # ---------------------------------------------------------------------------
@@ -467,6 +551,27 @@ class TestFailureAwareOracle:
                                0.0)
 
 
+class TestCrashOnSettleBoundary:
+
+    def test_crash_exactly_at_prefill_settle(self):
+        # a fault event landing at the exact phase-settle instant is
+        # processed *before* the settle (pre-loaded events sort first at
+        # equal time): the finished prefill completes legitimately, the
+        # decode-ready member becomes a refugee, and the books still close
+        nodes = make_nodes(("llama2-7b", "llama2-7b"), max_batch=2)
+        t_pref, _ = nodes[0].sim.prefill_cost(1024, batch=1, freq_scale=1.0)
+        trace = timestamped_trace([(0.0, (1024, 4))])
+        faults = FaultTrace("edge", (FaultEvent(t_pref, 0, CRASH),))
+        tel = Telemetry(auditor=InvariantAuditor())
+        rep = simulate_cluster(trace, nodes, LeastLoadedPolicy(),
+                               faults=faults, telemetry=tel)
+        assert len(rep.records) == 1 and not rep.abandoned
+        assert rep.records[0].node_id == 1      # finished on the survivor
+        assert rep.total_migrations == 1
+        assert rep.total_wasted_energy_j == 0.0  # nothing was re-run
+        assert seven_bucket_residual(rep) <= 1e-9
+
+
 # ---------------------------------------------------------------------------
 # property tests (hypothesis-gated)
 # ---------------------------------------------------------------------------
@@ -495,9 +600,35 @@ class TestConservationProperties:
                 zeta=0.5, faults=faults,
                 telemetry=Telemetry(auditor=InvariantAuditor()))
             assert len(rep.records) + len(rep.abandoned) == len(trace)
-            assert six_bucket_residual(rep) <= 1e-9
+            assert seven_bucket_residual(rep) <= 1e-9
             attributed = sum(r.energy_j for r in rep.records)
             busy = sum(s.busy_energy_j for s in rep.node_stats)
             assert attributed == pytest.approx(busy, rel=1e-9, abs=1e-9)
+
+        check()
+
+    def test_down_intervals_is_down_round_trip(self):
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=25, deadline=None)
+        @given(seed=st.integers(0, 1_000_000),
+               mttf=st.floats(1.0, 50.0),
+               mttr=st.floats(0.5, 80.0),
+               probe=st.floats(0.0, 500.0))
+        def check(seed, mttf, mttr, probe):
+            evs = fault_trace(2, 400.0, mttf_s=mttf, mttr_s=mttr, seed=seed)
+            tr = FaultTrace("rt", tuple(FaultEvent(*e) for e in evs))
+            for nid in (0, 1):
+                ivals = tr.down_intervals(nid)
+                # round trip 1: every interval interior is down, the open
+                # right edge is up again
+                for s, e in ivals:
+                    assert tr.is_down(nid, s)
+                    if e != math.inf:
+                        assert tr.is_down(nid, (s + e) / 2.0)
+                        assert not tr.is_down(nid, e)
+                # round trip 2: an arbitrary probe agrees with the scan
+                assert tr.is_down(nid, probe) == any(
+                    s <= probe < e for s, e in ivals)
 
         check()
