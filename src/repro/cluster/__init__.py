@@ -105,21 +105,29 @@ Module map (the event model, and how the pieces plug together):
                     on_fault, drain_updates, allow_rerun) have safe
                     defaults so existing policies run unchanged under
                     fault injection.
-    sim.py        — the discrete-event loop.  Ten event kinds: arrivals,
-                    node phase completions, preemption settlements,
-                    wake/gate completions, autoscaler idle timers, fault
-                    events, crash-quantization settlements, KV-shipment
-                    completions, and retry re-submissions, processed in
-                    (time, seq) order so ties are deterministic;
-                    phase-shaped events carry the node's phase epoch so a
-                    preempted (or crashed) segment's stale end event is
-                    dropped.  Builds the per-model replica registry
-                    (replica_registry) and orchestrates the rescue path:
-                    a crashed node's refugees migrate, re-run, or are
-                    abandoned with their joules booked as wasted.
-                    compare_policies() reruns a trace (and fault trace)
-                    over fresh fleets for an apples-to-apples policy
-                    table.
+    engine/       — the sharded discrete-event engine (see the layer
+                    diagram below).  events.py types the ten event kinds
+                    (EventKind: arrivals, node phase completions,
+                    preemption settlements, wake/gate completions,
+                    autoscaler idle timers, fault events, crash-
+                    quantization settlements, KV-shipment completions,
+                    retry re-submissions) with payload dataclasses —
+                    phase-shaped events carry the node's phase epoch so
+                    a preempted (or crashed) segment's stale end event
+                    is dropped.  shard.py owns one node group's heap;
+                    mailbox.py is the cross-shard channel; runner.py
+                    merges them in fleet-wide (time, seq) order (exact
+                    at any partition), runs barrier-windowed parallel
+                    drains over decomposable configs, and orchestrates
+                    the rescue path: a crashed node's refugees migrate,
+                    re-run, or are abandoned with their joules booked
+                    as wasted.
+    sim.py        — the facade over the engine's exact merge mode:
+                    simulate_cluster (shard count from REPRO_SIM_SHARDS,
+                    default 1 — any value is bit-identical), and
+                    compare_policies() rerunning a trace (and fault
+                    trace) over fresh fleets for an apples-to-apples
+                    policy table.
     metrics.py    — ClusterReport: the seven-bucket busy/idle/gated/
                     transition/shipping/checkpoint/wasted energy split
                     (the buckets partition each node's horizon — FAILED
@@ -138,8 +146,44 @@ Module map (the event model, and how the pieces plug together):
                     live InvariantAuditor.  Pass telemetry= to
                     simulate_cluster; hooks are read-only observers, so
                     the ClusterReport is byte-identical on or off (the
-                    perf-suite `metrics_overhead` gate holds the cost
-                    ≤5% and the identity exact).
+                    perf-suite `metrics_overhead` gate bounds the cost
+                    and pins the identity exact).
+
+Engine layers (one simulation run; the perf-suite `sharded_replay`
+gate pins every artifact byte-identical across partitions)::
+
+                    ArrivalTrace + FaultTrace (preloaded, (time, seq))
+                                        │
+                                        v
+                   ┌─────────────── Mailbox ────────────────┐
+                   │  cross-shard: arrivals, domain faults,  │
+                   │  KV shipments, retries, pre-wakes       │
+                   └──┬──────────────┬──────────────┬────────┘
+          routed by policies.py over the merged fleet view
+                      │              │              │
+                      v              v              v
+                ┌──────────┐   ┌──────────┐   ┌──────────┐
+                │ NodeShard│   │ NodeShard│   │ NodeShard│   one heap +
+                │  nodes   │   │  nodes   │   │  nodes   │   node-local
+                │  0..i    │   │  i+1..j  │   │  j+1..n  │   events each
+                └────┬─────┘   └────┬─────┘   └────┬─────┘
+                     └──────────────┼──────────────┘
+                                    v
+        Runner — merge mode: consume the globally least (time, seq)
+        across mailbox + shards, sequence numbers from ONE fleet-wide
+        allocator at the monolith's handler sites (bit-identical by
+        construction, any partition, any configuration); windowed
+        mode: shards drain independently below the conservative
+        horizon min(next barrier, now + cross_shard_floor_s) between
+        mailbox barriers, completions replayed in a partition-
+        invariant order (decomposable configs; workers>1 forks the
+        shards into a process pool routing over light node views).
+                                    │
+                                    v
+        obs/ children attach per shard + one fleet child, fold at
+        finalize through the mergeable-registry reduction; tracer
+        records carry fleet-order stamps so absorbed traces replay
+        in merge order.  →  ClusterReport (seven-bucket partition)
 
 Power-state lifecycle (driven by ClusterNode, timed by sim.py).
 Telemetry hooks fire at the marked (*) edges: `on_power_begin` as a
@@ -261,6 +305,15 @@ power-gating and DVFS columns, the two-gap split) and
 examples/cluster_sim.py (a narrated single run).
 """
 
+from repro.cluster.engine import (  # noqa: F401
+    Event,
+    EventKind,
+    Mailbox,
+    NodeShard,
+    Runner,
+    cross_shard_floor_s,
+    partition_nodes,
+)
 from repro.cluster.faults import (  # noqa: F401
     FaultDomain,
     FaultEvent,

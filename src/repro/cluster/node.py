@@ -132,9 +132,15 @@ from repro.cluster.power import (
 )
 from repro.cluster.trace import TracedRequest
 
-# event hints returned to the sim loop: (kind, absolute time)
-_PHASE, _WAKE, _GATE, _PREEMPT, _CRASH = ("phase", "wake", "gate",
-                                          "preempt", "crash")
+# event hints returned to the engine: (EventKind, absolute time) — the
+# owning NodeShard stamps the phase epoch and schedules the typed Event
+from repro.cluster.engine.events import EventKind
+
+_PHASE = EventKind.PHASE_END
+_WAKE = EventKind.WAKE_END
+_GATE = EventKind.GATE_END
+_PREEMPT = EventKind.PREEMPT_END
+_CRASH = EventKind.CRASH_END
 
 
 @dataclasses.dataclass
@@ -482,8 +488,9 @@ class ClusterNode:
     def enqueue(self, req: TracedRequest, now: float
                 ) -> tuple[str, float] | None:
         """Accept a routed request.  Returns the next timed event this
-        creates — ("phase", end_s) if an idle node starts serving,
-        ("wake", end_s) if a gated node begins its on-demand wake — or
+        creates — (EventKind.PHASE_END, end_s) if an idle node starts
+        serving, (EventKind.WAKE_END, end_s) if a gated node begins its
+        on-demand wake — or
         None when the request just queues (node busy or mid-transition)."""
         if self._pstate == FAILED:
             raise RuntimeError(
@@ -904,7 +911,8 @@ class ClusterNode:
         """Ask to evict `request_id` from the running decode segment at the
         next step boundary ≥ `now` (the in-flight token always finishes —
         nothing is re-run, so the energy split is exact).  Returns the
-        ("preempt", settle_s) event, or None when there is nothing to
+        (EventKind.PREEMPT_END, settle_s) event, or None when there is
+        nothing to
         preempt: not mid-decode, a preemption already pending, the victim
         is not an active member, or the segment ends before another step
         boundary anyway.  The already-scheduled segment-end event is
@@ -986,7 +994,8 @@ class ClusterNode:
           * off-phase — immediate (nothing in flight; state goes FAILED
             right here and the caller rescues `suspended`/`waiting`);
           * mid-decode — the in-flight token finishes: returns a
-            ("crash", settle_s) event for the truncated-segment boundary
+            (EventKind.CRASH_END, settle_s) event for the truncated-segment
+            boundary
             (the same binary search preemption uses), invalidating the
             scheduled segment end via the phase epoch;
           * mid-prefill, with a preemption already pending, or with the

@@ -87,6 +87,19 @@ def unique_profiles(nodes: Sequence) -> list[LLMProfile]:
 class RoutingPolicy:
     name = "base"
     telemetry = None   # repro.obs.Telemetry, set per-run by simulate_cluster
+    #: What the policy reads off each candidate node at `select` time —
+    #: the engine's process-pool runner keeps node state in worker
+    #: processes and routes over light node views, so it only admits
+    #: policies that declare a view-compatible information model:
+    #:   "none"   — static attributes only (ids, hosted model, profile)
+    #:   "counts" — also load()/power_rank/accepting (the shipped view)
+    #:   "full"   — arbitrary node internals; merge/windowed modes only
+    fleet_reads = "full"
+    #: Soonest a displaced request can re-enter routing (the first rung
+    #: of retry_delay's backoff ladder).  The sharded engine's
+    #: conservative lookahead (engine.runner.cross_shard_floor_s) reads
+    #: this: no cross-shard retry can land sooner than the floor.
+    retry_floor_s = 1.0
 
     def attach(self, nodes: Sequence, trace: ArrivalTrace, zeta: float) -> None:
         pass
@@ -145,6 +158,7 @@ class RoutingPolicy:
 
 class RoundRobinPolicy(RoutingPolicy):
     name = "round_robin"
+    fleet_reads = "none"
 
     def __init__(self):
         self._i = 0
@@ -160,6 +174,7 @@ class RoundRobinPolicy(RoutingPolicy):
 
 class RandomPolicy(RoutingPolicy):
     name = "random"
+    fleet_reads = "none"
 
     def __init__(self, seed: int = 0):
         self.seed = seed
@@ -176,6 +191,7 @@ class LeastLoadedPolicy(RoutingPolicy):
     """Join-the-shortest-queue over waiting + in-flight counts."""
 
     name = "least_loaded"
+    fleet_reads = "counts"
 
     def select(self, req, nodes, now):
         return self._least_loaded(nodes)
@@ -219,6 +235,7 @@ class GreedyEnergyPolicy(_TauOutMixin, RoutingPolicy):
     replicas break toward the least-loaded host."""
 
     name = "greedy_energy"
+    fleet_reads = "counts"
 
     def __init__(self, *, tau_out_predictor: TauOutPredictor | None = None):
         self._init_predictor(tau_out_predictor)
@@ -243,6 +260,7 @@ class ZetaOnlinePolicy(_TauOutMixin, RoutingPolicy):
     known, so the maxima grow as traffic streams in."""
 
     name = "zeta_online"
+    fleet_reads = "counts"
 
     def __init__(self, zeta: float | None = None, *,
                  tau_out_predictor: TauOutPredictor | None = None):
@@ -588,6 +606,12 @@ class FailoverPolicy(RoutingPolicy):
             raise ValueError("ewma_alpha must be in (0, 1]")
         self.inner = inner
         self.name = f"failover({inner.name})"
+        # routing is delegated, so the wrapper's information model (and
+        # hence pool-runner eligibility) is exactly the inner policy's;
+        # retry_floor_s mirrors the first backoff rung for the engine's
+        # cross-shard lookahead
+        self.fleet_reads = inner.fleet_reads
+        self.retry_floor_s = base_delay_s
         self.max_retries = max_retries
         self.base_delay_s = base_delay_s
         self.max_delay_s = max_delay_s

@@ -1,118 +1,57 @@
-"""The discrete-event loop: streaming arrivals over a heterogeneous fleet.
+"""The simulation facade: one call serving a trace over a sharded engine.
 
-Ten event kinds drive the simulation — request arrivals (from the trace),
-node phase completions (from the continuous-batching state machines),
-preemption settlements (a decode segment cut at its next step boundary),
-the power-management triple: wake completions, gate completions, and
-idle timers (armed by the autoscaler when a node runs out of work) — and,
-when a `faults=` FaultTrace is supplied, the disruption quartet: fault
-events (crash/recover/slow/normal from the trace), crash settlements (a
-dying node's final decode truncation, quantized to the same step boundary
-preemption uses), KV-shipping completions (a refugee's state landing on a
-healthy replica), and routing retries (capped-backoff re-routes when no
-node is accepting).  Events are processed in (time, sequence) order; the
-sequence counter makes simultaneous events deterministic, so a fixed
-trace + policy (+ autoscaler + preempter + fault trace) always yields a
-bit-identical ClusterReport.
+`simulate_cluster` is the stable public entry point the benchmarks,
+oracle replays and tests drive.  Since the engine refactor the event
+loop itself lives in :mod:`repro.cluster.engine` — a typed event core
+(:class:`~repro.cluster.engine.events.EventKind` + payload dataclasses
+in place of the old ten magic int codes and raw ``(time, seq, kind,
+payload)`` tuples), per-node-group :class:`NodeShard` heaps, a
+cross-shard :class:`Mailbox`, and the :class:`Runner` that merges them
+in fleet-wide ``(time, seq)`` order.  This module is a thin facade over
+that engine in its exact **merge** mode, which is bit-identical to the
+historical monolithic loop *by construction*: sequence numbers come
+from one fleet-wide allocator drawn at the same handler sites in the
+same order, so a fixed trace + policy (+ autoscaler + preempter + fault
+trace) always yields a bit-identical ClusterReport — at any shard
+count.
 
-Phase-shaped events (segment end, preemption/crash settle) and the power
-transitions carry the node's *phase epoch* at scheduling time: preempting
-a segment — or crashing the node — bumps the epoch, so stale events still
-sitting in the heap are recognized and dropped when popped, the only
-event-invalidation path in the loop.
+Shard count defaults to the ``REPRO_SIM_SHARDS`` environment variable
+(1 when unset), letting CI run the whole suite against a sharded
+partition without touching a single call site; pass ``shards=`` to pin
+it per call.  The semantics of every event kind — arrivals, phase and
+preemption settlements, the power triple (wake/gate/idle-timer), and
+the fault quartet (fault, crash settle, KV-ship completion, retry) —
+are documented on the engine modules; the rescue orchestration,
+epoch-based invalidation and completion-echo contracts are unchanged
+from the monolith (the engine's handlers are a line-faithful port,
+differentially pinned by tests/test_engine.py).
 
-Rescue orchestration (fault runs only): when a node fails, its waiting
-requests re-route through the policy over the *accepting* sub-fleet (with
-capped exponential backoff via `policy.retry_delay` when nobody accepts,
-abandoning when the policy gives up), and its suspended/active decodes
-become refugees — each ships its KV to the least-loaded accepting replica
-of the same model (bytes = context × KV-bytes/token, at the recipient's
-interconnect bandwidth and J/byte, metered by `book_shipping`), resuming
-for free at the recipient's next phase start.  With no surviving replica
-the refugee is either re-run from scratch elsewhere (`policy.allow_rerun`)
-or abandoned; either way its accrued joules move to the wasted bucket so
-the cross-node settlement contract (donor's truncated charge + shipping +
-recipient's resumed charge, or waste) closes to 1e-9.  A *prefill*
-refugee (a checkpointed prefill the crash caught mid-prompt,
-`node.CheckpointConfig`) ships only its durably persisted prefix —
-bytes = ckpt_tokens × KV-bytes/token — and re-runs the unfinished
-suffix in a `restore` phase on the recipient; one with nothing
-checkpointed re-runs from scratch or abandons, wasting its accrued
-joules.  Simultaneous crash events (a correlated FaultTrace killing a
-whole rack/PDU domain at one instant) are additionally aggregated into
-domain-outage counts and correlated-kill-size samples for telemetry.
-`faults=None` skips every fault code path exactly — the no-fault loop
-is bit-identical to previous PRs — and an *empty* FaultTrace differs
-only by the eligible-node filter, which is the identity on a healthy
-fleet.
-
-Without an `autoscaler=`, no idle timer is ever armed and no node ever
-leaves the ACTIVE/IDLE pair; without a `preempter=`, no decode segment is
-ever cut — the loop degenerates to the PR 1/PR 4 simulation exactly (the
-differential tests in tests/test_preemption.py pin event-stream and
-energy identity), keeping the offline-oracle replay baseline and its gap
-numbers directly comparable across PRs.
-
-Resume is not a separate event kind: a suspended request rejoins the
-active set for free at the next phase start with a spare slot
-(`ClusterNode._start_phase`), so its RESUMING instant always coincides
-with an existing phase boundary.
-
-The loop also builds the per-model *replica registry* (`replica_registry`,
-shared with the policies module) — model name → node ids hosting a
-replica, in node order — which is what the replica-aware router, oracle,
-preemption policy, and autoscalers size against.
-
-Completions are echoed to `policy.observe_completion` (τout predictor
-feedback — the only causal channel through which a non-oracle router may
-learn output lengths), `autoscaler.on_completion` (service-time feedback
-for predictive fleet sizing), and `preempter.observe_completion` (the
-same τout channel for a predictor-equipped preemption policy).
-
-Observability (`telemetry=`, a repro.obs.Telemetry): the loop reports
-arrivals/routing picks, preemption and autoscaler decisions, completions,
-and — when `sample_every_s` is set — periodic queue-depth / batch /
-bucket-energy samples; the nodes report phase settlements and power
-transitions directly (repro.cluster.node).  Hooks are read-only: the
-returned ClusterReport is byte-identical with telemetry on or off (the
-perf-suite `metrics_overhead` gate pins both that and ≤5% overhead).
+Observability (`telemetry=`, a repro.obs.Telemetry) reports exactly as
+before (fused mode: one registry/tracer/auditor); the engine can also
+attach telemetry *per shard* and fold through the mergeable-registry
+reduction — see :class:`Runner`'s ``obs_mode="sharded"``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
+import os
 from typing import Sequence
 
-from repro.cluster.faults import CRASH, RECOVER, SLOW, FaultTrace
-from repro.cluster.metrics import (
-    AbandonedRecord,
-    ClusterReport,
-    RequestRecord,
-    per_node_stats,
-)
+from repro.cluster.engine.runner import Runner
+from repro.cluster.faults import FaultTrace
+from repro.cluster.metrics import ClusterReport
 from repro.cluster.node import ClusterNode
-from repro.cluster.policies import (
-    PreemptionPolicy,
-    RoutingPolicy,
-    objective_of_assignment,
-    replica_registry,
-    unique_profiles,
-)
-from repro.cluster.power import GATED, IDLE, AutoscalePolicy
+from repro.cluster.policies import PreemptionPolicy, RoutingPolicy
+from repro.cluster.power import AutoscalePolicy
 from repro.cluster.trace import ArrivalTrace
-from repro.energy.costs import kv_bytes_per_token
 
-(_ARRIVAL, _PHASE_END, _WAKE_END, _GATE_END, _IDLE_TIMER,
- _PREEMPT_END, _FAULT, _CRASH_END, _SHIP_END, _RETRY) = range(10)
 
-_EVENT_CODE = {"phase": _PHASE_END, "wake": _WAKE_END, "gate": _GATE_END,
-               "preempt": _PREEMPT_END, "crash": _CRASH_END}
-# payload carries (nid, epoch); a crash bumps the epoch, so stale
-# wake/gate completions on a crashed node die in the heap too (nothing
-# else can bump the epoch mid-transition, so guarding them is free)
-_EPOCH_GUARDED = (_PHASE_END, _PREEMPT_END, _WAKE_END, _GATE_END,
-                  _CRASH_END)
+def default_shards() -> int:
+    """Shard count for facade calls: ``REPRO_SIM_SHARDS`` (default 1)."""
+    try:
+        return max(1, int(os.environ.get("REPRO_SIM_SHARDS", "1")))
+    except ValueError:
+        return 1
 
 
 def simulate_cluster(
@@ -125,468 +64,16 @@ def simulate_cluster(
     preempter: PreemptionPolicy | None = None,
     faults: FaultTrace | None = None,
     telemetry=None,
+    shards: int | None = None,
 ) -> ClusterReport:
-    """Serve the whole trace; returns the aggregate ClusterReport."""
-    if not nodes:
-        raise ValueError("need at least one node")
-    by_id = {n.node_id: n for n in nodes}
-    if len(by_id) != len(nodes):
-        raise ValueError("node_ids must be unique")
-    replicas = replica_registry(nodes)   # model -> node ids, in node order
-    policy.attach(nodes, trace, zeta)
-    if autoscaler is not None:
-        autoscaler.attach(nodes)
-    if preempter is not None:
-        preempter.attach(nodes, trace, zeta)
-    # telemetry is per-run; assign unconditionally so reused nodes/policies
-    # never carry a stale reference from a previous instrumented run
-    for n in nodes:
-        n.telemetry = telemetry
-    policy.telemetry = telemetry
-    if autoscaler is not None:
-        autoscaler.telemetry = telemetry
-    if preempter is not None:
-        preempter.telemetry = telemetry
-    if telemetry is not None:
-        telemetry.attach(nodes, policy, trace, zeta)
-    sample_every = telemetry.sample_every_s if telemetry is not None else None
-    next_sample = 0.0
-
-    fault_mode = faults is not None
-    events: list[tuple[float, int, int, object]] = []
-    seq = 0
-    for req in trace:
-        heapq.heappush(events, (req.arrival_s, seq, _ARRIVAL, req))
-        seq += 1
-    if fault_mode:
-        for fev in faults:
-            if fev.node_id not in by_id:
-                raise ValueError(f"fault trace names unknown node "
-                                 f"{fev.node_id}")
-            heapq.heappush(events, (fev.time_s, seq, _FAULT, fev))
-            seq += 1
-
-    records: list[RequestRecord] = []
-    abandoned: list[AbandonedRecord] = []
-    makespan = trace.duration_s
-    arrivals_left = len(trace)
-
-    def push(node: ClusterNode, ev: tuple[str, float] | None) -> None:
-        nonlocal seq
-        if ev is not None:
-            kind, end_s = ev
-            code = _EVENT_CODE[kind]
-            payload = ((node.node_id, node.phase_epoch)
-                       if code in _EPOCH_GUARDED else node.node_id)
-            heapq.heappush(events, (end_s, seq, code, payload))
-            seq += 1
-
-    def arm_idle_timer(node: ClusterNode, now: float) -> None:
-        """Ask the autoscaler whether (and when) to revisit an idle node.
-        The timer carries the idle-epoch token so a node that served work
-        and went idle again in between invalidates the stale timer."""
-        nonlocal seq
-        if autoscaler is None or node.power_state != IDLE:
-            return
-        t = autoscaler.on_idle(node, now)
-        if t is not None:
-            heapq.heappush(events, (t, seq, _IDLE_TIMER,
-                                    (node.node_id, node.power_state_since)))
-            seq += 1
-
-    # --- rescue orchestration (fault runs only) ------------------------
-    def fallback_node(eligible: list[ClusterNode]) -> ClusterNode:
-        """Deterministic stand-in when the policy's pick is not accepting
-        (e.g. a static oracle routing onto a crashed replica)."""
-        return min(eligible,
-                   key=lambda n: (n.load(), n.power_rank, n.node_id))
-
-    def abandon_request(req, now: float, reason: str, attempts: int, *,
-                        member=None, model: str = "") -> None:
-        """Give up on a request; any joules a stranded refugee already
-        accrued *move* to the wasted bucket on the node(s) that spent
-        them, so conservation closes over completed + abandoned work."""
-        nonlocal makespan
-        wasted = 0.0
-        if member is not None:
-            for w_nid, e in sorted(member.energy_on.items()):
-                by_id[w_nid].book_waste(e)
-                wasted += e
-            member.energy_on.clear()
-        rec = AbandonedRecord(
-            request_id=req.request_id, model=model,
-            tau_in=req.tau_in, tau_out=req.tau_out,
-            arrival_s=req.arrival_s, abandoned_s=now, reason=reason,
-            attempts=attempts, wasted_j=wasted)
-        abandoned.append(rec)
-        makespan = max(makespan, now)
-        if telemetry is not None:
-            telemetry.on_abandon(rec, now)
-
-    def schedule_retry(req, attempts: int, now: float) -> None:
-        """No accepting node right now: ask the policy when (whether) to
-        try again."""
-        nonlocal seq
-        delay = policy.retry_delay(req, attempts, now)
-        if delay is None:
-            abandon_request(req, now, "no_capacity", attempts)
-            return
-        heapq.heappush(events, (now + delay, seq, _RETRY,
-                                (req, attempts + 1)))
-        seq += 1
-
-    def route_or_retry(req, attempts: int, now: float) -> None:
-        """Re-route a displaced (or backed-off) request over the
-        accepting sub-fleet; park it in the retry loop when empty."""
-        eligible = [n for n in nodes if n.accepting]
-        if not eligible:
-            schedule_retry(req, attempts, now)
-            return
-        nid = policy.select(req, eligible, now)
-        node = by_id.get(nid)
-        if node is None or not node.accepting:
-            node = fallback_node(eligible)
-        if telemetry is not None:
-            telemetry.on_retry(req, node.node_id, attempts, now)
-        push(node, node.enqueue(req, now))
-
-    def rerun_or_abandon(member, home: ClusterNode, now: float,
-                         reason: str) -> None:
-        """Last resort for an unshippable refugee: re-run its request
-        from scratch on whoever accepts (`policy.allow_rerun`) or give
-        up — the accrued joules move to the wasted bucket either way."""
-        if (policy.allow_rerun(member.req, now)
-                and any(n.accepting for n in nodes)):
-            for w_nid, e in sorted(member.energy_on.items()):
-                by_id[w_nid].book_waste(e)
-            member.energy_on.clear()
-            route_or_retry(member.req, 0, now)
-        else:
-            abandon_request(member.req, now, reason, 0,
-                            member=member, model=home.model_name)
-
-    def dispatch_refugee(member, home: ClusterNode, now: float) -> None:
-        """Rescue one suspended refugee stranded on `home` (crashed or
-        draining): ship its KV to the least-loaded accepting replica of
-        the same model — bytes = context × KV-bytes/token (a *prefill*
-        refugee ships only its checkpointed prefix: ckpt_tokens ×
-        KV-bytes/token), pulled at the recipient's interconnect bandwidth
-        and J/byte (a pull still works when the donor is dead) — or, with
-        no surviving replica (or nothing durable to ship), re-run it from
-        scratch elsewhere / abandon it, wasting the accrued joules."""
-        nonlocal seq
-        if member.prefill_done is not None:
-            # mid-prompt refugee: only the durably persisted prefix moves
-            if member.ckpt_tokens >= member.req.tau_in:
-                # the full prompt is checkpointed — decode-ready after
-                # the shipment, no suffix left to restore
-                member.prefill_done = None
-            elif member.ckpt_tokens <= 0:
-                # crashed inside its first chunk: nothing durable exists
-                rerun_or_abandon(member, home, now, "prefill_lost")
-                return
-        candidates = [n for n in nodes
-                      if n.accepting and n.model_name == home.model_name
-                      and n.node_id != home.node_id]
-        if candidates:
-            recipient = fallback_node(candidates)
-            tokens = (member.ckpt_tokens if member.prefill_done is not None
-                      else member.context)
-            n_bytes = tokens * kv_bytes_per_token(home.sim.cfg)
-            ship_s = n_bytes / recipient.hardware.accel.ici_bw
-            ship_j = n_bytes * recipient.hardware.accel.j_per_byte_ici
-            recipient.book_shipping(ship_s, ship_j)
-            member.shipped_bytes += n_bytes
-            home.n_migrations_out += 1
-            if telemetry is not None:
-                telemetry.on_migration(home, recipient, tokens,
-                                       n_bytes, ship_s, ship_j, now)
-            heapq.heappush(events, (now + ship_s, seq, _SHIP_END,
-                                    (recipient.node_id, member)))
-            seq += 1
-        else:
-            # no same-model survivor: the KV (checkpointed or live) has
-            # nowhere to land
-            rerun_or_abandon(member, home, now, "no_survivor")
-
-    def handle_failed(node: ClusterNode, now: float) -> None:
-        """A node just went FAILED: every suspended decode becomes a
-        refugee to rescue, every queued request re-routes."""
-        while node.suspended:
-            dispatch_refugee(node.suspended.popleft(), node, now)
-        while node.waiting:
-            route_or_retry(node.waiting.popleft(), 0, now)
-
-    def apply_drains(now: float) -> None:
-        """Straggler governance: let the policy drain (or un-drain)
-        nodes.  Draining stops new routes, ships parked refugees off,
-        and re-routes the queue; running decodes finish naturally —
-        drain-before-gate, never mid-flight abandonment."""
-        updates = policy.drain_updates(nodes, now)
-        if not updates:
-            return
-        for d_nid, drain in updates:
-            dnode = by_id[d_nid]
-            if drain and not dnode.draining and not dnode.failed:
-                dnode.draining = True
-                if telemetry is not None:
-                    telemetry.on_drain(dnode, True, now)
-                while dnode.suspended:
-                    dispatch_refugee(dnode.suspended.popleft(), dnode, now)
-                while dnode.waiting:
-                    route_or_retry(dnode.waiting.popleft(), 0, now)
-            elif not drain and dnode.draining:
-                dnode.draining = False
-                if telemetry is not None:
-                    telemetry.on_drain(dnode, False, now)
-
-    # correlated-kill aggregation: crash events sharing one timestamp are
-    # one domain outage (pre-loaded fault events pop contiguously at equal
-    # time — lower sequence numbers than any runtime-pushed event)
-    kill_batch = [None, 0]   # [timestamp, crash count]
-
-    def flush_kill_batch() -> None:
-        if kill_batch[0] is not None and telemetry is not None:
-            telemetry.on_domain_outage(kill_batch[0], kill_batch[1])
-        kill_batch[0], kill_batch[1] = None, 0
-
-    for n in nodes:   # the fleet starts idle: give the autoscaler a shot
-        arm_idle_timer(n, 0.0)
-
-    while events:
-        now, _, kind, payload = heapq.heappop(events)
-        if sample_every is not None:
-            # sample fleet state as of the previous event, stamped on the
-            # period grid, before this event mutates it
-            while next_sample <= now:
-                telemetry.sample(nodes, next_sample)
-                next_sample += sample_every
-        if kind == _ARRIVAL:
-            req = payload
-            arrivals_left -= 1
-            if autoscaler is not None:
-                prewoken = 0
-                for nid in autoscaler.on_arrival(req, nodes, now):
-                    node = by_id[nid]
-                    if node.power_state == GATED:   # proactive pre-wake
-                        push(node, ("wake", node.begin_wake(now)))
-                        prewoken += 1
-                if telemetry is not None:
-                    telemetry.on_prewake(autoscaler.name, prewoken)
-            if fault_mode:
-                eligible = [n for n in nodes if n.accepting]
-                if not eligible:   # whole fleet down/draining: back off
-                    schedule_retry(req, 0, now)
-                    continue
-                nid = policy.select(req, eligible, now)
-                node = by_id.get(nid)
-                if node is None or not node.accepting:
-                    node = fallback_node(eligible)
-                    nid = node.node_id
-            else:
-                nid = policy.select(req, nodes, now)
-                if nid not in by_id:
-                    raise ValueError(
-                        f"{policy.name} routed to unknown node {nid}")
-                node = by_id[nid]
-            if telemetry is not None:
-                telemetry.on_arrival(req, policy.name, nid, node.model_name,
-                                     now)
-            push(node, node.enqueue(req, now))
-            if preempter is not None:
-                # the arrival is queued; the preempter may cut the routed
-                # node's decode segment to make room for it at the boundary
-                victim = preempter.consider(req, node, nodes, now)
-                if telemetry is not None:
-                    telemetry.on_preempt_decision(preempter.name,
-                                                  victim is not None)
-                if victim is not None:
-                    push(node, node.preempt_decode(victim, now))
-        elif kind == _PHASE_END:
-            nid, epoch = payload
-            node = by_id[nid]
-            if epoch != node.phase_epoch:
-                continue   # segment was preempted; this end never happened
-            completions, next_ev = node.on_phase_end(now)
-            for c in completions:
-                makespan = max(makespan, c.finish_s)
-                rec = RequestRecord(
-                    request_id=c.req.request_id,
-                    node_id=node.node_id,
-                    model=node.model_name,
-                    tau_in=c.req.tau_in,
-                    tau_out=c.req.tau_out,
-                    arrival_s=c.req.arrival_s,
-                    start_s=c.start_s,
-                    finish_s=c.finish_s,
-                    energy_j=c.energy_j,
-                    isolated_runtime_s=c.isolated_runtime_s,
-                    preemptions=c.preemptions,
-                    migrations=c.migrations,
-                    shipped_bytes=c.shipped_bytes,
-                )
-                policy.observe_completion(rec, now)
-                if autoscaler is not None:
-                    autoscaler.on_completion(rec, now)
-                if preempter is not None:
-                    preempter.observe_completion(rec, now)
-                if telemetry is not None:
-                    telemetry.on_completion(rec, now)
-                records.append(rec)
-            push(node, next_ev)
-            if next_ev is None:
-                if fault_mode and node.failed:
-                    # crash quantized to this settle: rescue the refugees
-                    handle_failed(node, now)
-                else:
-                    arm_idle_timer(node, now)
-            if fault_mode and completions:
-                apply_drains(now)   # fed by the observe_completion EWMA
-        elif kind == _PREEMPT_END:
-            nid, epoch = payload
-            node = by_id[nid]
-            if epoch != node.phase_epoch:
-                continue   # a crash got there first: this settle is void
-            next_ev = node.on_preempt_end(now)
-            push(node, next_ev)
-            if next_ev is None:
-                if fault_mode and node.failed:
-                    handle_failed(node, now)
-                else:
-                    arm_idle_timer(node, now)
-        elif kind == _WAKE_END:
-            nid, epoch = payload
-            node = by_id[nid]
-            if epoch != node.phase_epoch:
-                continue   # node crashed mid-wake
-            next_ev = node.on_wake_end(now)
-            push(node, next_ev)
-            if next_ev is None:   # pre-woken with nothing to do (yet)
-                arm_idle_timer(node, now)
-        elif kind == _GATE_END:
-            nid, epoch = payload
-            node = by_id[nid]
-            if epoch != node.phase_epoch:
-                continue   # node crashed mid-gate
-            push(node, node.on_gate_end(now))
-        elif kind == _FAULT:
-            fev = payload
-            node = by_id[fev.node_id]
-            if telemetry is not None:
-                telemetry.on_fault(fev, node, now)
-            if fev.kind == CRASH:
-                if kill_batch[0] is not None and kill_batch[0] != now:
-                    flush_kill_batch()
-                kill_batch[0] = now
-                kill_batch[1] += 1
-                crash_ev = node.begin_crash(now)
-                if crash_ev is not None:
-                    push(node, crash_ev)   # truncation settle scheduled
-                elif node.failed:          # off-phase: crashed right here
-                    handle_failed(node, now)
-                # else: pending at an already-scheduled settle — the
-                # _PHASE_END/_PREEMPT_END handler completes it
-            elif fev.kind == RECOVER:
-                if node.failed:
-                    next_ev = node.recover(now)
-                    push(node, next_ev)
-                    if next_ev is None:
-                        arm_idle_timer(node, now)
-                elif node.crash_pending:
-                    # the crash is still quantizing to its boundary: a
-                    # node cannot recover before its failure lands —
-                    # re-deliver the recovery at the settle instant (the
-                    # settle event pops first there: earlier sequence)
-                    heapq.heappush(
-                        events,
-                        (node.phase_end_s, seq, _FAULT,
-                         dataclasses.replace(fev,
-                                             time_s=node.phase_end_s)))
-                    seq += 1
-            elif fev.kind == SLOW:
-                node.slowdown = fev.value
-            else:   # NORMAL: straggler episode over
-                node.slowdown = 1.0
-            policy.on_fault(fev, nodes, now)
-        elif kind == _CRASH_END:
-            nid, epoch = payload
-            node = by_id[nid]
-            if epoch != node.phase_epoch:
-                continue
-            node.on_crash_settle(now)
-            handle_failed(node, now)
-        elif kind == _SHIP_END:
-            nid, member = payload
-            node = by_id[nid]
-            if not node.accepting:
-                # the recipient died (or started draining) while the KV
-                # was in flight: ship onward from its books
-                dispatch_refugee(member, node, now)
-            else:
-                push(node, node.receive_migrant(member, now))
-        elif kind == _RETRY:
-            req, attempts = payload
-            route_or_retry(req, attempts, now)
-        else:  # _IDLE_TIMER
-            nid, token = payload
-            node = by_id[nid]
-            if (node.power_state == IDLE
-                    and node.power_state_since == token
-                    and node.can_gate
-                    and autoscaler is not None):
-                gate = autoscaler.should_gate(node, now)
-                if telemetry is not None:
-                    telemetry.on_gate_decision(autoscaler.name, gate)
-                if gate:
-                    push(node, node.begin_gate(now))
-                elif arrivals_left > 0:
-                    # declined (e.g. min_awake bound): re-check later — a
-                    # node that never leaves IDLE must not be stranded
-                    # powered after fleet conditions change.  Re-arming
-                    # stops with the last arrival so the loop terminates.
-                    arm_idle_timer(node, now)
-
-    flush_kill_batch()
-    if len(records) + len(abandoned) != len(trace):
-        raise RuntimeError(
-            f"served {len(records)} + abandoned {len(abandoned)} != "
-            f"{len(trace)} requests — event loop bug")
-    if any(n.suspended for n in nodes):
-        raise RuntimeError("preempted requests left suspended at the end of "
-                           "the trace — resume/rescue logic bug")
-    records.sort(key=lambda r: r.request_id)
-    abandoned.sort(key=lambda r: r.request_id)
-    for n in nodes:   # close every node's books at the common horizon
-        n.finalize(makespan)
-
-    profiles = unique_profiles(nodes)
-    # abandoned requests have no realized assignment: the objective is
-    # evaluated over the completed records' own queries (identical to the
-    # full trace when nothing was abandoned — record order is request_id
-    # order, which is trace order)
-    queries = (trace.queries() if not abandoned
-               else [(r.tau_in, r.tau_out) for r in records])
-    assigned = [r.model for r in records]
-    objective = (objective_of_assignment(profiles, queries, assigned, zeta)
-                 if records else 0.0)
-    prof_of = {p.name: p for p in profiles}
-    predicted = sum(float(prof_of[r.model].energy(r.tau_in, r.tau_out))
-                    for r in records)
-
-    report = ClusterReport(
-        policy=policy.name,
-        zeta=zeta,
-        records=tuple(records),
-        node_stats=per_node_stats(nodes, makespan),
-        makespan_s=makespan,
-        objective=objective,
-        predicted_energy_j=predicted,
-        replicas=tuple((name, tuple(nids)) for name, nids in replicas.items()),
-        abandoned=tuple(abandoned),
-    )
-    if telemetry is not None:
-        telemetry.finalize(nodes, report)
-    return report
+    """Serve the whole trace; returns the aggregate ClusterReport.
+    `shards=None` reads REPRO_SIM_SHARDS (default 1); any value yields
+    the identical report (merge mode is exact at every partition)."""
+    return Runner(
+        trace, nodes, policy, zeta=zeta, autoscaler=autoscaler,
+        preempter=preempter, faults=faults, telemetry=telemetry,
+        shard_count=default_shards() if shards is None else shards,
+    ).run()
 
 
 def fresh_nodes(builders: Sequence) -> list[ClusterNode]:

@@ -239,6 +239,13 @@ class MetricFamily:
             mine = self.children.get(key)
             if mine is None:
                 mine = self.children[key] = self._make_child()
+                if self.kind == "gauge" and self.merge == "max":
+                    # A fresh Gauge starts at 0.0; max-merging against
+                    # that floor would clobber negative values (the
+                    # realized objective can be < 0), so a child absent
+                    # on this side adopts the incoming value verbatim.
+                    mine.value = child.value
+                    continue
             if self.kind == "gauge" and self.merge == "max":
                 mine.merge_max_from(child)
             else:

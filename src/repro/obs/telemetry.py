@@ -19,8 +19,8 @@ Lifecycle: one Telemetry per `simulate_cluster` call (like autoscalers
 and preempters, it holds per-run state); `attach` raises on reuse.
 `sample_every_s` enables periodic time-series sampling of queue depth,
 batch occupancy and per-bucket energy inside the event loop (None — the
-default — disables sampling; hooks alone are cheap enough for the ≤5%
-overhead gate, sampling cost scales with the chosen period)."""
+default — disables sampling; hooks alone are cheap enough for the
+metrics_overhead gate's budget, sampling cost scales with the chosen period)."""
 
 from __future__ import annotations
 
@@ -148,7 +148,7 @@ class Telemetry:
         # Pre-resolve the hot-path children once per node: hooks fire per
         # event, and `labels()` stringifies its key on every call — caching
         # the child objects here keeps the instrumented run inside the
-        # perf-suite 5% overhead budget.  (Side effect: per-node series
+        # perf-suite metrics_overhead budget.  (Side effect: per-node series
         # exist from t=0 with value 0, which is standard Prometheus
         # practice anyway.)
         self._node_ch: dict[int, dict] = {}

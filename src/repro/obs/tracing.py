@@ -12,7 +12,7 @@ counter ("C") tracks.
 Event arguments are passed as *flat* ``(k1, v1, k2, v2, ...)`` tuples —
 one tuple allocation per event, no dict on the hot path (the recording
 hooks sit inside the simulator event loop and are budgeted by the
-perf-suite ≤5% overhead gate).  Key order is call-site order, which is
+perf-suite metrics_overhead gate).  Key order is call-site order, which is
 deterministic for a given code path; ``to_json`` sorts keys at export.
 
 Timestamps are *simulation* seconds converted to trace microseconds —
@@ -40,6 +40,12 @@ class EventTracer:
         self.events: list[tuple] = []
         self.dropped = 0
         self._thread_names: dict[int, str] = {}
+        # sharded runs: a fleet-wide monotone counter (shared by every
+        # shard's tracer) stamping each record with its global append
+        # order, so `absorb` can interleave per-shard traces back into
+        # the exact order a fused tracer would have recorded
+        self.stamp_source = None
+        self._stamps: list[int] = []
 
     def __len__(self) -> int:
         return len(self.events)
@@ -56,6 +62,8 @@ class EventTracer:
             self.dropped += 1
             return
         events.append(("i", name, cat, ts_s * 1e6, None, tid, args))
+        if self.stamp_source is not None:
+            self._stamps.append(self.stamp_source())
 
     def complete(self, name: str, start_s: float, dur_s: float,
                  tid: int = 0, cat: str = "sim", args: tuple = ()) -> None:
@@ -66,6 +74,8 @@ class EventTracer:
             return
         events.append(("X", name, cat, start_s * 1e6, dur_s * 1e6, tid,
                        args))
+        if self.stamp_source is not None:
+            self._stamps.append(self.stamp_source())
 
     def counter(self, name: str, ts_s: float, values: tuple,
                 tid: int = 0) -> None:
@@ -76,6 +86,27 @@ class EventTracer:
             self.dropped += 1
             return
         events.append(("C", name, "sample", ts_s * 1e6, None, tid, values))
+        if self.stamp_source is not None:
+            self._stamps.append(self.stamp_source())
+
+    # --- sharded fold -------------------------------------------------
+    def absorb(self, tracers) -> "EventTracer":
+        """Fold stamp-ordered per-shard tracers into this one: records
+        interleave by their global append-order stamps (so the merged
+        trace is byte-identical to a fused single-tracer run), thread
+        names union (duplicates agree by construction), drop counts add.
+        The shard tracers must all share one ``stamp_source``."""
+        stamped: list[tuple[int, tuple]] = []
+        for t in tracers:
+            if len(t._stamps) != len(t.events):
+                raise ValueError("absorb needs stamp-ordered tracers "
+                                 "(set stamp_source before recording)")
+            self._thread_names.update(t._thread_names)
+            self.dropped += t.dropped
+            stamped.extend(zip(t._stamps, t.events))
+        stamped.sort(key=lambda p: p[0])
+        self.events.extend(rec for _, rec in stamped)
+        return self
 
     # --- export -------------------------------------------------------
     def to_chrome(self) -> dict:

@@ -1,0 +1,367 @@
+"""The sharded event engine's determinism contract.
+
+The tentpole gate: replaying the same trace over any partition of the
+fleet is *byte-identical* to the sequential loop — the consumed event
+stream, the seven-bucket energy partition, the ClusterReport JSON, the
+Prometheus exposition and the Chrome trace all match exactly, at shard
+counts {1, 2, 4, 8}, under random partitions, and in every execution
+mode (merge, windowed, process-pooled).  Plus the typed-event surface:
+EventKind pins the historical int codes, payloads carry epochs/tokens,
+and the facade honours REPRO_SIM_SHARDS.
+
+Property tests (random node partitions → byte-identical replay) run
+when `hypothesis` is installed (CI has it; the bare container may not);
+a seeded fallback always runs.
+"""
+
+import importlib.util
+import json
+import random
+
+import pytest
+
+from repro.cluster import (
+    ClusterNode,
+    EventKind,
+    FailoverPolicy,
+    FaultInjector,
+    Mailbox,
+    NodeShard,
+    PowerConfig,
+    ReactiveIdlePolicy,
+    RoundRobinPolicy,
+    Runner,
+    SLOPreemptionPolicy,
+    ZetaOnlinePolicy,
+    cross_shard_floor_s,
+    partition_nodes,
+    simulate_cluster,
+)
+from repro.cluster.engine.events import Event, IdleToken, NodeRef, SeqAllocator
+from repro.cluster.sim import default_shards
+from repro.cluster.trace import replay_trace
+from repro.configs import PAPER_ZOO, TABLE1
+from repro.core.energy_model import fit_profile
+from repro.data.workloads import WorkloadSpec, alpaca_like_workload
+from repro.energy import AnalyticLLMSimulator, SWING_NODE
+from repro.obs import EventTracer, InvariantAuditor, Telemetry
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def make_profile(name):
+    sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                               kv_cache=True, noise_sigma=0.0)
+    pts = [(8, 8), (64, 64), (256, 128), (512, 512), (128, 32)]
+    pbs = [sim.simulate(a, b) for a, b in pts]
+    return fit_profile(name, TABLE1[name]["a_k"],
+                       [p[0] for p in pts], [p[1] for p in pts],
+                       [pb.energy_j for pb in pbs],
+                       [pb.runtime_s for pb in pbs])
+
+
+PROFILES = {name: make_profile(name) for name in ("llama2-7b", "llama2-13b")}
+FLEET_MODELS = ("llama2-7b", "llama2-13b") * 3
+
+
+def make_nodes(*, power=False):
+    pw = PowerConfig(wake_s=3.0, gate_s=1.0) if power else None
+    return [ClusterNode(i, PAPER_ZOO[m], PROFILES[m], SWING_NODE,
+                        max_batch=2, power=pw)
+            for i, m in enumerate(FLEET_MODELS)]
+
+
+def make_trace(n=80, rate=6.0, seed=11):
+    return replay_trace(alpaca_like_workload(WorkloadSpec(n_queries=n, seed=7)),
+                        rate, seed=seed)
+
+
+def make_faults(trace, seed=5):
+    return FaultInjector(mttf_s=15.0, mttr_s=4.0, seed=seed).generate(
+        list(range(len(FLEET_MODELS))), trace.duration_s + 20)
+
+
+def rich_run(trace, faults, *, shard_count=1, partition=None,
+             obs_mode="fused", with_stream=False):
+    """The kitchen-sink configuration: faults + autoscaler + preempter +
+    full telemetry — every cross-shard channel live at once.  Returns the
+    byte-comparable artifact tuple."""
+    stream = [] if with_stream else None
+    tel = Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                    sample_every_s=2.0)
+    report = Runner(
+        trace, make_nodes(power=True), FailoverPolicy(ZetaOnlinePolicy()),
+        zeta=0.5,
+        autoscaler=ReactiveIdlePolicy(idle_timeout_s=2.0),
+        preempter=SLOPreemptionPolicy(slowdown_slo=1.2, min_remaining=2),
+        faults=faults, telemetry=tel,
+        shard_count=shard_count, partition=partition, obs_mode=obs_mode,
+        stream=stream.append if with_stream else None,
+    ).run()
+    out = (json.dumps(report.to_dict(), sort_keys=True),
+           tel.prometheus_text(), tel.tracer.to_json())
+    if with_stream:
+        return out + ("\n".join(ev.describe() for ev in stream),)
+    return out
+
+
+class TestEventKind:
+    """Satellite: the IntEnum pins the ten historical magic codes."""
+
+    def test_codes_are_the_historical_ints(self):
+        expected = {"ARRIVAL": 0, "PHASE_END": 1, "WAKE_END": 2,
+                    "GATE_END": 3, "IDLE_TIMER": 4, "PREEMPT_END": 5,
+                    "FAULT": 6, "CRASH_END": 7, "SHIP_END": 8, "RETRY": 9}
+        assert {k.name: int(k) for k in EventKind} == expected
+
+    def test_epoch_guard_and_locality_partitions(self):
+        guarded = {k for k in EventKind if k.epoch_guarded}
+        assert guarded == {EventKind.PHASE_END, EventKind.PREEMPT_END,
+                           EventKind.WAKE_END, EventKind.GATE_END,
+                           EventKind.CRASH_END}
+        local = {k for k in EventKind if k.node_local}
+        assert EventKind.ARRIVAL not in local
+        assert EventKind.FAULT not in local
+        assert EventKind.PHASE_END in local
+
+    def test_event_ordering_and_describe(self):
+        a = Event(1.0, 0, EventKind.PHASE_END, NodeRef(3, 7))
+        b = Event(1.0, 1, EventKind.ARRIVAL, None)
+        assert a < b and sorted([b, a]) == [a, b]
+        assert "PHASE_END" in a.describe() and "#0" in a.describe()
+
+    def test_seq_allocator_is_a_counter(self):
+        alloc = SeqAllocator()
+        assert [alloc(), alloc(), alloc()] == [0, 1, 2]
+
+    def test_mailbox_rejects_time_travel(self):
+        mb = Mailbox()
+        mb.post(Event(5.0, 0, EventKind.RETRY, None), now=4.0)
+        with pytest.raises(AssertionError):
+            mb.post(Event(3.0, 1, EventKind.RETRY, None), now=4.0)
+
+    def test_shard_idle_token_carries_power_epoch(self):
+        tok = IdleToken(2, 7.5)
+        assert (tok.node_id, tok.since) == (2, 7.5)
+
+
+class TestMergeByteIdentity:
+    """The tentpole gate: sharded replay == sequential replay, byte for
+    byte — report JSON, prometheus text, Chrome trace, event stream."""
+
+    def test_shard_counts_1_2_4_8(self):
+        trace = make_trace()
+        faults = make_faults(trace)
+        base = rich_run(trace, faults, with_stream=True)
+        assert base[3].count("\n") > 100   # the stream really ran
+        for k in (2, 4, 8):
+            assert rich_run(trace, faults, shard_count=k,
+                            with_stream=True) == base, f"shards={k}"
+
+    def test_sharded_obs_fold_matches_fused(self):
+        trace = make_trace()
+        faults = make_faults(trace)
+        base = rich_run(trace, faults)
+        for k in (2, 4):
+            assert rich_run(trace, faults, shard_count=k,
+                            obs_mode="sharded") == base, f"shards={k}"
+
+    def test_telemetry_is_a_pure_observer_at_any_shard_count(self):
+        trace = make_trace()
+        faults = make_faults(trace)
+        with_tel = json.loads(rich_run(trace, faults, shard_count=4)[0])
+
+        def bare(k):
+            rep = Runner(
+                trace, make_nodes(power=True),
+                FailoverPolicy(ZetaOnlinePolicy()), zeta=0.5,
+                autoscaler=ReactiveIdlePolicy(idle_timeout_s=2.0),
+                preempter=SLOPreemptionPolicy(slowdown_slo=1.2,
+                                              min_remaining=2),
+                faults=faults, shard_count=k).run()
+            return rep.to_dict()
+
+        assert bare(1) == bare(4) == with_tel
+
+    def test_seeded_random_partitions(self):
+        """Unconditional fallback for the hypothesis property: a few
+        seeded random partitions must replay byte-identically."""
+        trace = make_trace()
+        faults = make_faults(trace)
+        base = rich_run(trace, faults)
+        nodes = make_nodes()
+        for seed in (0, 1, 2):
+            rng = random.Random(seed)
+            ids = [n.node_id for n in nodes]
+            rng.shuffle(ids)
+            k = rng.randint(1, len(ids))
+            cuts = sorted(rng.sample(range(1, len(ids)), k - 1)) if k > 1 else []
+            groups_ids = [ids[a:b] for a, b in
+                          zip([0] + cuts, cuts + [len(ids)])]
+            # partition= consumes the same node objects the Runner serves:
+            # build one fleet and split it by the sampled id groups
+            fresh = make_nodes(power=True)
+            by_id = {n.node_id: n for n in fresh}
+            partition = [[by_id[i] for i in g] for g in groups_ids]
+            tel = Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                            sample_every_s=2.0)
+            rep = Runner(trace, fresh, FailoverPolicy(ZetaOnlinePolicy()),
+                         zeta=0.5,
+                         autoscaler=ReactiveIdlePolicy(idle_timeout_s=2.0),
+                         preempter=SLOPreemptionPolicy(slowdown_slo=1.2,
+                                                       min_remaining=2),
+                         faults=faults, telemetry=tel,
+                         partition=partition).run()
+            got = (json.dumps(rep.to_dict(), sort_keys=True),
+                   tel.prometheus_text(), tel.tracer.to_json())
+            assert got == base, f"seed={seed} partition={groups_ids}"
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestPartitionProperty:
+    """Satellite: ANY random partition of the fleet replays the seeded
+    fault+preemption trace byte-identically (report + Chrome trace)."""
+
+    def test_random_partition_byte_identical(self):
+        from hypothesis import given, settings, strategies as st
+
+        trace = make_trace(n=50)
+        faults = make_faults(trace)
+        base = rich_run(trace, faults)
+        n = len(FLEET_MODELS)
+
+        @settings(max_examples=10, deadline=None)
+        @given(perm=st.permutations(list(range(n))),
+               cuts=st.sets(st.integers(1, n - 1), max_size=n - 1))
+        def check(perm, cuts):
+            edges = [0] + sorted(cuts) + [n]
+            groups_ids = [perm[a:b] for a, b in zip(edges, edges[1:])]
+            fresh = make_nodes(power=True)
+            by_id = {nd.node_id: nd for nd in fresh}
+            partition = [[by_id[i] for i in g] for g in groups_ids if g]
+            tel = Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                            sample_every_s=2.0)
+            rep = Runner(trace, fresh, FailoverPolicy(ZetaOnlinePolicy()),
+                         zeta=0.5,
+                         autoscaler=ReactiveIdlePolicy(idle_timeout_s=2.0),
+                         preempter=SLOPreemptionPolicy(slowdown_slo=1.2,
+                                                       min_remaining=2),
+                         faults=faults, telemetry=tel,
+                         partition=partition).run()
+            got = (json.dumps(rep.to_dict(), sort_keys=True),
+                   tel.prometheus_text(), tel.tracer.to_json())
+            assert got == base
+
+        check()
+
+
+class TestWindowedAndPooled:
+    """Barrier-parallel execution over decomposable configurations."""
+
+    def simple_report(self, *, shard_count=1, mode="merge", workers=None,
+                      preempter=False, policy=None):
+        trace = make_trace(n=60, rate=8.0, seed=13)
+        pre = (SLOPreemptionPolicy(slowdown_slo=1.2, min_remaining=2)
+               if preempter else None)
+        rep = Runner(trace, make_nodes(),
+                     policy if policy is not None else ZetaOnlinePolicy(),
+                     zeta=0.5, preempter=pre,
+                     shard_count=shard_count, mode=mode,
+                     workers=workers).run()
+        return rep.to_dict()
+
+    def test_windowed_matches_merge(self):
+        base = self.simple_report()
+        for k in (2, 4):
+            assert self.simple_report(shard_count=k,
+                                      mode="windowed") == base
+
+    def test_windowed_with_preempter(self):
+        base = self.simple_report(preempter=True)
+        for k in (2, 4):
+            assert self.simple_report(shard_count=k, mode="windowed",
+                                      preempter=True) == base
+
+    def test_pooled_workers_match(self):
+        for policy_cls in (ZetaOnlinePolicy, RoundRobinPolicy):
+            base = self.simple_report(policy=policy_cls())
+            for k in (2, 4):
+                assert self.simple_report(
+                    shard_count=k, mode="windowed", workers=2,
+                    policy=policy_cls()) == base, (policy_cls.__name__, k)
+
+    def test_windowed_refuses_fleet_coupled_configs(self):
+        trace = make_trace(n=10)
+        with pytest.raises(ValueError, match="autoscaler"):
+            Runner(trace, make_nodes(power=True), ZetaOnlinePolicy(),
+                   autoscaler=ReactiveIdlePolicy(idle_timeout_s=2.0),
+                   shard_count=2, mode="windowed")
+        with pytest.raises(ValueError, match="fault"):
+            Runner(trace, make_nodes(), ZetaOnlinePolicy(),
+                   faults=make_faults(trace), shard_count=2,
+                   mode="windowed")
+
+    def test_pool_refuses_full_information_policies(self):
+        class Opaque(ZetaOnlinePolicy):
+            fleet_reads = "full"
+
+        with pytest.raises(ValueError, match="fleet_reads"):
+            Runner(make_trace(n=10), make_nodes(), Opaque(),
+                   shard_count=2, mode="windowed", workers=2)
+
+
+class TestPartitionHelpers:
+
+    def test_partition_nodes_balanced_and_covering(self):
+        nodes = make_nodes()
+        for k in (1, 2, 4, 6, 8):
+            groups = partition_nodes(nodes, k)
+            assert len(groups) == min(k, len(nodes))
+            flat = [n.node_id for g in groups for n in g]
+            assert sorted(flat) == list(range(len(nodes)))
+            sizes = [len(g) for g in groups]
+            assert max(sizes) - min(sizes) <= 1
+
+    def test_cross_shard_floor_infinite_without_faults(self):
+        nodes = make_nodes(power=True)
+        assert cross_shard_floor_s(nodes, ZetaOnlinePolicy()) == float("inf")
+
+    def test_cross_shard_floor_bounded_by_wake_and_retry(self):
+        nodes = make_nodes(power=True)
+        trace = make_trace(n=10)
+        floor = cross_shard_floor_s(nodes, FailoverPolicy(
+            ZetaOnlinePolicy(), base_delay_s=0.25), make_faults(trace))
+        assert 0.0 < floor <= 0.25
+
+    def test_node_shard_heap_orders_by_time_then_seq(self):
+        nodes = make_nodes()[:2]
+        sh = NodeShard(0, nodes, SeqAllocator())
+        sh.push(Event(2.0, 0, EventKind.RETRY, None))
+        sh.push(Event(1.0, 1, EventKind.RETRY, None))
+        assert sh.peek_time() == 1.0
+        assert sh.pop().time == 1.0
+        assert sh.pop().seq == 0
+        assert sh.peek_key() == (float("inf"), -1)
+
+
+class TestFacade:
+
+    def test_default_shards_env(self, monkeypatch):
+        monkeypatch.delenv("REPRO_SIM_SHARDS", raising=False)
+        assert default_shards() == 1
+        monkeypatch.setenv("REPRO_SIM_SHARDS", "4")
+        assert default_shards() == 4
+        monkeypatch.setenv("REPRO_SIM_SHARDS", "bogus")
+        assert default_shards() == 1
+        monkeypatch.setenv("REPRO_SIM_SHARDS", "0")
+        assert default_shards() == 1
+
+    def test_facade_shards_argument_is_report_invariant(self, monkeypatch):
+        trace = make_trace(n=40)
+        base = simulate_cluster(trace, make_nodes(),
+                                ZetaOnlinePolicy(), zeta=0.5).to_dict()
+        assert simulate_cluster(trace, make_nodes(), ZetaOnlinePolicy(),
+                                zeta=0.5, shards=3).to_dict() == base
+        monkeypatch.setenv("REPRO_SIM_SHARDS", "2")
+        assert simulate_cluster(trace, make_nodes(), ZetaOnlinePolicy(),
+                                zeta=0.5).to_dict() == base

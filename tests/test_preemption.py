@@ -22,6 +22,7 @@ import pytest
 
 from repro.cluster import (
     ClusterNode,
+    EventKind,
     GreedyEnergyPolicy,
     LeastLoadedPolicy,
     OfflineOraclePolicy,
@@ -129,14 +130,14 @@ class TestNodePreemption:
         n = node(max_batch=2)
         trace_req = timestamped_trace([(0.0, (128, 512))]).requests[0]
         kind, t_pre = n.enqueue(trace_req, 0.0)
-        assert kind == "phase"
+        assert kind is EventKind.PHASE_END
         done, ev = n.on_phase_end(t_pre)      # prefill ends, decode starts
         assert done == [] and ev is not None
         kind, t_dec = ev
         busy_before = n.busy_s
         t_mid = t_pre + 0.5 * (t_dec - t_pre)
         ev2 = n.preempt_decode(trace_req.request_id, t_mid)
-        assert ev2 is not None and ev2[0] == "preempt"
+        assert ev2 is not None and ev2[0] is EventKind.PREEMPT_END
         t_settle = ev2[1]
         assert t_settle >= t_mid              # in-flight token finishes
         assert t_settle <= t_dec

@@ -101,8 +101,10 @@ class TestMemoLRU:
     mid-campaign when the bound was hit."""
 
     def _sim(self, limit):
+        # shared_memos=False: eviction reasoning needs a private cache
         sim = AnalyticLLMSimulator(PAPER_ZOO["llama2-7b"], batch=2,
-                                   kv_cache=True, noise_sigma=0.0)
+                                   kv_cache=True, noise_sigma=0.0,
+                                   shared_memos=False)
         sim._memo_max_entries = limit
         return sim
 
