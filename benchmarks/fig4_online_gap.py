@@ -34,6 +34,15 @@ policy table, the three levers PR 4 added:
     Asserted: naive loses >50% goodput at full radius, hardened keeps
     ≥90% at every checkpoint interval, the domain-masked failure-aware
     oracle bound, and the seven-bucket partition to 1e-9.
+  * **multi-turn sessions + KV prefix cache** (cell i, `--sessions`):
+    conversational traffic (session depth × cache capacity sweep) under
+    session-sticky routing.  A warm turn re-prefills only its uncached
+    suffix (the exact telescoping difference) plus a closed-form
+    cache-read DMA term — the eighth `cache_read` energy bucket.
+    Asserted: the eight-bucket partition to 1e-9 under a live
+    InvariantAuditor, the cache-aware oracle bound on every realized
+    hit sequence, and ≥25% prefill-energy reduction at session depth 8
+    with ample capacity.
 
 Guarantee checked here (unchanged from PR 1, same oracle replay): the
 oracle is never worse than any online policy on the Eq. 2 objective (at
@@ -53,6 +62,7 @@ from pathlib import Path
 
 from benchmarks.common import emit, timed
 from repro.cluster import (
+    CacheAwareOraclePolicy,
     CheckpointConfig,
     ClusterNode,
     DomainSpreadPolicy,
@@ -65,6 +75,7 @@ from repro.cluster import (
     LeastLoadedPolicy,
     OfflineOraclePolicy,
     PowerConfig,
+    PrefixCacheConfig,
     RandomPolicy,
     ReactiveIdlePolicy,
     ReplicaEnergyPolicy,
@@ -72,20 +83,29 @@ from repro.cluster import (
     ReplicaRatePolicy,
     RoundRobinPolicy,
     SLOPreemptionPolicy,
+    SessionAffinityPolicy,
     SurvivabilityAutoscalePolicy,
     TauOutPredictor,
     ZetaOnlinePolicy,
     compare_policies,
     fresh_nodes,
+    objective_of_assignment,
     rack_pdu_topology,
+    realized_cache_hits,
     replay_trace,
+    session_trace,
     simulate_cluster,
 )
 from repro.cluster.faults import CRASH, RECOVER
 from repro.configs import CASE_STUDY_MODELS, PAPER_ZOO, TABLE1
 from repro.core.energy_model import LLMProfile, fit_profile
 from repro.data import WorkloadSpec, alpaca_like_workload
-from repro.energy import AnalyticLLMSimulator, SWING_NODE, TPU_NODE
+from repro.energy import (
+    AnalyticLLMSimulator,
+    SWING_NODE,
+    TPU_NODE,
+    kv_bytes_per_token,
+)
 from repro.obs import EventTracer, InvariantAuditor, Telemetry
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
@@ -613,6 +633,169 @@ def run_blast_radius(cell_dumps):
     print(f"  wrote blast-radius cells -> {blast_path.name}")
 
 
+# --- (i): multi-turn sessions + the KV prefix cache -----------------------
+SESSION_N = 40                 # concurrent conversations
+SESSION_RATE_QPS = 0.4         # session *starts* per second
+SESSION_THINK_S = 10.0
+SESSION_DEPTHS = (2, 8)        # turns per session
+SESSION_MIN_PREFILL_CUT = 0.25   # acceptance floor at depth 8, ample cache
+# "small" holds ~1.5k tokens of KV per node: a couple of warm sessions,
+# so 40 concurrent ones churn the LRU hard
+SESSION_SMALL_TOKENS = 1500
+
+
+def session_builders(profiles, cache):
+    return [
+        (lambda i=i, name=name, prof=prof: ClusterNode(
+            i, PAPER_ZOO[name], prof, SWING_NODE, max_batch=MAX_BATCH,
+            prefix_cache=cache))
+        for i, (name, prof) in enumerate(zip(CASE_STUDY_MODELS, profiles))
+    ]
+
+
+def session_cache_points():
+    small = SESSION_SMALL_TOKENS * kv_bytes_per_token(PAPER_ZOO["llama2-13b"])
+    return (("disabled", None),
+            ("small", PrefixCacheConfig(capacity_bytes=small)),
+            ("ample", PrefixCacheConfig()))
+
+
+def prefill_energy_cut(rep):
+    """Realized prefill-energy reduction, closed form: every request's
+    prompt prices at the canonical batch-1 prefill_cost on the node that
+    served it; a warm request skipped exactly prefill_cost(cached) of
+    that (the telescoping identity the node charges by).  Returns
+    (cold_j, saved_j, saved_j / cold_j)."""
+    sims = {name: AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                                       kv_cache=True, noise_sigma=0.0)
+            for name in CASE_STUDY_MODELS}
+    cold = saved = 0.0
+    for r in rep.records:
+        sim = sims[r.model]
+        cold += sim.prefill_cost(r.tau_in, batch=1, freq_scale=1.0)[1]
+        if r.cached_tokens:
+            saved += sim.prefill_cost(r.cached_tokens, batch=1,
+                                      freq_scale=1.0)[1]
+    return cold, saved, saved / max(cold, 1e-12)
+
+
+def assert_session_oracle_bound(profiles, trace, rep, cache, tag):
+    """The cache-aware oracle replay, conditioned on the hit sequence
+    `rep` actually realized, is never worse than `rep`'s own assignment
+    when both are scored under the same discounted cost matrix."""
+    cached = realized_cache_hits(rep.records)
+    cvec = [cached.get(r.request_id, 0) for r in trace.requests]
+    model_of = {r.request_id: r.model for r in rep.records}
+    online_obj = objective_of_assignment(
+        profiles, trace.queries(),
+        [model_of[r.request_id] for r in trace.requests], 0.5, cached=cvec)
+    orep = simulate_cluster(
+        trace, fresh_nodes(session_builders(profiles, cache)),
+        CacheAwareOraclePolicy(cached), zeta=0.5)
+    omodel = {r.request_id: r.model for r in orep.records}
+    oracle_obj = objective_of_assignment(
+        profiles, trace.queries(),
+        [omodel[r.request_id] for r in trace.requests], 0.5, cached=cvec)
+    assert oracle_obj <= online_obj + 1e-9, \
+        f"cache-aware oracle beaten at {tag}"
+    return oracle_obj, online_obj, orep
+
+
+def session_cells(profiles):
+    """(i) the conversational axis: session depth x cache capacity.
+    Asserted on every run: the eight-bucket partition to 1e-9 under a
+    live InvariantAuditor (which re-derives each warm charge from the
+    telescoping identity and the cache-read closed form), the
+    cache-aware oracle bound on the realized hit sequence, and — at
+    depth 8 with ample capacity — >=25% prefill-energy reduction over
+    the cache-disabled run."""
+    out = {}
+    for depth in SESSION_DEPTHS:
+        trace = session_trace(SESSION_N, turns=depth,
+                              think_s=SESSION_THINK_S,
+                              rate_qps=SESSION_RATE_QPS, seed=17,
+                              name=f"sessions@depth{depth}")
+        cell = {}
+        for tag, cache in session_cache_points():
+            tel = Telemetry(auditor=InvariantAuditor())
+            rep = simulate_cluster(
+                trace, fresh_nodes(session_builders(profiles, cache)),
+                SessionAffinityPolicy(), zeta=0.5, telemetry=tel)
+            assert len(rep.records) == len(trace)
+            assert seven_bucket_residual(rep) <= 1e-9, \
+                f"energy partition leaked (depth={depth}, {tag})"
+            cold, saved, cut = prefill_energy_cut(rep)
+            entry = {"report": rep, "auditor_checks": tel.auditor.n_checks,
+                     "prefill_cold_j": cold, "prefill_saved_j": saved,
+                     "prefill_cut": cut}
+            if cache is not None:
+                oracle_obj, online_obj, orep = assert_session_oracle_bound(
+                    profiles, trace, rep, cache, f"depth={depth}, {tag}")
+                entry.update(oracle_obj=oracle_obj, online_obj=online_obj,
+                             oracle_report=orep)
+            else:
+                assert rep.total_cache_hits == 0 and cut == 0.0
+            cell[tag] = entry
+        assert cell["small"]["report"].total_cache_evictions > 0, \
+            f"small capacity never evicted at depth {depth}"
+        out[depth] = cell
+    deep = out[SESSION_DEPTHS[-1]]["ample"]
+    assert deep["prefill_cut"] >= SESSION_MIN_PREFILL_CUT, \
+        f"ample cache cut only {deep['prefill_cut']:.1%} of prefill " \
+        f"energy at depth {SESSION_DEPTHS[-1]}"
+    return out
+
+
+def run_sessions(profiles, cell_dumps):
+    print(f"\n=== multi-turn sessions + KV prefix cache "
+          f"({SESSION_N} sessions, {SESSION_RATE_QPS:g} starts/s, "
+          f"think {SESSION_THINK_S:g}s) ===")
+    cells = session_cells(profiles)
+    for depth, cell in sorted(cells.items()):
+        for tag, entry in cell.items():
+            rep = entry["report"]
+            cell_dumps[f"sessions.depth_{depth}.{tag}"] = rep.to_dict()
+            if "oracle_report" in entry:
+                cell_dumps[f"sessions.depth_{depth}.{tag}.cache_oracle"] = \
+                    entry["oracle_report"].to_dict()
+            print(f"  depth={depth} {tag:>9s}: "
+                  f"hit_rate={rep.cache_hit_rate:5.1%} "
+                  f"reuse={rep.total_cache_hit_tokens:6d}tok "
+                  f"evict={rep.total_cache_evictions:4d} "
+                  f"E={rep.total_energy_j:9.0f}J "
+                  f"(read={rep.total_cache_read_energy_j:6.2f}) "
+                  f"prefill_cut={entry['prefill_cut']:5.1%} "
+                  f"p95={rep.latency_p95:6.2f}s")
+        disabled = cell["disabled"]["report"]
+        for tag in ("small", "ample"):
+            entry = cell[tag]
+            rep = entry["report"]
+            total_cut = 1.0 - rep.total_energy_j / disabled.total_energy_j
+            emit(f"fig4.sessions_depth_{depth}_{tag}", 0.0,
+                 f"hit_rate={rep.cache_hit_rate:.4f} "
+                 f"hit_tokens={rep.total_cache_hit_tokens} "
+                 f"evictions={rep.total_cache_evictions} "
+                 f"prefill_cut={entry['prefill_cut']:.4f} "
+                 f"total_energy_cut={total_cut:.4f} "
+                 f"cache_read_j={rep.total_cache_read_energy_j:.3f} "
+                 f"oracle_obj={entry['oracle_obj']:+.4f} "
+                 f"online_obj={entry['online_obj']:+.4f} "
+                 f"auditor_checks={entry['auditor_checks']} "
+                 f"partition_exact=True oracle_bound_holds=True")
+    deep = cells[SESSION_DEPTHS[-1]]["ample"]
+    emit("fig4.sessions", 0.0,
+         f"prefill_cut_depth{SESSION_DEPTHS[-1]}_ample="
+         f"{deep['prefill_cut']:.4f} "
+         f"prefill_cut_geq_{SESSION_MIN_PREFILL_CUT:g}=True "
+         f"eight_bucket_partition_exact=True "
+         f"cache_oracle_bound_holds=True")
+    sess_path = REPO_ROOT / "BENCH_fig4_sessions.json"
+    sess_path.write_text(json.dumps(
+        {k: v for k, v in cell_dumps.items() if k.startswith("sessions.")},
+        sort_keys=True, indent=1))
+    print(f"  wrote session cells -> {sess_path.name}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--availability-only", action="store_true",
@@ -620,6 +803,9 @@ def main() -> None:
     ap.add_argument("--blast-radius", action="store_true",
                     help="run just the correlated-failure/checkpoint "
                          "blast-radius cell (h)")
+    ap.add_argument("--sessions", action="store_true",
+                    help="run just the multi-turn-session / KV-prefix-"
+                         "cache cell (i)")
     opts = ap.parse_args()
     profiles = fit_fleet()
     if opts.availability_only:
@@ -629,6 +815,10 @@ def main() -> None:
     if opts.blast_radius:
         cell_dumps = {}
         run_blast_radius(cell_dumps)
+        return
+    if opts.sessions:
+        cell_dumps = {}
+        run_sessions(profiles, cell_dumps)
         return
     us, results = timed(lambda: run(profiles), repeats=1)
     n_cells = len(results)
@@ -791,6 +981,9 @@ def main() -> None:
     # --- (h): correlated failure domains + prefill checkpointing -------
     run_blast_radius(cell_dumps)
 
+    # --- (i): multi-turn sessions + the KV prefix cache ----------------
+    run_sessions(profiles, cell_dumps)
+
     # every cell's full ClusterReport as structured JSON — downstream
     # tooling reads this instead of parsing the printed tables
     cells_path = REPO_ROOT / "BENCH_fig4_cells.json"
@@ -810,7 +1003,10 @@ def main() -> None:
          "failover_recovery_geq_0.9_at_10x_mttf=True "
          "seven_bucket_partition_exact=True "
          "naive_loss_gt_0.5_at_full_blast_radius=True "
-         "hardened_recovery_geq_0.9_every_ckpt_interval=True")
+         "hardened_recovery_geq_0.9_every_ckpt_interval=True "
+         "eight_bucket_partition_exact=True "
+         "cache_oracle_bound_holds=True "
+         "session_prefill_cut_geq_0.25_at_depth8=True")
 
 
 if __name__ == "__main__":

@@ -691,6 +691,130 @@ def gate_checkpoint_settlement(failures: list[str]) -> dict:
             "auditor_checks": tel.auditor.n_checks}
 
 
+def gate_prefix_cache_settlement(failures: list[str]) -> dict:
+    """The KV prefix cache must settle exactly, end to end.
+
+    (a) Warm-suffix telescoping: a scripted two-turn session's warm
+        record is charged exactly prefill_cost(τin) − prefill_cost(cached)
+        plus its decode — the same prefix-difference contract restores
+        use — to 1e-9.
+    (b) Cache-read closed form: fleet Σ cache-read joules ==
+        Σ hits cached × kv_bytes × j_per_byte_read (and seconds ==
+        bytes / read_bw), the eighth bucket.
+    (c) Default-off identity: a cache-equipped fleet serving sessionless
+        traffic is byte-identical to a cache-free fleet.
+    (d) A session storm with tight capacity (LRU churn) and a crash
+        (cache invalidation) under a live InvariantAuditor keeps the
+        eight-bucket partition exact."""
+    from repro.cluster import (ArrivalTrace, ClusterNode, FaultInjector,
+                               LeastLoadedPolicy, PrefixCacheConfig,
+                               SessionAffinityPolicy, TracedRequest,
+                               poisson_trace, session_trace,
+                               simulate_cluster)
+    from repro.configs import TABLE1
+    from repro.core.energy_model import fit_profile
+    from repro.energy import SWING_NODE
+    from repro.energy.costs import kv_bytes_per_token
+    from repro.obs import InvariantAuditor, InvariantViolation, Telemetry
+
+    name = "llama2-7b"
+    sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                               kv_cache=True, noise_sigma=0.0)
+    pts = [(8, 8), (64, 64), (256, 128), (512, 512), (2048, 64)]
+    pbs = [sim.simulate(a, b) for a, b in pts]
+    profile = fit_profile(name, TABLE1[name]["a_k"],
+                          [p[0] for p in pts], [p[1] for p in pts],
+                          [pb.energy_j for pb in pbs],
+                          [pb.runtime_s for pb in pbs])
+    kvb = kv_bytes_per_token(PAPER_ZOO[name])
+
+    def nodes(cache, n=1):
+        return [ClusterNode(i, PAPER_ZOO[name], profile, SWING_NODE,
+                            max_batch=2, prefix_cache=cache)
+                for i in range(n)]
+
+    # (a)+(b): one session, two far-apart turns on one node
+    pc = PrefixCacheConfig()
+    trace = ArrivalTrace(name="warm", requests=(
+        TracedRequest(0, 0.0, 512, 32, session_id=0, turn=0,
+                      prefix_tokens=0),
+        TracedRequest(1, 60.0, 800, 32, session_id=0, turn=1,
+                      prefix_tokens=544),
+    ))
+    rep = simulate_cluster(trace, nodes(pc), LeastLoadedPolicy(), zeta=0.5)
+    warm = rep.records[-1]
+    t2, e2 = sim.prefill_cost(800, batch=1, freq_scale=1.0)
+    t1, e1 = sim.prefill_cost(544, batch=1, freq_scale=1.0)
+    td, ed = sim.decode_cost(800, 32, batch=1, freq_scale=1.0)
+    want = (e2 - e1) + ed + sim.host_power_w * ((t2 - t1) + td)
+    rel_warm = abs(warm.energy_j - want) / max(1.0, want)
+    if warm.cached_tokens != 544 or rel_warm > 1e-9:
+        failures.append(
+            f"warm suffix charge off the telescoped closed form: cached "
+            f"{warm.cached_tokens}, energy rel {rel_warm:.3e}")
+    read_bytes = 544 * kvb
+    rel_read_j = (abs(rep.total_cache_read_energy_j
+                      - read_bytes * pc.j_per_byte_read)
+                  / max(1e-12, rep.total_cache_read_energy_j))
+    read_s = sum(s.cache_read_s for s in rep.node_stats)
+    rel_read_s = abs(read_s - read_bytes / pc.read_bw) / max(1e-12, read_s)
+    if rel_read_j > 1e-9 or rel_read_s > 1e-9:
+        failures.append(
+            f"cache-read bucket off closed form: energy rel "
+            f"{rel_read_j:.3e}, time rel {rel_read_s:.3e}")
+
+    # (c): sessionless traffic must not see the cache at all
+    plain_trace = poisson_trace(30, 4.0, seed=3)
+    with_cache = simulate_cluster(plain_trace, nodes(pc, n=2),
+                                  LeastLoadedPolicy(), zeta=0.5)
+    without = simulate_cluster(plain_trace, nodes(None, n=2),
+                               LeastLoadedPolicy(), zeta=0.5)
+    identical = (with_cache.to_json(include_records=True)
+                 == without.to_json(include_records=True))
+    if not identical:
+        failures.append(
+            "cache-equipped fleet diverged from cache-free on "
+            "sessionless traffic")
+
+    # (d): storm with LRU churn + crash invalidation, live-audited
+    tight = PrefixCacheConfig(capacity_bytes=600 * kvb)
+    storm_trace = session_trace(8, turns=5, think_s=4.0, rate_qps=1.0,
+                                seed=5)
+    faults = FaultInjector(mttf_s=25.0, mttr_s=5.0, seed=7).generate(
+        [0, 1, 2], storm_trace.duration_s)
+    tel = Telemetry(auditor=InvariantAuditor())
+    try:
+        storm = simulate_cluster(
+            storm_trace, nodes(tight, n=3), SessionAffinityPolicy(),
+            zeta=0.5, faults=faults, telemetry=tel)
+    except InvariantViolation as e:
+        failures.append(f"prefix-cache gate tripped the live auditor: {e}")
+        return {"auditor": "violated"}
+    worst_e = worst_t = 0.0
+    for s in storm.node_stats:
+        e_sum = (s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
+                 + s.transition_energy_j + s.shipping_energy_j
+                 + s.checkpoint_energy_j + s.wasted_energy_j
+                 + s.cache_read_energy_j)
+        worst_e = max(worst_e, abs(e_sum - s.total_energy_j)
+                      / max(1.0, s.total_energy_j))
+        worst_t = max(worst_t, abs(s.accounted_s - s.horizon_s)
+                      / max(1.0, s.horizon_s))
+    if worst_e > 1e-9 or worst_t > 1e-9:
+        failures.append(
+            f"cached run violates eight-bucket conservation: energy rel "
+            f"{worst_e:.3e}, time rel {worst_t:.3e}")
+    if storm.total_cache_hits + storm.total_cache_misses == 0:
+        failures.append("prefix-cache storm never consulted the cache")
+    return {"warm_charge_rel": rel_warm, "cache_read_energy_rel": rel_read_j,
+            "cache_read_time_rel": rel_read_s,
+            "sessionless_identical": identical,
+            "worst_energy_rel": worst_e, "worst_time_rel": worst_t,
+            "tolerance": 1e-9, "storm_hits": storm.total_cache_hits,
+            "storm_evictions": storm.total_cache_evictions,
+            "auditor_checks": tel.auditor.n_checks}
+
+
 def gate_power_conservation(failures: list[str]) -> dict:
     """Gated-sim energy accounting: the busy/idle/gated/transition buckets
     must sum to the total to 1e-9 and partition every node's horizon —
@@ -1008,6 +1132,7 @@ def run_gates(quick: bool) -> tuple[dict, list[str]]:
         "preemption_split": gate_preemption_split(failures),
         "migration_settlement": gate_migration_settlement(failures),
         "checkpoint_settlement": gate_checkpoint_settlement(failures),
+        "prefix_cache_settlement": gate_prefix_cache_settlement(failures),
         "metrics_overhead": gate_metrics_overhead(failures),
         "sharded_replay": gate_sharded_replay(failures),
     }

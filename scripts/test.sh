@@ -34,7 +34,15 @@
 #                            storage closed form in aggregate, and a
 #                            scripted mid-prefill crash restores from the
 #                            last durable boundary with seven-bucket
-#                            conservation at 1e-9 —
+#                            conservation at 1e-9 — the
+#                            prefix_cache_settlement gate: warm session
+#                            turns charged exactly the telescoped prefix
+#                            difference, the cache_read bucket on the
+#                            byte closed form, cache-equipped fleets
+#                            byte-identical on sessionless traffic, and a
+#                            tight-capacity session storm with crash
+#                            invalidation holding eight-bucket
+#                            conservation under the live auditor —
 #                            and the telemetry metrics_overhead gate: with full
 #                            telemetry on a governed fleet the ClusterReport
 #                            is byte-identical, the Prometheus dump parses,

@@ -26,15 +26,26 @@ interval instead of the whole prefill, restored refugees pay only the
 closed-form unfinished-suffix cost), and survivability-aware control
 (DomainSpreadPolicy anti-affinity routing, the MTTF-conditioned
 SurvivabilityAutoscalePolicy availability floor, and domain-masked
-capacity in the failure-aware oracle).
+capacity in the failure-aware oracle).  The newest layer is
+*conversational serving*: multi-turn session traces (session_trace —
+each turn's prompt re-submits the grown shared prefix after a think-time
+gap), a per-node KV prefix cache (PrefixCacheConfig: LRU over sessions,
+capacity in kv_bytes_per_token units, crash-volatile) that serves a warm
+turn with the exact telescoping suffix prefill prefill_cost(τin) −
+prefill_cost(cached) plus a closed-form cache-read DMA term (the eighth
+`cache_read` energy bucket), session-sticky routing
+(SessionAffinityPolicy), and a cache-aware oracle
+(CacheAwareOraclePolicy) conditioned on the realized hit sequence.
 
 Module map (the event model, and how the pieces plug together):
 
     trace.py      — TracedRequest / ArrivalTrace + generators (Poisson,
                     bursty Gamma, diurnal thinning, on/off square-wave
                     churn, replay of the offline Alpaca-like case-study
-                    workload).  A trace is the only stochastic input;
-                    everything downstream is deterministic.
+                    workload, and session_trace — multi-turn sessions
+                    whose TracedRequests carry session_id/turn/
+                    prefix_tokens).  A trace is the only stochastic
+                    input; everything downstream is deterministic.
     faults.py     — FaultEvent / FaultTrace / FaultInjector: seeded node
                     crash–recovery and straggler onset–clear processes
                     (exponential MTTF/MTTR alternating renewals, per-node,
@@ -56,7 +67,13 @@ Module map (the event model, and how the pieces plug together):
                     time/energy delegates to repro.energy.simulator, so an
                     uncontended node conserves energy against the
                     per-request AnalyticLLMSimulator.  Owns the power-state
-                    machine and the per-phase DVFS governor (below).
+                    machine, the per-phase DVFS governor (below), and the
+                    optional per-node KV prefix cache (PrefixCacheConfig:
+                    LRU admission/eviction at request-arrival boundaries,
+                    a hit starts the warm request as a dedicated batch-1
+                    suffix prefill charged prefill_cost(τin) −
+                    prefill_cost(cached), a crash invalidates the whole
+                    cache).
     power.py      — PowerConfig (transition latency/energy, gated residual
                     draw) and autoscalers: reactive_idle (gate after an
                     idle timeout, wake on demand) and predictive_rate
@@ -97,7 +114,17 @@ Module map (the event model, and how the pieces plug together):
                     with a liveness mask — the assignment argmin excludes
                     models whose every host is down forever from a
                     query's arrival, so the bound stays meaningful under
-                    faults.  New policies subclass RoutingPolicy and
+                    faults.  Session serving: SessionAffinityPolicy
+                    steers a follow-up turn back to the node whose cache
+                    is warm (the energy term discounted by the warm-
+                    prefix fraction, skipped when that node is waking/
+                    gated/failed), and CacheAwareOraclePolicy re-solves
+                    the offline optimum over cost columns discounted by
+                    the *realized* hit sequence
+                    (realized_cache_hits(report.records)) — scoring the
+                    online assignment under the same discounted matrix
+                    keeps oracle ≤ online exact per run.
+                    New policies subclass RoutingPolicy and
                     implement select(req, nodes, now); attach() gives them
                     the fleet and (for oracle-grade information models)
                     the trace; observe_completion() is their causal
@@ -128,12 +155,14 @@ Module map (the event model, and how the pieces plug together):
                     compare_policies() rerunning a trace (and fault
                     trace) over fresh fleets for an apples-to-apples
                     policy table.
-    metrics.py    — ClusterReport: the seven-bucket busy/idle/gated/
-                    transition/shipping/checkpoint/wasted energy split
-                    (the buckets partition each node's horizon — FAILED
-                    time draws exactly 0 W, shipping and checkpointing
-                    are background NIC/DMA — and sum exactly to total
-                    energy), J/token, latency p50/p95/
+    metrics.py    — ClusterReport: the eight-bucket busy/idle/gated/
+                    transition/shipping/checkpoint/wasted/cache_read
+                    energy split (the time buckets partition each node's
+                    horizon — FAILED time draws exactly 0 W; shipping,
+                    checkpointing, and cache reads are background
+                    NIC/DMA — and the buckets sum exactly to total
+                    energy), cache hit/miss/eviction counters and
+                    hit-token reuse depth, J/token, latency p50/p95/
                     p99, slowdown-SLO attainment, goodput under
                     abandonment, per-node utilization, AbandonedRecords,
                     and the realized Eq. 2 objective used to measure the
@@ -183,7 +212,7 @@ gate pins every artifact byte-identical across partitions)::
         obs/ children attach per shard + one fleet child, fold at
         finalize through the mergeable-registry reduction; tracer
         records carry fleet-order stamps so absorbed traces replay
-        in merge order.  →  ClusterReport (seven-bucket partition)
+        in merge order.  →  ClusterReport (eight-bucket partition)
 
 Power-state lifecycle (driven by ClusterNode, timed by sim.py).
 Telemetry hooks fire at the marked (*) edges: `on_power_begin` as a
@@ -222,7 +251,11 @@ prefill/decode/restore charge, `on_preempt_split` at a preemption or
 crash settlement (auditing the split-energy identity), `on_migration`
 as a KV shipment starts, `on_checkpoint` at every durable persist,
 `on_restore` as a suffix re-run begins, `on_retry`/`on_abandon` on the
-failover path, `on_completion` at DONE::
+failover path, `on_completion` at DONE.  The prefix-cache layer adds
+`on_cache_lookup` at every session-request admission, `on_cache_hit`
+(plus the auditor's telescoping + closed-form cache-read checks) as a
+warm suffix prefill starts, `on_cache_evict` at an LRU displacement, and
+`on_cache_invalidate` as a crash wipes a node's cache::
 
               routed*       joiner prefill*         last token*
     WAITING ──────────> QUEUED ─────────> DECODING ──────────> DONE
@@ -279,6 +312,21 @@ failover path, `on_completion` at DONE::
     bit-identical to the pre-checkpoint simulator (a mid-prefill crash
     completes the pass, then ships the full KV).
 
+    Under a PrefixCacheConfig a session request's admission consults the
+    node's KV prefix cache.  A hit (the session's entry holds cached > 0
+    of this turn's prefix_tokens) pins the entry and the request later
+    starts as a dedicated batch-1 *warm suffix prefill* — charged the
+    exact telescoping difference prefill_cost(τin) − prefill_cost(cached)
+    at one pinned operating point, the same contract as the checkpoint
+    RESTORING phase — plus a closed-form cache-read term: cached ·
+    kv_bytes_per_token bytes at bytes/read_bw background-DMA seconds and
+    bytes·j_per_byte_read joules (the eighth `cache_read` bucket, outside
+    the horizon partition like shipping).  A miss reserves τin + τout
+    tokens for the session, LRU-evicting unpinned entries; a crash
+    invalidates the node's whole cache (warm state is volatile), while
+    power-gating preserves it.  Without a PrefixCacheConfig (the default)
+    every path is bit-identical to the cache-free simulator.
+
 DVFS operating-point semantics: an AcceleratorSpec exposes discrete
 `dvfs_scales`; at scale s, peak_flops ∝ s, hbm_bw keeps its `dvfs_bw_floor`
 fraction plus the coupled remainder, dyn_w ∝ s^α, idle_w fixed.  A node
@@ -329,9 +377,14 @@ from repro.cluster.metrics import (  # noqa: F401
     NodeStats,
     RequestRecord,
 )
-from repro.cluster.node import CheckpointConfig, ClusterNode  # noqa: F401
+from repro.cluster.node import (  # noqa: F401
+    CheckpointConfig,
+    ClusterNode,
+    PrefixCacheConfig,
+)
 from repro.cluster.policies import (  # noqa: F401
     DEFAULT_POLICIES,
+    CacheAwareOraclePolicy,
     DomainSpreadPolicy,
     FailoverPolicy,
     FailureAwareOraclePolicy,
@@ -345,8 +398,11 @@ from repro.cluster.policies import (  # noqa: F401
     RoundRobinPolicy,
     RoutingPolicy,
     SLOPreemptionPolicy,
+    SessionAffinityPolicy,
     ZetaOnlinePolicy,
     ZetaReplanPolicy,
+    objective_of_assignment,
+    realized_cache_hits,
     replica_registry,
 )
 from repro.cluster.power import (  # noqa: F401
@@ -367,5 +423,6 @@ from repro.cluster.trace import (  # noqa: F401
     onoff_trace,
     poisson_trace,
     replay_trace,
+    session_trace,
     timestamped_trace,
 )

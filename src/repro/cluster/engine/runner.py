@@ -458,6 +458,7 @@ class Runner:
                 preemptions=c.preemptions,
                 migrations=c.migrations,
                 shipped_bytes=c.shipped_bytes,
+                cached_tokens=c.cached_tokens,
             )
             records.append(rec)
             return rec
@@ -776,6 +777,7 @@ class Runner:
                             preemptions=c.preemptions,
                             migrations=c.migrations,
                             shipped_bytes=c.shipped_bytes,
+                            cached_tokens=c.cached_tokens,
                         )
                         records.append(rec)
                         if c.finish_s > state["makespan"]:
@@ -954,6 +956,7 @@ def _shard_worker(conn, nodes) -> None:
                         preemptions=c.preemptions,
                         migrations=c.migrations,
                         shipped_bytes=c.shipped_bytes,
+                        cached_tokens=c.cached_tokens,
                     ))
                 shard.push_node_event(node, next_ev)
             else:   # pragma: no cover — decomposability precondition

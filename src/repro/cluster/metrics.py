@@ -1,6 +1,6 @@
 """Aggregate metrics for a cluster run.
 
-Energy accounting is split into seven buckets per node:
+Energy accounting is split into eight buckets per node:
 
   * *busy*       — accelerator dynamic+idle during phases plus the host
                    serving draw (exactly what the per-request
@@ -14,15 +14,18 @@ Energy accounting is split into seven buckets per node:
   * *checkpoint* — durable prefill-KV persistence (node.CheckpointConfig):
                    new-prefix bytes at j_per_byte_ckpt, charged at each
                    interval boundary (checkpointed runs only);
+  * *cache_read* — KV prefix-cache hits (node.PrefixCacheConfig): the
+                   warm prefix streamed back at j_per_byte_read
+                   (session runs with a cache only);
   * *wasted*     — work lost to un-rescuable crashes, *moved* out of busy
                    (never double-counted) so re-run joules are visible.
 
 The time buckets (busy/idle/gated/transition/failed — a crashed node
-draws 0 W, so FAILED seconds carry no energy bucket; shipping and
-checkpoint are background NIC/storage DMA concurrent with serving and
-stay outside the horizon partition) partition each node's horizon
-exactly — one second lands in exactly one bucket, so gated time is never
-double-charged as idle — and the sum of the seven energy buckets IS the
+draws 0 W, so FAILED seconds carry no energy bucket; shipping,
+checkpoint and cache_read are background NIC/storage DMA concurrent with
+serving and stay outside the horizon partition) partition each node's
+horizon exactly — one second lands in exactly one bucket, so gated time
+is never double-charged as idle — and the sum of the eight energy buckets IS the
 total energy (the conservation invariant gated in the perf suite at
 1e-9).  The busy bucket alone carries the conservation invariant against
 the offline simulator, while fleet-level J/token still includes the cost
@@ -65,6 +68,7 @@ class RequestRecord:
     preemptions: int = 0        # suspend/resume round-trips en route
     migrations: int = 0         # cross-node KV shipments en route
     shipped_bytes: float = 0.0  # KV bytes moved across the interconnect
+    cached_tokens: int = 0      # τin tokens served from the KV prefix cache
 
     @property
     def latency_s(self) -> float:
@@ -135,13 +139,20 @@ class NodeStats:
     checkpoint_energy_j: float = 0.0  # durable prefill-KV persistence joules
     n_checkpoints: int = 0
     n_restores: int = 0
+    # --- prefix-cache bucket/counters (zero without a PrefixCacheConfig)
+    cache_read_s: float = 0.0        # background cache DMA (outside horizon)
+    cache_read_energy_j: float = 0.0  # warm-prefix read-back joules
+    n_cache_hits: int = 0
+    n_cache_misses: int = 0
+    n_cache_evictions: int = 0
+    cache_hit_tokens: int = 0        # Σ reused prefix tokens (reuse depth)
 
     @property
     def total_energy_j(self) -> float:
         return (self.busy_energy_j + self.idle_energy_j
                 + self.gated_energy_j + self.transition_energy_j
                 + self.shipping_energy_j + self.checkpoint_energy_j
-                + self.wasted_energy_j)
+                + self.cache_read_energy_j + self.wasted_energy_j)
 
     @property
     def accounted_s(self) -> float:
@@ -193,11 +204,16 @@ class ClusterReport:
         return sum(s.checkpoint_energy_j for s in self.node_stats)
 
     @property
+    def total_cache_read_energy_j(self) -> float:
+        return sum(s.cache_read_energy_j for s in self.node_stats)
+
+    @property
     def total_energy_j(self) -> float:
         return (self.total_busy_energy_j + self.total_idle_energy_j
                 + self.total_gated_energy_j + self.total_transition_energy_j
                 + self.total_shipping_energy_j
                 + self.total_checkpoint_energy_j
+                + self.total_cache_read_energy_j
                 + self.total_wasted_energy_j)
 
     @property
@@ -232,6 +248,29 @@ class ClusterReport:
     def total_restores(self) -> int:
         return sum(s.n_restores for s in self.node_stats)
 
+    @property
+    def total_cache_hits(self) -> int:
+        return sum(s.n_cache_hits for s in self.node_stats)
+
+    @property
+    def total_cache_misses(self) -> int:
+        return sum(s.n_cache_misses for s in self.node_stats)
+
+    @property
+    def total_cache_evictions(self) -> int:
+        return sum(s.n_cache_evictions for s in self.node_stats)
+
+    @property
+    def total_cache_hit_tokens(self) -> int:
+        return sum(s.cache_hit_tokens for s in self.node_stats)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Hits over session-request admissions (non-session requests
+        never consult the cache and don't count)."""
+        n = self.total_cache_hits + self.total_cache_misses
+        return self.total_cache_hits / n if n else 0.0
+
     def replica_counts(self) -> dict[str, int]:
         """Replicas hosted per model (from the sim's replica registry)."""
         return {name: len(nids) for name, nids in self.replicas}
@@ -246,7 +285,7 @@ class ClusterReport:
         return self.total_energy_j / tok if tok else 0.0
 
     def energy_breakdown(self) -> dict[str, float]:
-        """The seven-bucket split (joules) — sums to total_energy_j."""
+        """The eight-bucket split (joules) — sums to total_energy_j."""
         return {
             "busy": self.total_busy_energy_j,
             "idle": self.total_idle_energy_j,
@@ -254,6 +293,7 @@ class ClusterReport:
             "transition": self.total_transition_energy_j,
             "shipping": self.total_shipping_energy_j,
             "checkpoint": self.total_checkpoint_energy_j,
+            "cache_read": self.total_cache_read_energy_j,
             "wasted": self.total_wasted_energy_j,
         }
 
@@ -347,6 +387,11 @@ class ClusterReport:
             "total_migrations": self.total_migrations,
             "total_checkpoints": self.total_checkpoints,
             "total_restores": self.total_restores,
+            "total_cache_hits": self.total_cache_hits,
+            "total_cache_misses": self.total_cache_misses,
+            "total_cache_evictions": self.total_cache_evictions,
+            "total_cache_hit_tokens": self.total_cache_hit_tokens,
+            "cache_hit_rate": self.cache_hit_rate,
             "n_abandoned": len(self.abandoned),
             "replicas": {name: list(nids) for name, nids in self.replicas},
             "node_stats": [dataclasses.asdict(s) for s in self.node_stats],
@@ -379,10 +424,10 @@ class ClusterReport:
             nid = int(nid_s)
             e = {b: registry.value("sim_node_energy_joules", nid, b)
                  for b in ("busy", "idle", "gated", "transition",
-                           "shipping", "checkpoint", "wasted")}
+                           "shipping", "checkpoint", "cache_read", "wasted")}
             s = {b: registry.value("sim_node_seconds", nid, b)
                  for b in ("busy", "idle", "gated", "transition",
-                           "failed", "shipping", "checkpoint")}
+                           "failed", "shipping", "checkpoint", "cache_read")}
             stats.append(NodeStats(
                 node_id=nid,
                 model=model,
@@ -417,6 +462,15 @@ class ClusterReport:
                 checkpoint_energy_j=e["checkpoint"],
                 n_checkpoints=int(registry.value("sim_node_checkpoints", nid)),
                 n_restores=int(registry.value("sim_node_restores", nid)),
+                cache_read_s=s["cache_read"],
+                cache_read_energy_j=e["cache_read"],
+                n_cache_hits=int(registry.value("sim_node_cache_hits", nid)),
+                n_cache_misses=int(
+                    registry.value("sim_node_cache_misses", nid)),
+                n_cache_evictions=int(
+                    registry.value("sim_node_cache_evictions", nid)),
+                cache_hit_tokens=int(
+                    registry.value("sim_node_cache_hit_tokens", nid)),
             ))
         stats.sort(key=lambda st: st.node_id)
         return cls(
@@ -442,6 +496,10 @@ class ClusterReport:
         if self.total_checkpoints or self.total_restores:
             power += (f"ckpt={self.total_checkpoints} "
                       f"restore={self.total_restores} ")
+        if self.total_cache_hits or self.total_cache_evictions:
+            power += (f"cache={self.cache_hit_rate:.0%} "
+                      f"reuse={self.total_cache_hit_tokens} "
+                      f"evict={self.total_cache_evictions} ")
         if self.total_crashes or self.abandoned:
             power += (f"crash={self.total_crashes} "
                       f"migrate={self.total_migrations} "
@@ -493,5 +551,11 @@ def per_node_stats(nodes: Sequence, makespan_s: float) -> tuple[NodeStats, ...]:
             checkpoint_energy_j=n.checkpoint_energy_j,
             n_checkpoints=n.n_checkpoints,
             n_restores=n.n_restores,
+            cache_read_s=n.cache_read_s,
+            cache_read_energy_j=n.cache_read_energy_j,
+            n_cache_hits=n.n_cache_hits,
+            n_cache_misses=n.n_cache_misses,
+            n_cache_evictions=n.n_cache_evictions,
+            cache_hit_tokens=n.cache_hit_tokens,
         ))
     return tuple(out)

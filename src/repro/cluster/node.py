@@ -102,6 +102,23 @@ on a survivor or abandons, its accrued joules booked wasted.
 `checkpoint=None` keeps the old semantics bit-identically (a
 mid-prefill crash completes the pass, then ships full KV).
 
+KV prefix cache (`PrefixCacheConfig`): multi-turn sessions re-submit
+their whole previous context as a shared prefix each turn.  With a
+cache, a completed turn's KV stays resident keyed by session_id; the
+next turn's admission (`enqueue` → `_cache_admit`) looks the session up
+— a warm entry grants a *pending hit* and the turn later prefills as a
+dedicated batch-1 phase charged prefill_cost(τin) − prefill_cost(cached)
+at one pinned operating point (the same telescoping identity chunks and
+restores use), plus a closed-form cache-read term: cached ×
+kv_bytes_per_token bytes streamed back at `read_bw` (background DMA —
+seconds outside the horizon partition) and `j_per_byte_read` — the
+eighth energy bucket (`cache_read`).  Capacity is bookkept in reserved
+tokens; LRU eviction happens only at admission boundaries, pending-hit
+entries pinned.  A crash invalidates the whole cache (entries and
+pending hits — rescued requests re-admit cold elsewhere); gating does
+not.  `prefix_cache=None` (default) leaves every code path and every
+accounting bucket bit-identical to the cache-less simulator.
+
 Stragglers: a `slow` fault sets `self.slowdown = σ`; each phase fixes
 the factor at its start (`phase_stretch`) and is charged the *stretch
 transform* (t, e) → (σ·t, e + (σ−1)·t·accel_static_w): the same work at
@@ -113,7 +130,7 @@ survives stretching exactly.
 from __future__ import annotations
 
 import dataclasses
-from collections import Counter, deque
+from collections import Counter, OrderedDict, deque
 
 from repro.core.energy_model import LLMProfile
 from repro.energy.costs import kv_bytes_per_token
@@ -162,6 +179,10 @@ class _InFlight:
     # ckpt_tokens (the durably persisted prefix) on a healthy node
     prefill_done: int | None = None
     ckpt_tokens: int = 0
+    # KV prefix-cache hit: how many of this request's τin tokens were
+    # served from the node's warm cache (its prefill charged only the
+    # uncached suffix); 0 for misses and non-session requests
+    cached_tokens: int = 0
 
     @property
     def remaining(self) -> int:
@@ -182,6 +203,50 @@ class Completion:
     preemptions: int = 0        # suspend/resume round-trips en route
     migrations: int = 0         # cross-node KV shipments en route
     shipped_bytes: float = 0.0  # KV bytes moved across the interconnect
+    cached_tokens: int = 0      # τin tokens served from the KV prefix cache
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Per-node KV prefix cache for multi-turn sessions: completed turns
+    leave their KV (prompt + generated answer) resident, keyed by
+    session_id, so the next turn's shared prefix prefills only the
+    uncached suffix — the exact closed-form difference
+    prefill_cost(τin) − prefill_cost(cached) at one pinned operating
+    point, the same telescoping contract checkpoint chunks and restores
+    use.  The warm prefix streams back from the cache as background DMA:
+    `read_bw` bytes/s (seconds outside the horizon partition, like
+    shipping/checkpoint) at `j_per_byte_read` joules per byte — the
+    eighth energy bucket (`cache_read`).  Capacity is `capacity_bytes`
+    of KV (entries sized via kv_bytes_per_token); eviction is LRU at
+    request-admission boundaries, entries with an in-flight pending hit
+    pinned.  A crash wipes the cache (KV dies with the node); gating
+    does not."""
+
+    capacity_bytes: float = 64e9
+    j_per_byte_read: float = 5.0e-11
+    read_bw: float = 64e9
+
+    def __post_init__(self):
+        if self.capacity_bytes <= 0:
+            raise ValueError(
+                f"capacity_bytes must be > 0, got {self.capacity_bytes}")
+        if self.j_per_byte_read < 0:
+            raise ValueError("j_per_byte_read must be >= 0")
+        if self.read_bw <= 0:
+            raise ValueError("read_bw must be > 0")
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    """One session's resident KV: `tokens` are valid (persisted by a
+    completed turn), `reserved` is the capacity held (the admitted
+    turn's full τin + τout), `pinned` counts in-flight pending hits
+    that protect the entry from eviction."""
+
+    tokens: int = 0
+    reserved: int = 0
+    pinned: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +295,7 @@ class ClusterNode:
         freq_scale: float = 1.0,   # fixed operating point when dvfs="off"
         telemetry=None,            # repro.obs.Telemetry (sim.py also sets it)
         checkpoint: CheckpointConfig | None = None,
+        prefix_cache: PrefixCacheConfig | None = None,
     ):
         if dvfs not in ("off", "per_phase"):
             raise ValueError(f"dvfs must be 'off' or 'per_phase', got {dvfs!r}")
@@ -242,10 +308,24 @@ class ClusterNode:
         self.freq_scale = freq_scale
         self.telemetry = telemetry
         self.checkpoint = checkpoint
+        self.prefix_cache = prefix_cache
         self.sim = AnalyticLLMSimulator(
             model_cfg, hardware, batch=1, kv_cache=kv_cache,
             noise_sigma=0.0, decode_chunk=decode_chunk)
         self.hardware = self.sim.node  # n_accel resolved to fit the weights
+
+        # KV prefix cache (None ⇒ every path below is untouched):
+        # session_id → _CacheEntry in LRU order (admission touches),
+        # capacity bookkept in reserved tokens (capacity_bytes /
+        # kv_bytes_per_token; a KV-free model caches unboundedly)
+        self._cache: OrderedDict[int, _CacheEntry] = OrderedDict()
+        self._cache_tokens = 0
+        self._pending_hits: dict[int, int] = {}   # request_id → hit tokens
+        self._cache_cap_tokens: int | None = None
+        if prefix_cache is not None:
+            kvb = kv_bytes_per_token(self.sim.cfg)
+            self._cache_cap_tokens = (
+                int(prefix_cache.capacity_bytes // kvb) if kvb > 0 else None)
 
         self.waiting: deque[TracedRequest] = deque()
         self.active: list[_InFlight] = []
@@ -306,6 +386,8 @@ class ClusterNode:
         self.wasted_energy_j = 0.0
         self.checkpoint_s = 0.0        # background DMA, like shipping_s
         self.checkpoint_energy_j = 0.0
+        self.cache_read_s = 0.0        # background DMA, like shipping_s
+        self.cache_read_energy_j = 0.0
         self.horizon_s = 0.0       # set by finalize()
         self.n_served = 0
         self.n_wakes = 0
@@ -318,6 +400,10 @@ class ClusterNode:
         self.n_migrations_out = 0
         self.n_checkpoints = 0         # member-boundary persists taken
         self.n_restores = 0            # suffix restore phases begun
+        self.n_cache_hits = 0          # warm-prefix admissions
+        self.n_cache_misses = 0        # cold session admissions
+        self.n_cache_evictions = 0     # LRU entry evictions (+ overflows)
+        self.cache_hit_tokens = 0      # Σ reused prefix tokens (reuse depth)
         self.freq_choices: Counter = Counter()   # (phase_kind, scale) -> count
 
     # ------------------------------------------------------------------
@@ -477,7 +563,7 @@ class ClusterNode:
         return (self.busy_energy_j + self.idle_energy_j
                 + self.gated_energy_j + self.transition_energy_j
                 + self.shipping_energy_j + self.checkpoint_energy_j
-                + self.wasted_energy_j)
+                + self.cache_read_energy_j + self.wasted_energy_j)
 
     @property
     def accounted_s(self) -> float:
@@ -496,6 +582,7 @@ class ClusterNode:
             raise RuntimeError(
                 f"request routed to failed node {self.node_id} — the sim "
                 f"loop must filter to accepting nodes")
+        self._cache_admit(req)
         self.waiting.append(req)
         if self._pstate == GATED:
             return (_WAKE, self.begin_wake(now))
@@ -597,6 +684,146 @@ class ClusterNode:
         self.freq_choices[("decode", s)] += 1
         return s, t, e
 
+    # --- KV prefix cache: admission, LRU eviction, invalidation ---------
+    def _cache_admit(self, req: TracedRequest) -> None:
+        """Request-admission boundary of the KV prefix cache: look the
+        session up (a warm entry grants a pending hit of
+        min(valid tokens, prefix_tokens) — clamped below τin so a suffix
+        always remains to prefill), touch its LRU position, and reserve
+        capacity for this turn's full context (τin + τout tokens, valid
+        once the turn completes here).  Reserving may LRU-evict unpinned
+        colder sessions; a turn too large to ever fit is simply not
+        cached (its own pending hit, if any, still serves — the pinned
+        entry survives at its old size until the hit lands)."""
+        cfg = self.prefix_cache
+        if cfg is None or req.session_id < 0:
+            return
+        key = req.session_id
+        entry = self._cache.get(key)
+        hit = 0
+        if entry is not None:
+            hit = min(entry.tokens, req.prefix_tokens, req.tau_in - 1)
+            self._cache.move_to_end(key)
+        if hit > 0:
+            self._pending_hits[req.request_id] = hit
+            entry.pinned += 1
+            self.n_cache_hits += 1
+            self.cache_hit_tokens += hit
+        else:
+            self.n_cache_misses += 1
+        if self.telemetry is not None:
+            self.telemetry.on_cache_lookup(self, req, hit)
+        new_reserved = req.tau_in + req.tau_out
+        held = entry.reserved if entry is not None else 0
+        cap = self._cache_cap_tokens
+        if cap is not None and new_reserved > held:
+            need = self._cache_tokens - held + new_reserved
+            if need > cap:
+                self._cache_evict_lru(need - cap, keep=key)
+            if self._cache_tokens - held + new_reserved > cap:
+                # no room even after evicting everything unpinned: drop
+                # the entry unless a pending hit still pins it
+                if entry is not None and entry.pinned == 0:
+                    self._cache_drop(key)
+                return
+        if entry is None:
+            self._cache[key] = _CacheEntry(tokens=0, reserved=new_reserved)
+            self._cache_tokens += new_reserved
+        elif new_reserved > entry.reserved:
+            self._cache_tokens += new_reserved - entry.reserved
+            entry.reserved = new_reserved
+
+    def _cache_drop(self, key: int) -> None:
+        entry = self._cache.pop(key)
+        self._cache_tokens -= entry.reserved
+        self.n_cache_evictions += 1
+        if self.telemetry is not None:
+            self.telemetry.on_cache_evict(self, key, entry.reserved)
+
+    def _cache_evict_lru(self, excess_tokens: int, *, keep: int) -> None:
+        """Evict unpinned entries in LRU order until `excess_tokens` of
+        reserved capacity are freed (or nothing evictable remains)."""
+        for key in list(self._cache.keys()):
+            if excess_tokens <= 0:
+                break
+            if key == keep:
+                continue
+            entry = self._cache[key]
+            if entry.pinned > 0:
+                continue
+            excess_tokens -= entry.reserved
+            self._cache_drop(key)
+
+    def _cache_invalidate(self, now: float) -> None:
+        """A crash kills every resident KV prefix: the cache empties and
+        all pending hits die with it (rescued requests re-admit — cold —
+        wherever the sim loop re-routes them)."""
+        if self.prefix_cache is None:
+            return
+        n = len(self._cache)
+        self._cache.clear()
+        self._cache_tokens = 0
+        self._pending_hits.clear()
+        if n and self.telemetry is not None:
+            self.telemetry.on_cache_invalidate(self, n, now)
+
+    def _cache_commit(self, m: _InFlight) -> None:
+        """A session turn completed here: its KV (prompt + answer) is now
+        resident, so mark the entry's valid-token high-water mark — up to
+        the capacity actually reserved at admission.  LRU order is
+        untouched (only admissions rank recency)."""
+        if self.prefix_cache is None or m.req.session_id < 0:
+            return
+        entry = self._cache.get(m.req.session_id)
+        if entry is not None:
+            entry.tokens = max(entry.tokens,
+                               min(m.req.tau_in + m.generated, entry.reserved))
+
+    def _start_cached_prefill(self, req: TracedRequest, now: float) -> float:
+        """Batch-1 joiner prefill over a warm KV prefix: charge only the
+        uncached suffix — the closed-form difference prefill_cost(τin) −
+        prefill_cost(cached) at one pinned operating point, the exact
+        telescoping identity restores use — plus the closed-form
+        cache-read term for streaming the warm prefix back (background
+        DMA: seconds outside the horizon partition, joules into the
+        eighth bucket).  Runs unchunked even under a CheckpointConfig
+        (the suffix is one restore-like pass)."""
+        cfg = self.prefix_cache
+        cached = self._pending_hits.pop(req.request_id)
+        entry = self._cache.get(req.session_id)
+        if entry is not None and entry.pinned > 0:
+            entry.pinned -= 1
+        tau = req.tau_in
+        assert 0 < cached < tau, (cached, tau)
+        m = _InFlight(req, start_s=now, cached_tokens=cached)
+        if self.dvfs == "per_phase":
+            s, _, _ = self.sim.best_prefill_frequency(
+                tau, batch=1, extra_w=self.sim.host_power_w)
+        else:
+            s = self.freq_scale
+        self.freq_choices[("prefill", s)] += 1
+        t_full, e_full = self.sim.prefill_cost(tau, batch=1, freq_scale=s)
+        t_base, e_base = self.sim.prefill_cost(cached, batch=1, freq_scale=s)
+        t, e = self._stretched(t_full - t_base, e_full - e_base)
+        self._set_state(ACTIVE, now)
+        self._charge([m], t, e, kind="prefill", start_s=now, scale=s)
+        n_bytes = cached * kv_bytes_per_token(self.sim.cfg)
+        read_s = n_bytes / cfg.read_bw
+        read_j = n_bytes * cfg.j_per_byte_read
+        self.cache_read_s += read_s
+        self.cache_read_energy_j += read_j
+        self.active.append(m)
+        self._phase_members = [m]
+        self._phase_steps = 0
+        self._phase_kind = "prefill"
+        self._phase_start_s = now
+        self._phase_scale = s
+        self._phase_end_s = now + t
+        if self.telemetry is not None:
+            self.telemetry.on_cache_hit(self, tau, cached, n_bytes,
+                                        read_s, read_j, s)
+        return self._phase_end_s
+
     def _start_phase(self, now: float) -> float | None:
         """Pick the next phase; returns its end time (None if going idle).
 
@@ -625,6 +852,17 @@ class ClusterNode:
             slots -= len(resumed)
             self.n_resumes += len(resumed)
             self.active.extend(resumed)
+        if joiners and self._pending_hits:
+            # a warm-prefix joiner gets a dedicated batch-1 telescoped
+            # prefill (like a restore); the other joiners go back to the
+            # head of the queue, order intact, for the next phase start
+            i = next((i for i, r in enumerate(joiners)
+                      if r.request_id in self._pending_hits), None)
+            if i is not None:
+                warm = joiners.pop(i)
+                for r in reversed(joiners):
+                    self.waiting.appendleft(r)
+                return self._start_cached_prefill(warm, now)
         if joiners:
             # (joiner) prefill for as many waiting requests as fit
             members = [_InFlight(r, start_s=now) for r in joiners]
@@ -713,6 +951,7 @@ class ClusterNode:
             self.active = [m for m in self.active if m.remaining > 0]
             for m in finished:
                 self.n_served += 1
+                self._cache_commit(m)
                 done.append(Completion(
                     req=m.req,
                     start_s=m.start_s,
@@ -723,6 +962,7 @@ class ClusterNode:
                     preemptions=m.preemptions,
                     migrations=m.migrations,
                     shipped_bytes=m.shipped_bytes,
+                    cached_tokens=m.cached_tokens,
                 ))
         self._phase_members = []
         self._phase_steps = 0
@@ -1061,6 +1301,7 @@ class ClusterNode:
         self._clear_chunk_state()
         self._restore_member = None
         self._restore_charge = 0.0
+        self._cache_invalidate(now)
         self._phase_epoch += 1
         self._crash_pending = False
         self._set_state(FAILED, now)

@@ -58,8 +58,10 @@ import numpy as np
 
 from repro.core.energy_model import LLMProfile, normalized_costs, objective_matrix
 from repro.core.scheduler import (
+    cached_costs,
     schedule,
     schedule_replicated,
+    schedule_with_cache,
     schedule_with_liveness,
 )
 from repro.core.sweep import IncrementalScheduler
@@ -524,6 +526,64 @@ class DomainSpreadPolicy(ZetaOnlinePolicy):
         return pick.node_id
 
 
+class SessionAffinityPolicy(ZetaOnlinePolicy):
+    """Session-sticky router: the causal Eq. 2 argmin with a warm-prefix
+    discount priced into the objective.
+
+    The policy remembers, per session, the last node it routed that
+    session to.  A follow-up turn carrying ``prefix_tokens`` re-used
+    context can only hit the KV prefix cache on *that* node (caches are
+    per-node and crash-volatile), so the remembered node's energy term is
+    discounted by the fraction of the prompt the cache would absorb:
+
+        obj(warm) −= ζ · affinity_weight · (prefix/τin) · ê_warm/ê_max
+
+    The discount is an *estimate* folded into the same normalization the
+    base argmin uses — the realized saving is whatever the node's cache
+    actually serves (it may have evicted the entry).  First turns, cold
+    sessions, and sessionless traffic score identically to zeta_online.
+    When the remembered node is absent from the candidate list or not
+    immediately serviceable (``power_rank != 0``: waking, gated, gating,
+    or failed), the discount is skipped entirely and the policy falls
+    back to the plain causal argmin — affinity never routes work into a
+    dead or sleeping node."""
+
+    name = "session_affinity"
+    fleet_reads = "counts"
+
+    def __init__(self, zeta: float | None = None, *,
+                 affinity_weight: float = 0.5,
+                 tau_out_predictor: TauOutPredictor | None = None):
+        if affinity_weight < 0:
+            raise ValueError("affinity_weight must be >= 0")
+        super().__init__(zeta, tau_out_predictor=tau_out_predictor)
+        self.affinity_weight = affinity_weight
+
+    def attach(self, nodes, trace, zeta):
+        super().attach(nodes, trace, zeta)
+        self._warm: dict[int, int] = {}
+
+    def select(self, req, nodes, now):
+        e, a = self._observe(req, nodes)
+        obj = self.zeta * e / self._e_max - (1.0 - self.zeta) * a / self._a_max
+        warm_node = (self._warm.get(req.session_id)
+                     if req.session_id >= 0 and req.prefix_tokens > 0
+                     else None)
+        if warm_node is not None:
+            frac = min(req.prefix_tokens / max(req.tau_in, 1), 1.0)
+            for i, n in enumerate(nodes):
+                if n.node_id == warm_node and n.power_rank == 0:
+                    obj[i] -= (self.zeta * self.affinity_weight * frac
+                               * e[i] / self._e_max)
+                    break
+        order = np.argsort(obj, kind="stable")
+        best = [nodes[i] for i in order if obj[i] <= obj[order[0]] + 1e-12]
+        pick = self._least_loaded(best)
+        if req.session_id >= 0:
+            self._warm[req.session_id] = pick
+        return pick
+
+
 class ReplicaOraclePolicy(OfflineOraclePolicy):
     """Replica-aware offline oracle: replays
     ``core.scheduler.schedule_replicated`` over the full trace, committing
@@ -784,6 +844,48 @@ class FailureAwareOraclePolicy(OfflineOraclePolicy):
         return True
 
 
+def realized_cache_hits(records) -> dict[int, int]:
+    """request_id → realized KV prefix-cache hit (warm tokens served) from
+    a completed run's ``ClusterReport.records`` — the hit sequence the
+    cache-aware oracle is conditioned on."""
+    return {r.request_id: r.cached_tokens
+            for r in records if r.cached_tokens > 0}
+
+
+class CacheAwareOraclePolicy(OfflineOraclePolicy):
+    """Offline oracle re-solved against a *realized* prefix-cache hit
+    sequence: the Eq. 2 per-query argmin over cost columns discounted by
+    each request's warm tokens (``core.scheduler.schedule_with_cache``).
+
+    The hit sequence comes from an already-completed run
+    (``realized_cache_hits(report.records)``) — the oracle is conditioned
+    on the cache behavior the online fleet actually exhibited, not on a
+    hypothetical best-case reuse.  Scoring the online assignment under
+    the *same* discounted matrix (``objective_of_assignment`` with
+    ``cached=``) makes the bound exact: the oracle's row-wise argmin is
+    ≤ any realized column choice, so oracle ≤ online holds per run by
+    construction — the inequality the fig4 ``--sessions`` cell asserts."""
+
+    name = "cache_oracle"
+
+    def __init__(self, cached: dict[int, int]):
+        super().__init__()
+        self.cached = dict(cached)
+
+    def attach(self, nodes, trace, zeta):
+        profiles = unique_profiles(nodes)
+        if not len(trace):
+            self._model_of = {}
+            return
+        cached_vec = np.array(
+            [self.cached.get(r.request_id, 0) for r in trace.requests],
+            dtype=np.int64)
+        asg = schedule_with_cache(profiles, trace.queries(), zeta, cached_vec)
+        self._model_of = {
+            r.request_id: asg.model_names[int(k)]
+            for r, k in zip(trace.requests, asg.assignee)}
+
+
 # ---------------------------------------------------------------------------
 # Preemption policies (consulted by the event loop at every arrival)
 # ---------------------------------------------------------------------------
@@ -932,11 +1034,21 @@ def objective_of_assignment(
     queries: Sequence[tuple[int, int]],
     model_names: Sequence[str],
     zeta: float,
+    *,
+    cached: Sequence[int] | np.ndarray | None = None,
 ) -> float:
     """Eq. 2 value of an arbitrary (online) assignment, on the same
     normalization the offline scheduler uses — the yardstick for the
-    offline→online gap."""
-    costs = normalized_costs(profiles, queries)
+    offline→online gap.
+
+    With ``cached=`` (a realized per-query warm-token sequence) the
+    assignment is scored under the cache-discounted cost matrix
+    (``core.scheduler.cached_costs``) — the same matrix the cache-aware
+    oracle minimizes over, which is what makes oracle ≤ online exact."""
+    if cached is None:
+        costs = normalized_costs(profiles, queries)
+    else:
+        costs = cached_costs(profiles, queries, np.asarray(cached))
     C = objective_matrix(costs, zeta)
     col = {name: j for j, name in enumerate(costs.model_names)}
     idx = np.array([col[m] for m in model_names], dtype=int)

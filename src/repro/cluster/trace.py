@@ -16,18 +16,29 @@ from repro.data.workloads import (
     Query,
     WorkloadSpec,
     arrival_times,
+    session_workload,
     timestamped_workload,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class TracedRequest:
-    """One streaming request: the offline Query plus an arrival time."""
+    """One streaming request: the offline Query plus an arrival time.
+
+    Session requests (from `session_trace`) additionally carry the
+    conversation metadata a KV prefix cache prices: `session_id` groups
+    the turns of one conversation, `turn` orders them, and
+    `prefix_tokens` counts how many of this turn's τin tokens re-submit
+    the previous context (always < τin).  Plain requests keep the
+    defaults (session_id = -1 ⇒ never cached)."""
 
     request_id: int
     arrival_s: float
     tau_in: int
     tau_out: int
+    session_id: int = -1
+    turn: int = 0
+    prefix_tokens: int = 0
 
     @property
     def query(self) -> Query:
@@ -132,3 +143,25 @@ def timestamped_trace(items: Sequence[tuple[float, Query]], *,
     times = [t for t, _ in items]
     queries = [q for _, q in items]
     return _build(name, times, queries)
+
+
+def session_trace(n_sessions: int, *, turns: int = 4, think_s: float = 20.0,
+                  rate_qps: float = 0.2, pattern: str = "poisson",
+                  spec: WorkloadSpec | None = None, seed: int = 0,
+                  name: str | None = None, **arrival_kw) -> ArrivalTrace:
+    """Multi-turn conversational arrivals: `n_sessions` seeded sessions of
+    `turns` turns each (shared-prefix growth, Exp(think_s) gaps between a
+    session's turns) with session starts shaped by any arrival `pattern`.
+    Each TracedRequest carries (session_id, turn, prefix_tokens) so nodes
+    with a KV prefix cache can price the warm prefix.  Same seed ⇒ the
+    identical stream — replayable like arrival and fault traces."""
+    items = session_workload(n_sessions, turns=turns, think_s=think_s,
+                             rate_qps=rate_qps, pattern=pattern,
+                             spec=spec if spec is not None else WorkloadSpec(),
+                             seed=seed, **arrival_kw)
+    reqs = tuple(
+        TracedRequest(i, float(t), int(q[0]), int(q[1]), session_id=int(sid),
+                      turn=int(turn), prefix_tokens=int(prefix))
+        for i, (t, q, (sid, turn, prefix)) in enumerate(items))
+    return ArrivalTrace(name=name or f"sessions@{rate_qps:g}x{turns}",
+                        requests=reqs)

@@ -206,6 +206,79 @@ def schedule_with_liveness(
     return _evaluate(costs, assignee, zeta, C=C)
 
 
+def cached_costs(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    cached: Sequence[int] | np.ndarray,
+) -> NormalizedCosts:
+    """Cost matrices conditioned on a realized KV prefix-cache hit
+    sequence: query i's energy and runtime under every model are
+    discounted by the profile-predicted cost of a prefill-only pass over
+    its `cached[i]` warm tokens — the same prefix-difference contract the
+    node charges (prefill(τin) − prefill(cached)), expressed through the
+    fitted profiles so the offline replay prices cached prefills the way
+    the online fleet did.  cached[i] == 0 leaves row i exactly unchanged;
+    discounts never drive a cost below zero.  Accuracy is untouched (the
+    cache changes where tokens come from, not what the model answers),
+    and ê is re-normalized over the discounted matrix."""
+    cached = np.asarray(cached, dtype=np.int64)
+    if cached.shape != (len(queries),):
+        raise ValueError(
+            f"cached must have one entry per query: shape {cached.shape} "
+            f"for {len(queries)} queries")
+    if (cached < 0).any():
+        raise ValueError("cached token counts must be >= 0")
+    tin = np.array([q[0] for q in queries], dtype=np.int64)
+    if (cached >= tin).any():
+        raise ValueError("cached token counts must be < tau_in (a suffix "
+                         "always remains to prefill)")
+    base = normalized_costs(profiles, queries)
+    if not cached.any():
+        return base
+    warm = cached > 0
+    tin_c = cached.astype(np.float64)
+    tout_c = np.zeros_like(tin_c)
+    e_disc = np.stack([p.energy(tin_c, tout_c) for p in profiles], axis=1)
+    r_disc = np.stack([p.runtime(tin_c, tout_c) for p in profiles], axis=1)
+    e_disc[~warm] = 0.0
+    r_disc[~warm] = 0.0
+    energy = np.maximum(base.energy - e_disc, 0.0)
+    runtime = np.maximum(base.runtime - r_disc, 0.0)
+    e_max = float(energy.max())
+    a_max = float(base.accuracy.max())
+    return NormalizedCosts(
+        model_names=base.model_names,
+        queries=base.queries,
+        energy=energy,
+        runtime=runtime,
+        accuracy=base.accuracy,
+        energy_hat=energy / e_max if e_max > 0 else energy,
+        accuracy_hat=(base.accuracy / a_max if a_max > 0
+                      else base.accuracy),
+    )
+
+
+def schedule_with_cache(
+    profiles: Sequence[LLMProfile],
+    queries: Sequence[Query],
+    zeta: float,
+    cached: Sequence[int] | np.ndarray,
+    *,
+    costs: NormalizedCosts | None = None,
+) -> Assignment:
+    """Cache-aware Eq. 2 optimum: per-query argmin over the cost columns
+    conditioned on the realized hit sequence (`cached_costs`).  The
+    oracle bound stays valid because the *online* assignment is scored
+    under the same discounted matrix (policies.objective_of_assignment
+    with cached=): the row-wise argmin is ≤ any realized column choice
+    by construction, whatever node the session-affinity router picked."""
+    if costs is None:
+        costs = cached_costs(profiles, queries, cached)
+    C = objective_matrix(costs, zeta)
+    assignee = C.argmin(axis=1)
+    return _evaluate(costs, assignee, zeta, C=C)
+
+
 # ---------------------------------------------------------------------------
 # Capacity-constrained (γ partition) scheduler
 # ---------------------------------------------------------------------------

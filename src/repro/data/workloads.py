@@ -198,6 +198,74 @@ def fault_trace(
     return events
 
 
+def session_workload(
+    n_sessions: int,
+    *,
+    turns: int = 4,
+    think_s: float = 20.0,
+    rate_qps: float = 0.2,
+    pattern: str = "poisson",
+    spec: WorkloadSpec = WorkloadSpec(),
+    seed: int = 0,
+    **arrival_kw,
+) -> list[tuple[float, Query, tuple[int, int, int]]]:
+    """Seeded multi-turn conversational sessions: the prefix-sharing
+    counterpart of `timestamped_workload` (and the third replayable
+    input class after arrival and fault traces).
+
+    Each of the `n_sessions` sessions opens at a time drawn from the
+    usual arrival processes (`pattern` + `rate_qps` over session starts,
+    so sessions compose with Poisson/bursty/diurnal/onoff shaping) and
+    runs `turns` turns.  Turn 0 is an ordinary Alpaca-like query.  Every
+    later turn re-submits the full previous context — prompt plus the
+    model's answer — as a *shared prefix* and appends a fresh
+    Alpaca-like user input:
+
+        τin(k) = prefix(k) + fresh(k),
+        prefix(k) = min(τin(k−1) + τout(k−1), max_in − fresh(k)),
+
+    (the min truncates histories that outgrow the model's `max_in`
+    context window — the truncated tail is still reported as shared so
+    prefix < τin always holds and a KV prefix cache can price the hit).
+    Think-time gaps between a session's turns are Exp(`think_s`).
+
+    Returns time-sorted (arrival_s, (τin, τout), (session_id, turn,
+    prefix_tokens)) triples; ties break by (session, turn).  The same
+    seed always replays the identical stream — session traces are
+    first-class replayable inputs, like arrival and fault traces.
+    """
+    if n_sessions <= 0:
+        raise ValueError(f"n_sessions must be >= 1, got {n_sessions}")
+    if turns < 1:
+        raise ValueError(f"turns must be >= 1, got {turns}")
+    if think_s <= 0:
+        raise ValueError(f"think_s must be > 0, got {think_s}")
+    starts = arrival_times(n_sessions, rate_qps, pattern=pattern,
+                           seed=seed + 1, **arrival_kw)
+    rng = np.random.default_rng(seed)
+    items: list[tuple[float, Query, tuple[int, int, int]]] = []
+    for sid in range(n_sessions):
+        fresh = np.exp(rng.normal(spec.in_log_mean, spec.in_log_sigma, turns))
+        fresh = np.clip(fresh, spec.min_tokens, spec.max_in).astype(int)
+        touts = np.exp(rng.normal(spec.out_log_mean, spec.out_log_sigma,
+                                  turns))
+        touts = np.clip(touts, spec.min_tokens, spec.max_out).astype(int)
+        gaps = rng.exponential(think_s, turns)   # gaps[0] unused: fixed draw
+        t = float(starts[sid])
+        prefix = 0
+        for k in range(turns):
+            if k > 0:
+                t += float(gaps[k])
+                prefix = min(prefix, spec.max_in - int(fresh[k]))
+                prefix = max(prefix, 0)
+            tau_in = prefix + int(fresh[k])
+            tau_out = int(touts[k])
+            items.append((t, (tau_in, tau_out), (sid, k, prefix)))
+            prefix = tau_in + tau_out
+    items.sort(key=lambda it: (it[0], it[2][0], it[2][1]))
+    return items
+
+
 def timestamped_workload(
     spec: WorkloadSpec = WorkloadSpec(),
     *,

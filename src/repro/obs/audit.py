@@ -42,7 +42,13 @@ checks):
     == bytes / ckpt_bw; joules == bytes · j_per_byte_ckpt, all on the
     node's CheckpointConfig and meter), and every restore phase's
     charge must equal the telescoping suffix prefill_cost(τin) −
-    prefill_cost(ckpt) under the phase's stretch transform.
+    prefill_cost(ckpt) under the phase's stretch transform;
+  * cache_read bucket — every warm-prefix hit must charge the
+    telescoping suffix prefill_cost(τin) − prefill_cost(cached) at
+    batch 1 (the same identity restores use) and its cache-read term
+    must follow the closed form (bytes == cached · kv_bytes_per_token;
+    seconds == bytes / read_bw; joules == bytes · j_per_byte_read, all
+    on the node's PrefixCacheConfig and meter).
 
 `on_finalize` re-checks the fleet-level books (per-request attributed
 energy == Σ busy buckets; horizon == accounted seconds including FAILED
@@ -82,6 +88,8 @@ class InvariantAuditor:
         self._ship_e: dict[int, float] = {}
         self._ckpt_t: dict[int, float] = {}
         self._ckpt_e: dict[int, float] = {}
+        self._cache_t: dict[int, float] = {}
+        self._cache_e: dict[int, float] = {}
         self._last_settle: dict[int, tuple[str, float, float, float]] = {}
         self._context: deque = deque(maxlen=context_events)
         # per-node power constants (idle_w, gated_w, transition_w, wake_j,
@@ -350,6 +358,65 @@ class InvariantAuditor:
                 f"prefill_cost({tau_in}) − prefill_cost({base}) at "
                 f"stretch {sigma!r} gives (t={ts!r}, e={e_total!r})")
 
+    def on_cache_hit(self, node, tau_in: int, cached: int, n_bytes: float,
+                     read_s: float, read_j: float, scale: float) -> None:
+        """Audit a warm-prefix batch-1 prefill (fired at phase start,
+        right after the charge settled): the suffix charge must equal the
+        telescoping difference prefill_cost(τin) − prefill_cost(cached)
+        under the phase's stretch — the restore identity, applied to a
+        cache hit — and the cache-read term must follow its closed form
+        on the node's PrefixCacheConfig and meters."""
+        from repro.energy.costs import kv_bytes_per_token
+
+        nid = node.node_id
+        self.note(("cache-hit", nid, "tau", tau_in, "cached", cached,
+                   "bytes", n_bytes, "s", read_s, "j", read_j,
+                   "scale", scale))
+        self.n_checks += 1
+        last = self._last_settle.get(nid)
+        if last is None or last[0] != "prefill":
+            self._fail(f"cache-hit prefill began on node {nid} without a "
+                       f"settled prefill charge (last settle: {last!r})")
+        _, _, t_charged, e_charged = last
+        if not 0 < cached < tau_in:
+            self._fail(f"cache hit on node {nid} outside (0, τin): "
+                       f"{cached} of {tau_in}")
+        t1, e1 = node.sim.prefill_cost(cached, batch=1, freq_scale=scale)
+        t2, e2 = node.sim.prefill_cost(tau_in, batch=1, freq_scale=scale)
+        sigma = node.phase_stretch
+        ts = sigma * (t2 - t1)
+        es = (e2 - e1) + (sigma - 1.0) * (t2 - t1) * node.accel_static_w
+        e_total = es + node.sim.host_power_w * ts
+        if not (self._close(t_charged, ts)
+                and self._close(e_charged, e_total)):
+            self._fail(
+                f"cache-hit charge off the telescoping suffix on node "
+                f"{nid}: settled (t={t_charged!r}, e={e_charged!r}) but "
+                f"prefill_cost({tau_in}) − prefill_cost({cached}) at "
+                f"stretch {sigma!r} gives (t={ts!r}, e={e_total!r})")
+        expect_bytes = cached * kv_bytes_per_token(node.sim.cfg)
+        if not self._close(n_bytes, expect_bytes):
+            self._fail(f"cache-read size off closed form on node {nid}: "
+                       f"{n_bytes!r} B for {cached} tokens but "
+                       f"kv_bytes_per_token gives {expect_bytes!r} B")
+        pc = node.prefix_cache
+        if not self._close(read_s, n_bytes / pc.read_bw):
+            self._fail(f"cache-read time off closed form on node {nid}: "
+                       f"{read_s!r} s for {n_bytes!r} B over "
+                       f"{pc.read_bw!r} B/s")
+        if not self._close(read_j, n_bytes * pc.j_per_byte_read):
+            self._fail(f"cache-read energy off closed form on node {nid}: "
+                       f"{read_j!r} J for {n_bytes!r} B at "
+                       f"{pc.j_per_byte_read!r} J/B")
+        self._cache_t[nid] = ct = self._cache_t.get(nid, 0.0) + read_s
+        self._cache_e[nid] = ce = self._cache_e.get(nid, 0.0) + read_j
+        if not (self._close(ct, node.cache_read_s)
+                and self._close(ce, node.cache_read_energy_j)):
+            self._fail(f"cache-read-meter drift on node {nid}: audited "
+                       f"(t={ct!r}, e={ce!r}) but node books "
+                       f"(t={node.cache_read_s!r}, "
+                       f"e={node.cache_read_energy_j!r})")
+
     # --- end-of-run checks --------------------------------------------
     def on_finalize(self, nodes, report) -> None:
         """Close the audit: fleet-level conservation against the report."""
@@ -394,3 +461,13 @@ class InvariantAuditor:
             self._fail(f"fleet checkpoint seconds {ckpt_s!r} do not "
                        f"match the audited persistence stream "
                        f"{sum(self._ckpt_t.values())!r} s")
+        cache = sum(s.cache_read_energy_j for s in report.node_stats)
+        if not self._close(cache, sum(self._cache_e.values())):
+            self._fail(f"fleet cache_read bucket {cache!r} J does not "
+                       f"match the audited hit stream "
+                       f"{sum(self._cache_e.values())!r} J")
+        cache_s = sum(s.cache_read_s for s in report.node_stats)
+        if not self._close(cache_s, sum(self._cache_t.values())):
+            self._fail(f"fleet cache_read seconds {cache_s!r} do not "
+                       f"match the audited hit stream "
+                       f"{sum(self._cache_t.values())!r} s")

@@ -113,6 +113,22 @@ class Telemetry:
         self._domain_outages = r.counter(
             "sim_domain_outages_total",
             "correlated fault batches (simultaneous crash groups)", ())
+        self._cache_hits = r.counter(
+            "sim_cache_hits_total",
+            "KV prefix-cache hits at request admission", ("node",))
+        self._cache_misses = r.counter(
+            "sim_cache_misses_total",
+            "KV prefix-cache misses at request admission "
+            "(session requests only)", ("node",))
+        self._cache_evictions = r.counter(
+            "sim_cache_evictions_total",
+            "LRU prefix-cache entry evictions", ("node",))
+        self._cache_hit_tokens = r.counter(
+            "sim_cache_hit_tokens_total",
+            "warm prefix tokens reused (reuse depth)", ("node",))
+        self._cache_invalidations = r.counter(
+            "sim_cache_invalidations_total",
+            "crash wipes of a node's resident prefix cache", ("node",))
         # gauges — live fleet state + end-of-run snapshot
         self._queue_depth = r.gauge(
             "sim_queue_depth", "waiting requests per node", ("node",))
@@ -299,6 +315,46 @@ class Telemetry:
         if self.auditor is not None:
             self.auditor.on_restore(node, tau_in, base, scale)
 
+    # --- prefix-cache hooks (called by repro.cluster.node) --------------
+    def on_cache_lookup(self, node, req, hit_tokens: int) -> None:
+        """A session request hit the admission boundary: `hit_tokens` of
+        its shared prefix were warm (0 ⇒ miss)."""
+        if hit_tokens > 0:
+            self._lazy(self._cache_hits, node.node_id).inc()
+            self._lazy(self._cache_hit_tokens,
+                       node.node_id).inc(hit_tokens)
+        else:
+            self._lazy(self._cache_misses, node.node_id).inc()
+
+    def on_cache_hit(self, node, tau_in: int, cached: int, n_bytes: float,
+                     read_s: float, read_j: float, scale: float) -> None:
+        """A warm-prefix batch-1 prefill began (fired at phase start,
+        right after the charge lands, like on_restore): the suffix charge
+        and the closed-form cache-read term are both auditable here."""
+        if self.tracer is not None:
+            self.tracer.instant("cache_hit", node.phase_end_s or 0.0,
+                                node.node_id + 1, "cache",
+                                ("tau_in", tau_in, "cached", cached,
+                                 "bytes", n_bytes, "energy_j", read_j))
+        if self.auditor is not None:
+            self.auditor.on_cache_hit(node, tau_in, cached, n_bytes,
+                                      read_s, read_j, scale)
+
+    def on_cache_evict(self, node, session_id: int,
+                       reserved_tokens: int) -> None:
+        self._lazy(self._cache_evictions, node.node_id).inc()
+        if self.tracer is not None:
+            self.tracer.instant("cache_evict", node.phase_end_s or 0.0,
+                                node.node_id + 1, "cache",
+                                ("session", session_id,
+                                 "tokens", reserved_tokens))
+
+    def on_cache_invalidate(self, node, n_entries: int, now: float) -> None:
+        self._lazy(self._cache_invalidations, node.node_id).inc()
+        if self.tracer is not None:
+            self.tracer.instant("cache_invalidate", now, node.node_id + 1,
+                                "cache", ("entries", n_entries))
+
     # --- fault/rescue hooks (called by repro.cluster.sim) ---------------
     def on_fault(self, event, node, now: float) -> None:
         self._lazy(self._faults, event.node_id, event.kind).inc()
@@ -378,6 +434,7 @@ class Telemetry:
                     ("transition", n.transition_energy_j, n.transition_s),
                     ("shipping", n.shipping_energy_j, n.shipping_s),
                     ("checkpoint", n.checkpoint_energy_j, n.checkpoint_s),
+                    ("cache_read", n.cache_read_energy_j, n.cache_read_s),
                     ("wasted", n.wasted_energy_j, None),
                     ("failed", None, n.failed_s)):
                 if e_j is not None:
@@ -423,6 +480,14 @@ class Telemetry:
                      "prefill-KV checkpoint persists per node", ("node",))
         rs = r.gauge("sim_node_restores",
                      "restore phases begun per node", ("node",))
+        chh = r.gauge("sim_node_cache_hits",
+                      "prefix-cache hits per node", ("node",))
+        chm = r.gauge("sim_node_cache_misses",
+                      "prefix-cache misses per node", ("node",))
+        che = r.gauge("sim_node_cache_evictions",
+                      "prefix-cache evictions per node", ("node",))
+        cht = r.gauge("sim_node_cache_hit_tokens",
+                      "reused warm prefix tokens per node", ("node",))
         for s in report.node_stats:
             served.labels(s.node_id, s.model).set(s.n_served)
             util.labels(s.node_id, s.model).set(s.utilization)
@@ -437,6 +502,10 @@ class Telemetry:
             mo.labels(s.node_id).set(s.n_migrations_out)
             ck.labels(s.node_id).set(s.n_checkpoints)
             rs.labels(s.node_id).set(s.n_restores)
+            chh.labels(s.node_id).set(s.n_cache_hits)
+            chm.labels(s.node_id).set(s.n_cache_misses)
+            che.labels(s.node_id).set(s.n_cache_evictions)
+            cht.labels(s.node_id).set(s.cache_hit_tokens)
         if self.auditor is not None:
             self.auditor.on_finalize(nodes, report)
 

@@ -577,58 +577,87 @@ class TestCrashOnSettleBoundary:
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
-class TestConservationProperties:
+def fault_storm_conserves(fault_seed, arrival_seed, mttf):
+    trace = poisson_trace(25, 5.0, seed=arrival_seed)
+    faults = FaultInjector(
+        mttf_s=mttf, mttr_s=mttf / 2.0, straggle_mttf_s=mttf,
+        slowdown_range=(1.5, 3.0), seed=fault_seed,
+    ).generate([0, 1, 2], 15.0)
+    rep = simulate_cluster(
+        trace, make_nodes(("llama2-7b", "llama2-7b", "llama2-13b")),
+        FailoverPolicy(ZetaOnlinePolicy(), max_retries=3,
+                       base_delay_s=0.5),
+        zeta=0.5, faults=faults,
+        telemetry=Telemetry(auditor=InvariantAuditor()))
+    assert len(rep.records) + len(rep.abandoned) == len(trace)
+    assert seven_bucket_residual(rep) <= 1e-9
+    attributed = sum(r.energy_j for r in rep.records)
+    busy = sum(s.busy_energy_j for s in rep.node_stats)
+    assert attributed == pytest.approx(busy, rel=1e-9, abs=1e-9)
 
-    def test_random_fault_storms_conserve(self):
-        from hypothesis import given, settings, strategies as st
 
-        @settings(max_examples=8, deadline=None)
-        @given(fault_seed=st.integers(0, 1_000_000),
-               arrival_seed=st.integers(0, 1_000_000),
-               mttf=st.floats(2.0, 30.0))
-        def check(fault_seed, arrival_seed, mttf):
-            trace = poisson_trace(25, 5.0, seed=arrival_seed)
-            faults = FaultInjector(
-                mttf_s=mttf, mttr_s=mttf / 2.0, straggle_mttf_s=mttf,
-                slowdown_range=(1.5, 3.0), seed=fault_seed,
-            ).generate([0, 1, 2], 15.0)
-            rep = simulate_cluster(
-                trace, make_nodes(("llama2-7b", "llama2-7b", "llama2-13b")),
-                FailoverPolicy(ZetaOnlinePolicy(), max_retries=3,
-                               base_delay_s=0.5),
-                zeta=0.5, faults=faults,
-                telemetry=Telemetry(auditor=InvariantAuditor()))
-            assert len(rep.records) + len(rep.abandoned) == len(trace)
-            assert seven_bucket_residual(rep) <= 1e-9
-            attributed = sum(r.energy_j for r in rep.records)
-            busy = sum(s.busy_energy_j for s in rep.node_stats)
-            assert attributed == pytest.approx(busy, rel=1e-9, abs=1e-9)
+def down_intervals_round_trip(seed, mttf, mttr, probe):
+    evs = fault_trace(2, 400.0, mttf_s=mttf, mttr_s=mttr, seed=seed)
+    tr = FaultTrace("rt", tuple(FaultEvent(*e) for e in evs))
+    for nid in (0, 1):
+        ivals = tr.down_intervals(nid)
+        # round trip 1: every interval interior is down, the open
+        # right edge is up again
+        for s, e in ivals:
+            assert tr.is_down(nid, s)
+            if e != math.inf:
+                assert tr.is_down(nid, (s + e) / 2.0)
+                assert not tr.is_down(nid, e)
+        # round trip 2: an arbitrary probe agrees with the scan
+        assert tr.is_down(nid, probe) == any(
+            s <= probe < e for s, e in ivals)
 
-        check()
 
-    def test_down_intervals_is_down_round_trip(self):
-        from hypothesis import given, settings, strategies as st
+class TestSeededConservation:
+    """Unconditional fallback for the hypothesis properties below: the
+    same checks over a seeded corner sweep, so conservation under fault
+    storms is exercised on every tier-1 pass."""
 
-        @settings(max_examples=25, deadline=None)
-        @given(seed=st.integers(0, 1_000_000),
-               mttf=st.floats(1.0, 50.0),
-               mttr=st.floats(0.5, 80.0),
-               probe=st.floats(0.0, 500.0))
-        def check(seed, mttf, mttr, probe):
-            evs = fault_trace(2, 400.0, mttf_s=mttf, mttr_s=mttr, seed=seed)
-            tr = FaultTrace("rt", tuple(FaultEvent(*e) for e in evs))
-            for nid in (0, 1):
-                ivals = tr.down_intervals(nid)
-                # round trip 1: every interval interior is down, the open
-                # right edge is up again
-                for s, e in ivals:
-                    assert tr.is_down(nid, s)
-                    if e != math.inf:
-                        assert tr.is_down(nid, (s + e) / 2.0)
-                        assert not tr.is_down(nid, e)
-                # round trip 2: an arbitrary probe agrees with the scan
-                assert tr.is_down(nid, probe) == any(
-                    s <= probe < e for s, e in ivals)
+    def test_seeded_fault_storms_conserve(self):
+        for fault_seed, arrival_seed, mttf in [
+            (0, 0, 2.0), (11, 47, 30.0), (123456, 654321, 7.5),
+            (86, 5, 3.3),
+        ]:
+            fault_storm_conserves(fault_seed, arrival_seed, mttf)
 
-        check()
+    def test_seeded_down_intervals_round_trip(self):
+        for seed, mttf, mttr, probe in [
+            (0, 1.0, 0.5, 0.0), (9, 50.0, 80.0, 500.0),
+            (777, 12.0, 4.0, 123.4), (31, 3.0, 60.0, 7.7),
+        ]:
+            down_intervals_round_trip(seed, mttf, mttr, probe)
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestConservationProperties:
+
+        def test_random_fault_storms_conserve(self):
+            from hypothesis import given, settings, strategies as st
+
+            @settings(max_examples=8, deadline=None)
+            @given(fault_seed=st.integers(0, 1_000_000),
+                   arrival_seed=st.integers(0, 1_000_000),
+                   mttf=st.floats(2.0, 30.0))
+            def check(fault_seed, arrival_seed, mttf):
+                fault_storm_conserves(fault_seed, arrival_seed, mttf)
+
+            check()
+
+        def test_down_intervals_is_down_round_trip(self):
+            from hypothesis import given, settings, strategies as st
+
+            @settings(max_examples=25, deadline=None)
+            @given(seed=st.integers(0, 1_000_000),
+                   mttf=st.floats(1.0, 50.0),
+                   mttr=st.floats(0.5, 80.0),
+                   probe=st.floats(0.0, 500.0))
+            def check(seed, mttf, mttr, probe):
+                down_intervals_round_trip(seed, mttf, mttr, probe)
+
+            check()

@@ -1,0 +1,633 @@
+"""Multi-turn session workloads + the per-node KV prefix cache.
+
+Pins the PR's contracts:
+
+  * seeded session traces replay byte-identically, prefix growth follows
+    the documented recurrence, and prefix < τin always holds;
+  * a warm turn's suffix prefill is charged the exact telescoping
+    difference prefill_cost(τin) − prefill_cost(cached), plus a
+    closed-form cache-read DMA term (the eighth `cache_read` bucket);
+  * LRU eviction at admission boundaries honors capacity and pins, a
+    crash invalidates the whole cache, and the eight buckets still
+    partition total energy under eviction + preemption + crash storms;
+  * `prefix_cache=None` (the default) is byte-identical to the
+    pre-cache simulator — report JSON, Prometheus text, event stream —
+    at any shard count, and sessionless traffic never touches a cache;
+  * SessionAffinityPolicy steers warm turns back to the warm node and
+    falls back cleanly when that node fails;
+  * the cache-aware oracle bound (oracle ≤ online on the realized hit
+    sequence, both scored under the same discounted matrix) holds;
+  * a golden seeded session replay matches its committed fixture.
+
+Property tests run under hypothesis when installed; seeded fallbacks
+always run (PR 9 pattern) so the contracts are exercised on every
+tier-1 pass.
+"""
+
+import importlib.util
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ArrivalTrace,
+    CacheAwareOraclePolicy,
+    ClusterNode,
+    FaultEvent,
+    FaultInjector,
+    FaultTrace,
+    LeastLoadedPolicy,
+    OfflineOraclePolicy,
+    PrefixCacheConfig,
+    SLOPreemptionPolicy,
+    SessionAffinityPolicy,
+    TracedRequest,
+    ZetaOnlinePolicy,
+    objective_of_assignment,
+    poisson_trace,
+    realized_cache_hits,
+    session_trace,
+    simulate_cluster,
+)
+from repro.cluster.engine import Runner
+from repro.cluster.faults import CRASH, RECOVER
+from repro.cluster.policies import unique_profiles
+from repro.configs import PAPER_ZOO, TABLE1
+from repro.core.energy_model import fit_profile
+from repro.core.scheduler import cached_costs, schedule_with_cache
+from repro.data.workloads import WorkloadSpec, session_workload
+from repro.energy import AnalyticLLMSimulator, SWING_NODE, kv_bytes_per_token
+from repro.obs import EventTracer, InvariantAuditor, Telemetry
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_session_report.json"
+
+
+def make_profile(name):
+    sim = AnalyticLLMSimulator(PAPER_ZOO[name], SWING_NODE, batch=1,
+                               kv_cache=True, noise_sigma=0.0)
+    pts = [(8, 8), (64, 64), (256, 128), (512, 512), (128, 32)]
+    pbs = [sim.simulate(a, b) for a, b in pts]
+    return fit_profile(name, TABLE1[name]["a_k"],
+                       [p[0] for p in pts], [p[1] for p in pts],
+                       [pb.energy_j for pb in pbs],
+                       [pb.runtime_s for pb in pbs])
+
+
+PROFILES = {name: make_profile(name) for name in ("llama2-7b", "llama2-13b")}
+
+
+def make_nodes(names=("llama2-7b", "llama2-13b"), max_batch=2, **kw):
+    return [ClusterNode(i, PAPER_ZOO[n], PROFILES[n], SWING_NODE,
+                        max_batch=max_batch, **kw)
+            for i, n in enumerate(names)]
+
+
+def manual_session(turns):
+    """An ArrivalTrace built turn by turn: (t, τin, τout, sid, prefix)."""
+    reqs = tuple(TracedRequest(i, float(t), tin, tout, session_id=sid,
+                               turn=k, prefix_tokens=pre)
+                 for i, (t, tin, tout, sid, k, pre) in enumerate(turns))
+    return ArrivalTrace(name="manual", requests=reqs)
+
+
+def eight_bucket_residual(report):
+    worst = 0.0
+    for s in report.node_stats:
+        total = (s.busy_energy_j + s.idle_energy_j + s.gated_energy_j
+                 + s.transition_energy_j + s.shipping_energy_j
+                 + s.checkpoint_energy_j + s.wasted_energy_j
+                 + s.cache_read_energy_j)
+        worst = max(worst, abs(total - s.total_energy_j)
+                    / max(1.0, s.total_energy_j))
+        worst = max(worst, abs(s.accounted_s - s.horizon_s)
+                    / max(1.0, s.horizon_s))
+    return worst
+
+
+def assert_conserves(rep):
+    assert eight_bucket_residual(rep) <= 1e-9
+    attributed = sum(r.energy_j for r in rep.records)
+    busy = sum(s.busy_energy_j for s in rep.node_stats)
+    assert attributed == pytest.approx(busy, rel=1e-9, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# generator
+# ---------------------------------------------------------------------------
+
+
+class TestSessionWorkloadGenerator:
+
+    def test_seeded_replay_is_identical(self):
+        kw = dict(turns=5, think_s=8.0, rate_qps=0.7, seed=21)
+        assert session_workload(6, **kw) == session_workload(6, **kw)
+        assert session_workload(6, **kw) != session_workload(
+            6, turns=5, think_s=8.0, rate_qps=0.7, seed=22)
+
+    def test_prefix_recurrence_and_bounds(self):
+        spec = WorkloadSpec()
+        items = session_workload(8, turns=6, think_s=5.0, seed=3, spec=spec)
+        assert len(items) == 48
+        times = [t for t, _, _ in items]
+        assert times == sorted(times)
+        by_sid: dict = {}
+        for t, (tin, tout), (sid, turn, prefix) in items:
+            by_sid.setdefault(sid, []).append((turn, t, tin, tout, prefix))
+        for sid, rows in by_sid.items():
+            rows.sort()
+            assert [r[0] for r in rows] == list(range(6))
+            prev_ctx = 0
+            prev_t = -1.0
+            for turn, t, tin, tout, prefix in rows:
+                assert t > prev_t           # think gaps strictly advance
+                assert 0 <= prefix < tin    # a fresh suffix always remains
+                assert tin <= spec.max_in   # context window respected
+                if turn == 0:
+                    assert prefix == 0
+                else:
+                    # full history, truncated only by the context window
+                    # (fresh = tin − prefix is the turn's new user input)
+                    assert prefix == max(
+                        0, min(prev_ctx, spec.max_in - (tin - prefix)))
+                prev_ctx = tin + tout
+                prev_t = t
+
+    def test_single_turn_sessions_have_no_prefix(self):
+        items = session_workload(10, turns=1, seed=5)
+        assert all(pre == 0 and turn == 0
+                   for _, _, (_, turn, pre) in items)
+
+    def test_arrival_pattern_composes(self):
+        a = session_workload(12, turns=2, seed=4, pattern="poisson")
+        b = session_workload(12, turns=2, seed=4, pattern="bursty",
+                             burstiness=6.0)
+        assert a != b and len(a) == len(b) == 24
+
+    def test_rejects_bad_args(self):
+        with pytest.raises(ValueError):
+            session_workload(0)
+        with pytest.raises(ValueError):
+            session_workload(2, turns=0)
+        with pytest.raises(ValueError):
+            session_workload(2, think_s=0.0)
+
+    def test_trace_wrapper_carries_session_fields(self):
+        tr = session_trace(5, turns=3, seed=9)
+        assert len(tr) == 15
+        assert tr.name == "sessions@0.2x3"
+        ids = [r.request_id for r in tr.requests]
+        assert ids == sorted(ids)
+        for r in tr.requests:
+            assert r.session_id >= 0 and 0 <= r.prefix_tokens < r.tau_in
+        assert any(r.prefix_tokens > 0 for r in tr.requests)
+
+
+# ---------------------------------------------------------------------------
+# cache config + semantics
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixCacheConfig:
+
+    def test_defaults_valid(self):
+        cfg = PrefixCacheConfig()
+        assert cfg.capacity_bytes > 0 and cfg.read_bw > 0
+
+    def test_rejects_bad_args(self):
+        with pytest.raises(ValueError):
+            PrefixCacheConfig(capacity_bytes=0.0)
+        with pytest.raises(ValueError):
+            PrefixCacheConfig(j_per_byte_read=-1e-12)
+        with pytest.raises(ValueError):
+            PrefixCacheConfig(read_bw=0.0)
+
+
+class TestCacheSemantics:
+
+    def two_turn(self, **node_kw):
+        """One session, two far-apart turns, single node: turn 1's prefix
+        is exactly turn 0's full context."""
+        trace = manual_session([
+            (0.0, 64, 16, 0, 0, 0),
+            (100.0, 64 + 16 + 32, 16, 0, 1, 64 + 16),
+        ])
+        nodes = make_nodes(("llama2-7b",), **node_kw)
+        tel = Telemetry(auditor=InvariantAuditor())
+        rep = simulate_cluster(trace, nodes, LeastLoadedPolicy(),
+                               telemetry=tel)
+        return rep, nodes[0]
+
+    def test_warm_turn_charges_exact_suffix(self):
+        rep, node = self.two_turn(prefix_cache=PrefixCacheConfig())
+        assert rep.total_cache_hits == 1
+        assert rep.total_cache_misses == 1
+        assert rep.total_cache_hit_tokens == 80
+        assert rep.cache_hit_rate == 0.5
+        warm = next(r for r in rep.records if r.tau_in == 112)
+        assert warm.cached_tokens == 80
+        # charged busy energy = telescoped suffix prefill + full decode
+        sim = node.sim
+        t2, e2 = sim.prefill_cost(112, batch=1, freq_scale=1.0)
+        t1, e1 = sim.prefill_cost(80, batch=1, freq_scale=1.0)
+        td, ed = sim.decode_cost(112, 16, batch=1, freq_scale=1.0)
+        host = sim.host_power_w * ((t2 - t1) + td)
+        assert warm.energy_j == pytest.approx((e2 - e1) + ed + host,
+                                              rel=1e-9)
+
+    def test_cache_read_closed_form(self):
+        pc = PrefixCacheConfig(read_bw=32e9, j_per_byte_read=7e-11)
+        rep, node = self.two_turn(prefix_cache=pc)
+        n_bytes = 80 * kv_bytes_per_token(node.sim.cfg)
+        assert rep.total_cache_read_energy_j == pytest.approx(
+            n_bytes * 7e-11, rel=1e-12)
+        assert node.cache_read_s == pytest.approx(n_bytes / 32e9, rel=1e-12)
+        assert rep.energy_breakdown()["cache_read"] \
+            == rep.total_cache_read_energy_j
+        assert_conserves(rep)
+
+    def test_cache_off_no_counters(self):
+        rep, _ = self.two_turn()
+        assert rep.total_cache_hits == 0
+        assert rep.total_cache_misses == 0
+        assert rep.total_cache_read_energy_j == 0.0
+        assert rep.cache_hit_rate == 0.0
+        assert all(r.cached_tokens == 0 for r in rep.records)
+
+    def test_sessionless_requests_never_cached(self):
+        trace = poisson_trace(20, 4.0, seed=7)
+        rep = simulate_cluster(trace, make_nodes(
+            prefix_cache=PrefixCacheConfig()), ZetaOnlinePolicy(), zeta=0.5)
+        assert rep.total_cache_hits == 0 and rep.total_cache_misses == 0
+
+    def test_lru_eviction_under_tight_capacity(self):
+        kvb = kv_bytes_per_token(PAPER_ZOO["llama2-7b"])
+        # room for one 80-token session reservation, not two
+        tight = PrefixCacheConfig(capacity_bytes=100 * kvb)
+        trace = manual_session([
+            (0.0, 64, 16, 0, 0, 0),
+            (10.0, 64, 16, 1, 0, 0),
+            (100.0, 112, 16, 0, 1, 80),
+            (110.0, 112, 16, 1, 1, 80),
+        ])
+        rep = simulate_cluster(trace, make_nodes(("llama2-7b",),
+                                                 prefix_cache=tight),
+                               LeastLoadedPolicy())
+        # each admission evicts the other session: every turn misses
+        assert rep.total_cache_evictions >= 2
+        assert rep.total_cache_hits == 0
+        assert rep.total_cache_misses == 4
+        # control: ample capacity serves both follow-ups warm
+        rep2 = simulate_cluster(trace, make_nodes(
+            ("llama2-7b",), prefix_cache=PrefixCacheConfig()),
+            LeastLoadedPolicy())
+        assert rep2.total_cache_hits == 2
+        assert rep2.total_cache_evictions == 0
+
+    def test_unlimited_capacity_for_kv_free_models(self):
+        # kv_bytes_per_token == 0 (no KV growth) would divide by zero;
+        # the node must treat capacity as unlimited instead
+        kvb = kv_bytes_per_token(PAPER_ZOO["llama2-7b"])
+        assert kvb > 0   # the guard is exercised via _cache_cap_tokens
+        node = make_nodes(("llama2-7b",),
+                          prefix_cache=PrefixCacheConfig())[0]
+        assert node._cache_cap_tokens == int(
+            PrefixCacheConfig().capacity_bytes // kvb)
+
+    def test_crash_invalidates_cache(self):
+        trace = manual_session([
+            (0.0, 64, 16, 0, 0, 0),
+            (100.0, 112, 16, 0, 1, 80),
+            (200.0, 144, 16, 0, 2, 128),
+        ])
+        faults = FaultTrace("wipe", (FaultEvent(50.0, 0, CRASH),
+                                     FaultEvent(60.0, 0, RECOVER)))
+        rep = simulate_cluster(trace, make_nodes(
+            ("llama2-7b",), prefix_cache=PrefixCacheConfig()),
+            LeastLoadedPolicy(), faults=faults,
+            telemetry=Telemetry(auditor=InvariantAuditor()))
+        # turn 1 lost its warm prefix to the crash; turn 2 hits turn 1's
+        assert rep.total_cache_hits == 1
+        assert rep.total_cache_misses == 2
+        assert len(rep.records) == 3
+        assert_conserves(rep)
+
+
+# ---------------------------------------------------------------------------
+# differential pin: default-off byte identity, any shard count
+# ---------------------------------------------------------------------------
+
+
+class TestDifferentialPin:
+
+    def artifacts(self, trace, *, cache=None, shard_count=1,
+                  with_stream=True):
+        stream = []
+        tel = Telemetry(tracer=EventTracer(), auditor=InvariantAuditor(),
+                        sample_every_s=2.0)
+        rep = Runner(
+            trace, make_nodes(prefix_cache=cache),
+            SessionAffinityPolicy(), zeta=0.5,
+            preempter=SLOPreemptionPolicy(slowdown_slo=1.2, min_remaining=2),
+            telemetry=tel, shard_count=shard_count,
+            stream=stream.append if with_stream else None,
+        ).run()
+        return (json.dumps(rep.to_dict(include_records=True),
+                           sort_keys=True),
+                tel.prometheus_text(), tel.tracer.to_json(),
+                "\n".join(ev.describe() for ev in stream))
+
+    def test_cache_off_identical_across_shards(self):
+        trace = session_trace(12, turns=4, think_s=6.0, rate_qps=1.0,
+                              seed=17)
+        base = self.artifacts(trace)
+        assert base[3].count("\n") > 20   # the stream really ran
+        assert self.artifacts(trace, shard_count=4) == base
+
+    def test_cache_on_identical_across_shards(self):
+        trace = session_trace(12, turns=4, think_s=6.0, rate_qps=1.0,
+                              seed=17)
+        base = self.artifacts(trace, cache=PrefixCacheConfig())
+        assert self.artifacts(trace, cache=PrefixCacheConfig(),
+                              shard_count=4) == base
+
+    def test_cache_is_inert_for_sessionless_traffic(self):
+        # a fleet with caches serving sessionless traffic is byte-
+        # identical to a cache-free fleet: the feature is default-off
+        # even when enabled, absent session traffic
+        trace = poisson_trace(40, 5.0, seed=23)
+        assert self.artifacts(trace, cache=PrefixCacheConfig()) \
+            == self.artifacts(trace)
+
+    def test_telemetry_is_a_pure_observer_with_cache(self):
+        trace = session_trace(10, turns=3, think_s=6.0, rate_qps=1.0,
+                              seed=31)
+        with_tel = json.loads(self.artifacts(
+            trace, cache=PrefixCacheConfig())[0])
+        bare = simulate_cluster(
+            trace, make_nodes(prefix_cache=PrefixCacheConfig()),
+            SessionAffinityPolicy(), zeta=0.5,
+            preempter=SLOPreemptionPolicy(slowdown_slo=1.2,
+                                          min_remaining=2))
+        assert bare.to_dict(include_records=True) == with_tel
+
+
+# ---------------------------------------------------------------------------
+# session-affinity routing
+# ---------------------------------------------------------------------------
+
+
+class TestSessionAffinityPolicy:
+
+    def test_rejects_bad_weight(self):
+        with pytest.raises(ValueError):
+            SessionAffinityPolicy(affinity_weight=-0.1)
+
+    def test_warm_turns_stick_to_the_warm_node(self):
+        trace = session_trace(8, turns=5, think_s=10.0, rate_qps=0.5,
+                              seed=11)
+        nodes = make_nodes(("llama2-7b", "llama2-7b", "llama2-7b"),
+                           prefix_cache=PrefixCacheConfig())
+        rep = simulate_cluster(trace, nodes, SessionAffinityPolicy(),
+                               zeta=0.5)
+        home: dict = {}
+        sticky = total = 0
+        by_id = {r.request_id: r for r in rep.records}
+        for req in trace.requests:
+            rec = by_id[req.request_id]
+            if req.turn > 0 and req.prefix_tokens > 0:
+                total += 1
+                sticky += rec.node_id == home.get(req.session_id)
+            home[req.session_id] = rec.node_id
+        assert total > 0 and sticky / total >= 0.9
+        assert rep.cache_hit_rate > 0.5
+
+    def test_sessionless_reduces_to_zeta_online(self):
+        trace = poisson_trace(40, 5.0, seed=13)
+        nodes_a = make_nodes()
+        nodes_b = make_nodes()
+        a = simulate_cluster(trace, nodes_a, SessionAffinityPolicy(),
+                             zeta=0.5).to_dict(include_records=True)
+        b = simulate_cluster(trace, nodes_b, ZetaOnlinePolicy(),
+                             zeta=0.5).to_dict(include_records=True)
+        assert a.pop("policy") == "session_affinity"
+        assert b.pop("policy") == "zeta_online"
+        assert a == b   # every routing decision identical
+
+    def test_falls_back_when_warm_node_fails(self):
+        trace = manual_session([
+            (0.0, 64, 16, 0, 0, 0),
+            (100.0, 112, 16, 0, 1, 80),
+        ])
+        # the warm node (whichever served turn 0) is down across turn 1
+        nodes = make_nodes(("llama2-7b", "llama2-7b"),
+                           prefix_cache=PrefixCacheConfig())
+        warm_probe = simulate_cluster(
+            trace, nodes, SessionAffinityPolicy(), zeta=0.5)
+        first = next(r for r in warm_probe.records
+                     if r.tau_in == 64).node_id
+        faults = FaultTrace("down", (FaultEvent(50.0, first, CRASH),
+                                     FaultEvent(150.0, first, RECOVER)))
+        rep = simulate_cluster(
+            trace, make_nodes(("llama2-7b", "llama2-7b"),
+                              prefix_cache=PrefixCacheConfig()),
+            SessionAffinityPolicy(), zeta=0.5, faults=faults,
+            telemetry=Telemetry(auditor=InvariantAuditor()))
+        assert len(rep.records) == 2 and not rep.abandoned
+        warm = next(r for r in rep.records if r.tau_in == 112)
+        assert warm.node_id != first      # routed around the dead node
+        assert warm.cached_tokens == 0    # cold there, by construction
+        assert_conserves(rep)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware oracle bound
+# ---------------------------------------------------------------------------
+
+
+class TestCacheAwareOracle:
+
+    def run_online(self, trace, nodes):
+        return simulate_cluster(trace, nodes, SessionAffinityPolicy(),
+                                zeta=0.5)
+
+    def test_cached_costs_validation(self):
+        profiles = [PROFILES["llama2-7b"]]
+        queries = [(64, 16), (32, 8)]
+        with pytest.raises(ValueError):
+            cached_costs(profiles, queries, [1])          # wrong length
+        with pytest.raises(ValueError):
+            cached_costs(profiles, queries, [-1, 0])      # negative
+        with pytest.raises(ValueError):
+            cached_costs(profiles, queries, [64, 0])      # >= tau_in
+
+    def test_zero_hits_degenerate_to_plain_oracle(self):
+        trace = session_trace(6, turns=3, think_s=8.0, seed=5)
+        profiles = [PROFILES[n] for n in ("llama2-7b", "llama2-13b")]
+        zeros = np.zeros(len(trace), dtype=np.int64)
+        asg = schedule_with_cache(profiles, trace.queries(), 0.5, zeros)
+        from repro.core.scheduler import schedule
+        base = schedule(profiles, trace.queries(), 0.5,
+                        enforce_nonempty=False)
+        assert list(asg.assignee) == list(base.assignee)
+        pol = CacheAwareOraclePolicy({})
+        pol.attach(make_nodes(), trace, 0.5)
+        ref = OfflineOraclePolicy()
+        ref.attach(make_nodes(), trace, 0.5)
+        assert pol._model_of == ref._model_of
+
+    def test_realized_hits_filter(self):
+        trace = session_trace(6, turns=4, think_s=8.0, seed=5)
+        rep = self.run_online(trace, make_nodes(
+            prefix_cache=PrefixCacheConfig()))
+        cached = realized_cache_hits(rep.records)
+        assert cached and all(v > 0 for v in cached.values())
+        assert len(cached) == rep.total_cache_hits
+
+    def test_oracle_bound_holds_on_realized_hits(self):
+        trace = session_trace(10, turns=5, think_s=8.0, rate_qps=0.5,
+                              seed=29)
+        profiles = [PROFILES[n] for n in ("llama2-7b", "llama2-13b")]
+        online = self.run_online(trace, make_nodes(
+            prefix_cache=PrefixCacheConfig()))
+        cached = realized_cache_hits(online.records)
+        assert cached    # the run really produced hits
+        cvec = [cached.get(r.request_id, 0) for r in trace.requests]
+        model_of = {r.request_id: r.model for r in online.records}
+        online_obj = objective_of_assignment(
+            profiles, trace.queries(),
+            [model_of[r.request_id] for r in trace.requests], 0.5,
+            cached=cvec)
+        orep = simulate_cluster(
+            trace, make_nodes(prefix_cache=PrefixCacheConfig()),
+            CacheAwareOraclePolicy(cached), zeta=0.5)
+        omodel = {r.request_id: r.model for r in orep.records}
+        oracle_obj = objective_of_assignment(
+            profiles, trace.queries(),
+            [omodel[r.request_id] for r in trace.requests], 0.5,
+            cached=cvec)
+        assert oracle_obj <= online_obj + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# golden seeded replay
+# ---------------------------------------------------------------------------
+
+
+def golden_run():
+    trace = session_trace(8, turns=5, think_s=12.0, rate_qps=0.4, seed=42)
+    nodes = make_nodes(("llama2-7b", "llama2-13b", "llama2-7b",
+                        "llama2-13b"), prefix_cache=PrefixCacheConfig())
+    return simulate_cluster(trace, nodes, SessionAffinityPolicy(),
+                            zeta=0.5,
+                            telemetry=Telemetry(auditor=InvariantAuditor()))
+
+
+class TestGoldenSessionReplay:
+
+    def test_matches_committed_fixture(self):
+        rep = golden_run()
+        got = rep.to_dict(include_records=True)
+        want = json.loads(GOLDEN.read_text())
+        assert got["total_cache_hits"] == want["total_cache_hits"]
+        assert got["cache_hit_rate"] == pytest.approx(
+            want["cache_hit_rate"], rel=1e-12)
+        assert json.dumps(got, sort_keys=True) \
+            == json.dumps(want, sort_keys=True)
+
+    def test_fixture_is_a_real_session_run(self):
+        want = json.loads(GOLDEN.read_text())
+        assert want["total_cache_hits"] > 0
+        assert want["total_cache_misses"] > 0
+        assert want["total_cache_hit_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# properties: telescoping + conservation (seeded fallback always runs)
+# ---------------------------------------------------------------------------
+
+
+def telescoping_identity(model, tin, frac, scale):
+    """prefill(split) + [prefill(τin) − prefill(split)] == prefill(τin)
+    to 1e-9 relative, at any pinned operating point — the identity the
+    warm suffix charge relies on."""
+    sim = AnalyticLLMSimulator(PAPER_ZOO[model], SWING_NODE, batch=1,
+                               kv_cache=True, noise_sigma=0.0)
+    split = max(1, min(int(tin * frac), tin - 1))
+    t2, e2 = sim.prefill_cost(tin, batch=1, freq_scale=scale)
+    t1, e1 = sim.prefill_cost(split, batch=1, freq_scale=scale)
+    ts, es = sim.prefill_cost(tin, batch=1, freq_scale=scale)
+    assert t1 + (t2 - t1) == pytest.approx(ts, rel=1e-9)
+    assert e1 + (e2 - e1) == pytest.approx(es, rel=1e-9)
+    assert t2 > t1 and e2 > e1   # the suffix charge is strictly positive
+
+
+def session_storm_conserves(seed, n_sessions, turns, rate, tight,
+                            with_faults):
+    """Randomized session traffic with cache (+ optional tight capacity
+    forcing evictions), preemption, and crash faults interleaved: every
+    turn is served or abandoned, the eight buckets partition energy, and
+    the auditor's live telescoping/closed-form checks pass."""
+    kvb = kv_bytes_per_token(PAPER_ZOO["llama2-7b"])
+    pc = (PrefixCacheConfig(capacity_bytes=600 * kvb) if tight
+          else PrefixCacheConfig())
+    trace = session_trace(n_sessions, turns=turns, think_s=4.0,
+                          rate_qps=rate, seed=seed)
+    nodes = make_nodes(("llama2-7b", "llama2-7b", "llama2-13b"),
+                       prefix_cache=pc)
+    faults = None
+    if with_faults:
+        faults = FaultInjector(mttf_s=20.0, mttr_s=5.0,
+                               seed=seed + 1).generate(
+            [0, 1, 2], trace.duration_s)
+    rep = simulate_cluster(
+        trace, nodes, SessionAffinityPolicy(), zeta=0.5,
+        preempter=SLOPreemptionPolicy(slowdown_slo=1.5, min_remaining=1),
+        faults=faults,
+        telemetry=Telemetry(auditor=InvariantAuditor()))
+    assert len(rep.records) + len(rep.abandoned) == len(trace)
+    assert_conserves(rep)
+    assert rep.total_cache_hits + rep.total_cache_misses > 0
+
+
+def test_seeded_telescoping_identity():
+    for model, tin, frac, scale in [
+        ("llama2-7b", 8, 0.5, 1.0),
+        ("llama2-7b", 4096, 0.99, 0.6),
+        ("llama2-13b", 977, 0.13, 0.8),
+        ("llama2-13b", 2, 0.5, 1.0),
+        ("llama2-7b", 333, 0.66, 0.7),
+    ]:
+        telescoping_identity(model, tin, frac, scale)
+
+
+def test_seeded_session_storms_conserve():
+    for seed, ns, turns, rate, tight, faulty in [
+        (0, 6, 4, 0.8, False, False),
+        (1, 8, 6, 1.5, True, False),
+        (2, 5, 5, 1.0, False, True),
+        (3, 7, 3, 2.0, True, True),
+    ]:
+        session_storm_conserves(seed, ns, turns, rate, tight, faulty)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(model=st.sampled_from(("llama2-7b", "llama2-13b")),
+           tin=st.integers(2, 4096), frac=st.floats(0.01, 0.99),
+           scale=st.sampled_from((0.6, 0.7, 0.8, 1.0)))
+    def test_split_prefill_telescopes(model, tin, frac, scale):
+        telescoping_identity(model, tin, frac, scale)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), ns=st.integers(3, 10),
+           turns=st.integers(2, 6), rate=st.floats(0.3, 2.5),
+           tight=st.booleans(), faulty=st.booleans())
+    def test_session_storms_conserve(seed, ns, turns, rate, tight, faulty):
+        session_storm_conserves(seed, ns, turns, rate, tight, faulty)
